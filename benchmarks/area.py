@@ -1,0 +1,14 @@
+"""Fig. 9 (right) + Fig. 10c — area and area efficiency."""
+from repro.core import costmodel as cm
+
+
+def rows():
+    out = [("dartpim_area_mm2", round(sum(cm.AREA_MM2.values()), 0),
+            "paper=8170 (crossbars 96.9%)")]
+    for comp, a in cm.AREA_MM2.items():
+        out.append((f"area_{comp}_mm2", a, ""))
+    for mr, tag in ((12.5e3, "12.5k"), (25e3, "25k"), (50e3, "50k")):
+        est = cm.dart_pim_system(max_reads=mr)
+        out.append((f"area_eff_{tag}", round(est.area_eff, 0),
+                    "paper: 1086 (12.5k) .. 273 (50k) reads/mm^2/s"))
+    return out

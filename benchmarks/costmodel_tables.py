@@ -1,0 +1,18 @@
+"""Paper Table I / Table IV / Sec. IV-B reproduction (analytic cost model)."""
+from repro.core import costmodel as cm
+
+
+def rows():
+    lin = cm.linear_wf_cycles()
+    aff = cm.affine_wf_cycles()
+    out = [
+        ("tableIV_linear_magic_cycles", lin["magic_cycles"], 254_585),
+        ("tableIV_linear_total_cycles", lin["total_cycles"], 258_620),
+        ("tableIV_linear_energy_nJ", round(lin["energy_J"] * 1e9, 2), 45.9),
+        ("tableIV_affine_total_cycles", aff["total_cycles"], 1_308_699),
+        ("tableIV_affine_energy_nJ", round(aff["energy_J"] * 1e9, 1), 229),
+        ("alg1_ops_per_cell_b3", cm.linear_wf_cell_ops_closed(3), 130),
+        ("secIVB_sw_vs_wf_latency", round(cm.sw_vs_wf_latency_ratio(), 2),
+         2.8),
+    ]
+    return [(name, value, f"paper={ref}") for name, value, ref in out]

@@ -1,0 +1,17 @@
+"""Fig. 9 (middle) + Fig. 10b — energy/power breakdown."""
+from repro.core import costmodel as cm
+
+
+def rows():
+    out = []
+    for mr, tag in ((12.5e3, "12.5k"), (25e3, "25k"), (50e3, "50k")):
+        est = cm.dart_pim_system(max_reads=mr)
+        out.append((f"dartpim_{tag}_energy_kJ", round(est.energy_J / 1e3, 1),
+                    f"avg_power={est.avg_power_W:.0f}W "
+                    f"(paper: 20.8..34.9kJ, 201..482W)"))
+    st = cm.speedup_table(25e3)
+    for name, v in st.items():
+        out.append((f"energy_eff_vs_{name}", round(v["energy_eff"], 1),
+                    "paper: minimap2/parabricks=90.6x genasm=3.6x "
+                    "segram=20.7x"))
+    return out

@@ -1,0 +1,91 @@
+"""Render EXPERIMENTS.md tables from reports/dryrun.json + roofline model.
+
+    PYTHONPATH=src:. python benchmarks/make_experiments.py > /tmp/tables.md
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import ARCHS, SHAPES  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+
+REPORT = os.path.join(os.path.dirname(__file__), "..", "reports",
+                      "dryrun.json")
+MESHES = {"16x16": {"data": 16, "model": 16},
+          "2x16x16": {"pod": 2, "data": 16, "model": 16}}
+
+
+def n_micro_for(shape, data_shards):
+    if shape.kind != "train":
+        return 1
+    tokens = shape.global_batch * shape.seq_len // data_shards
+    m = max(1, tokens // 4096)
+    while shape.global_batch % m or (shape.global_batch // m) % 16:
+        m -= 1
+    return max(m, 1)
+
+
+def fmt_s(x):
+    if x >= 0.1:
+        return f"{x:.2f}s"
+    if x >= 1e-4:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def main():
+    with open(REPORT) as f:
+        dry = json.load(f)
+
+    print("### Dry-run table (compile status, per-device memory)\n")
+    print("| arch | shape | 16x16 | 2x16x16 | temp/dev | args/dev | "
+          "compile | #colls |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for sname in SHAPES:
+            r1 = dry.get(f"{arch}|{sname}|16x16", {})
+            r2 = dry.get(f"{arch}|{sname}|2x16x16", {})
+            if r1.get("status") == "SKIP":
+                print(f"| {arch} | {sname} | SKIP | SKIP | — | — | — | — |"
+                      f" <!-- {r1.get('reason','')[:60]} -->")
+                continue
+            pd = r1.get("per_device", {})
+            print(f"| {arch} | {sname} | {r1.get('status','?')} | "
+                  f"{r2.get('status','?')} | "
+                  f"{pd.get('temp_bytes',0)/2**30:.2f} GiB | "
+                  f"{(pd.get('argument_bytes',0)+pd.get('alias_bytes',0))/2**30:.2f} GiB | "
+                  f"{r1.get('compile_s','?')}s | "
+                  f"{r1.get('n_collectives','?')} |")
+
+    print("\n### Roofline table (16x16; per-device, per step)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "useful/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    mesh = MESHES["16x16"]
+    for arch, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            rec = dry.get(f"{arch}|{sname}|16x16", {})
+            if rec.get("status") == "SKIP":
+                continue
+            r = rl.cell_roofline(cfg, shape, mesh,
+                                 n_micro=n_micro_for(shape, 16))
+            print(f"| {arch} | {sname} | {fmt_s(r.compute_s)} | "
+                  f"{fmt_s(r.memory_s)} | {fmt_s(r.collective_s)} | "
+                  f"**{r.dominant}** | {r.useful_ratio:.2f} | "
+                  f"{r.roofline_fraction:.3f} |")
+
+    print("\n### Perf-variant cells (hillclimb log source)\n")
+    print("| key | temp/dev | link bytes/dev | #colls | flops/dev |")
+    print("|---|---|---|---|---|")
+    for k, v in sorted(dry.items()):
+        if k.count("|") >= 3 and v.get("status") == "OK":
+            pd = v["per_device"]
+            print(f"| {k} | {pd['temp_bytes']/2**30:.2f} GiB | "
+                  f"{pd['link_bytes']/2**30:.3f} GiB | "
+                  f"{v['n_collectives']} | {pd['flops']:.3g} |")
+
+
+if __name__ == "__main__":
+    main()

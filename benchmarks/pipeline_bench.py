@@ -1,0 +1,36 @@
+"""End-to-end mapping pipeline wall time on CPU (jnp path) + full-system
+iteration counts feeding Eq. 6 (the full-system-simulator analog)."""
+import time
+
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core.index import build_index, minimizer_frequencies
+from repro.core.pipeline import map_reads
+from repro.data.genome import make_reference, sample_reads
+
+
+def rows():
+    ref = make_reference(30_000, seed=0, repeat_frac=0.03)
+    idx = build_index(ref)
+    rs = sample_reads(ref, 128, seed=2)
+    map_reads(idx, rs.reads)  # compile
+    t0 = time.perf_counter()
+    res = map_reads(idx, rs.reads)
+    dt = time.perf_counter() - t0
+
+    # full-system simulation: reads/PLs per minimizer -> Eq. 6 iteration
+    # counts -> DP-memory execution time at DART-PIM scale
+    freqs = minimizer_frequencies(idx)
+    # synthetic read load per minimizer proportional to its PL count
+    read_load = freqs * float(len(rs.reads)) / max(freqs.sum(), 1)
+    k_l, k_a, j_l, j_a = cm.full_system_simulation(read_load * 1000, freqs)
+    t_dp = (k_l * cm.linear_wf_cycles()["total_cycles"]
+            + k_a * cm.affine_wf_cycles()["total_cycles"]) * cm.T_CLK
+    return [
+        ("pipeline_cpu_128reads_ms", round(dt * 1e3, 1),
+         f"{len(rs.reads)/dt:.0f} reads/s CPU-jnp; "
+         f"mapped={res.mapped.mean():.3f}"),
+        ("fullsys_eq6_dpmem_s", round(t_dp, 4),
+         f"K_L={k_l:.0f} K_A={k_a:.0f} J_L={j_l:.3g} J_A={j_a:.3g}"),
+    ]

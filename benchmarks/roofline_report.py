@@ -1,0 +1,75 @@
+"""Roofline table from reports/dryrun.json + the analytic model.
+
+Produces the EXPERIMENTS.md §Roofline rows: three terms, dominant
+bottleneck, MODEL_FLOPS/HLO ratio, per (arch x shape x mesh).
+"""
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch import roofline as rl
+
+REPORT = os.path.join(os.path.dirname(__file__), "..", "reports",
+                      "dryrun.json")
+
+MESHES = {"16x16": {"data": 16, "model": 16},
+          "2x16x16": {"pod": 2, "data": 16, "model": 16}}
+
+
+def n_micro_for(shape, data_shards=16):
+    if shape.kind != "train":
+        return 1
+    tokens = shape.global_batch * shape.seq_len // data_shards
+    m = max(1, tokens // 4096)
+    while shape.global_batch % m:
+        m -= 1
+    return m
+
+
+def table(mesh_tag="16x16"):
+    try:
+        with open(REPORT) as f:
+            dry = json.load(f)
+    except FileNotFoundError:
+        dry = {}
+    mesh = MESHES[mesh_tag]
+    rows = []
+    for arch, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            key = f"{arch}|{sname}|{mesh_tag}"
+            rec = dry.get(key, {})
+            if rec.get("status") == "SKIP":
+                rows.append({"arch": arch, "shape": sname, "status": "SKIP",
+                             "reason": rec.get("reason", "")})
+                continue
+            r = rl.cell_roofline(cfg, shape, mesh,
+                                 n_micro=n_micro_for(shape))
+            rows.append({
+                "arch": arch, "shape": sname,
+                "status": rec.get("status", "PENDING"),
+                "compute_s": r.compute_s, "memory_s": r.memory_s,
+                "collective_s": r.collective_s, "dominant": r.dominant,
+                "useful_ratio": r.useful_ratio,
+                "roofline_fraction": r.roofline_fraction,
+                "temp_gib": (rec.get("per_device", {}).get("temp_bytes", 0)
+                             / 2 ** 30),
+                "hlo_flops_flat": rec.get("per_device", {}).get("flops", 0),
+                "n_collectives": rec.get("n_collectives", 0),
+            })
+    return rows
+
+
+def rows():
+    out = []
+    for r in table("16x16"):
+        if r["status"] == "SKIP":
+            out.append((f"roofline_{r['arch']}_{r['shape']}", 0,
+                        f"SKIP({r['reason'][:40]})"))
+        else:
+            out.append((
+                f"roofline_{r['arch']}_{r['shape']}",
+                round(r["roofline_fraction"], 3),
+                f"dom={r['dominant']} c={r['compute_s']:.3g}s "
+                f"m={r['memory_s']:.3g}s x={r['collective_s']:.3g}s "
+                f"useful={r['useful_ratio']:.2f} {r['status']}"))
+    return out

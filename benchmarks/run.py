@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV (value is us_per_call for timed rows,
+the modelled/papers' metric otherwise).
+"""
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (accuracy, area, costmodel_tables, energy,
+                            pipeline_bench, roofline_report, throughput,
+                            wf_kernel_bench, wf_roofline)
+    modules = [
+        ("costmodel_tables", costmodel_tables),
+        ("throughput", throughput),
+        ("energy", energy),
+        ("area", area),
+        ("accuracy", accuracy),
+        ("wf_kernel_bench", wf_kernel_bench),
+        ("wf_roofline", wf_roofline),
+        ("pipeline_bench", pipeline_bench),
+        ("roofline", roofline_report),
+    ]
+    print("name,value,derived")
+    for name, mod in modules:
+        t0 = time.perf_counter()
+        try:
+            for row in mod.rows():
+                n, v, d = row
+                print(f"{n},{v},{str(d).replace(',', ';')}")
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

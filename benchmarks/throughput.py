@@ -1,0 +1,16 @@
+"""Fig. 9 (left) — end-to-end throughput vs. the five baselines."""
+from repro.core import costmodel as cm
+
+
+def rows():
+    out = []
+    for mr, tag in ((12.5e3, "12.5k"), (25e3, "25k"), (50e3, "50k")):
+        est = cm.dart_pim_system(max_reads=mr)
+        out.append((f"dartpim_{tag}_exec_s", round(est.exec_time_s, 1),
+                    f"throughput={est.throughput_reads_s:.3g}reads/s"))
+    st = cm.speedup_table(25e3)
+    for name, v in st.items():
+        out.append((f"speedup_vs_{name}", round(v["speedup"], 1),
+                    "paper: minimap2=227x parabricks=5.7x genasm=334x "
+                    "segram=257x"))
+    return out

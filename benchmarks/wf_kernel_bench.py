@@ -1,0 +1,56 @@
+"""WF kernel micro-benchmarks: measured CPU (jnp reference path) wall time +
+derived TPU projections from the roofline byte/op model.
+
+On this CPU container the Pallas kernels run in interpret mode (correctness
+only), so wall-clock here times the pure-jnp batched reference; the
+``derived`` column reports the TPU-side projection used in EXPERIMENTS.md
+(int8 VPU ops at 4 ops/byte-lane, 197 TFLOP/s bf16 chip -> ~49 Tint8op/s
+effective on the VPU 8x128 lanes).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.affine_wf import banded_affine
+from repro.core.linear_wf import banded_wf
+
+VPU_INT8_OPS = 49e12  # conservative: 1/4 of bf16 MXU peak as scalar int8 VPU
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def rows():
+    rng = np.random.default_rng(0)
+    R, n, eth = 1024, 150, 6
+    s1 = jnp.asarray(rng.integers(0, 4, (R, n)), jnp.uint8)
+    s2 = jnp.asarray(rng.integers(0, 4, (R, n + 2 * eth)), jnp.uint8)
+
+    t_lin = _time(jax.jit(lambda a, b: banded_wf(a, b, eth=eth)), s1, s2)
+    t_aff = _time(jax.jit(lambda a, b: banded_affine(a, b, eth=eth, sat=32)),
+                  s1, s2)
+
+    # TPU projection: ops per instance ~= rows x band x ~12 int8 VPU ops
+    ops_lin = n * (2 * eth + 1) * 12
+    ops_aff = n * (2 * eth + 1) * 40
+    tpu_lin_inst_s = ops_lin / VPU_INT8_OPS * 1.5  # 1.5x scheduling slack
+    tpu_aff_inst_s = ops_aff / VPU_INT8_OPS * 1.5
+    return [
+        ("linear_wf_cpu_batch1024", round(t_lin * 1e6, 1),
+         f"cpu_inst_us={t_lin/R*1e6:.2f}"),
+        ("affine_wf_cpu_batch1024", round(t_aff * 1e6, 1),
+         f"cpu_inst_us={t_aff/R*1e6:.2f}"),
+        ("linear_wf_tpu_proj_inst_ns", round(tpu_lin_inst_s * 1e9, 2),
+         f"~{1/tpu_lin_inst_s:.3g} inst/s/core (DART-PIM xbar: "
+         "258620cyc*2ns=517us/inst, x8M xbars)"),
+        ("affine_wf_tpu_proj_inst_ns", round(tpu_aff_inst_s * 1e9, 2),
+         f"~{1/tpu_aff_inst_s:.3g} inst/s/core"),
+    ]

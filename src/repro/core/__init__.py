@@ -1,0 +1,5 @@
+"""DART-PIM core: the paper's contribution as composable JAX modules."""
+from . import (affine_wf, costmodel, distributed, encoding, filtering, index,
+               linear_wf, minimizers, pipeline, seeding)  # noqa: F401
+from .index import GenomeIndex, build_index  # noqa: F401
+from .pipeline import MapperConfig, MappingResult, map_reads  # noqa: F401

@@ -1,0 +1,328 @@
+"""Affine Wagner-Fischer with traceback (paper Sec. III-B, Eqs. 3-5).
+
+Three banded matrices: D (edit distance), M1 (vertical gap = read char not in
+reference, paper label "ins"), M2 (horizontal gap, "del").  Gap of length L
+costs w_op + w_ex * L under Eqs. 4-5.
+
+Band half-width vs. saturation: the paper quotes eth = 31 for affine WF with
+5-bit cells.  31 is the value-saturation threshold (5-bit range); the band
+GEOMETRY stays 2*6+1 = 13 diagonals — that is what fits the crossbar layout
+(7 traceback rows x 1024 bits ~= 150 rows x 13 cells x 4 bits) and what the
+linear-WF pre-filter (eth = 6) admits.  We therefore expose both: ``eth`` is
+the band half-width, ``sat`` the saturation value (defaults: 6 and 32).  Direction bits (2 for D, 1 each for
+M1/M2 = 4 bits/cell, paper Sec. IV-B) are emitted for every band cell so the
+alignment is reconstructed without storing value matrices — DART-PIM keeps
+them in 7 auxiliary crossbar rows; we pack them into one int8 plane per cell.
+
+Direction encoding (packed byte = dD | dM1 << 2 | dM2 << 3):
+  dD : 0 diag match, 1 diag substitution, 2 enter M1, 3 enter M2
+  dM1: 0 extend (from M1[i-1,j]),  1 open (from D[i-1,j])
+  dM2: 0 extend (from M2[i,j-1]),  1 open (from D[i,j-1])
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# traceback op codes
+OP_MATCH, OP_SUB, OP_INS, OP_DEL, OP_NONE = 0, 1, 2, 3, 4
+OP_CHARS = "=XIDP"
+
+INF = 10 ** 6
+
+
+def full_affine_numpy(s1, s2, w_sub=1, w_op=1, w_ex=1):
+    """Unbanded Gotoh DP following paper Eqs. 3-5 exactly (oracle).
+
+    Returns (D, M1, M2) int matrices of shape (n+1, m+1).
+    """
+    n, m = len(s1), len(s2)
+    D = np.full((n + 1, m + 1), INF, dtype=np.int64)
+    M1 = np.full((n + 1, m + 1), INF, dtype=np.int64)
+    M2 = np.full((n + 1, m + 1), INF, dtype=np.int64)
+    D[0, 0] = 0
+    for i in range(1, n + 1):
+        M1[i, 0] = min(M1[i - 1, 0] + w_ex, D[i - 1, 0] + w_op + w_ex)
+        D[i, 0] = M1[i, 0]
+    for j in range(1, m + 1):
+        M2[0, j] = min(M2[0, j - 1] + w_ex, D[0, j - 1] + w_op + w_ex)
+        D[0, j] = M2[0, j]
+    for i in range(1, n + 1):
+        for j in range(1, m + 1):
+            M1[i, j] = min(M1[i - 1, j] + w_ex, D[i - 1, j] + w_op + w_ex)
+            M2[i, j] = min(M2[i, j - 1] + w_ex, D[i, j - 1] + w_op + w_ex)
+            if s1[i - 1] == s2[j - 1]:
+                D[i, j] = D[i - 1, j - 1]
+            else:
+                D[i, j] = min(M1[i, j], M2[i, j], D[i - 1, j - 1] + w_sub)
+    return D, M1, M2
+
+
+def banded_affine_numpy(s1, s2_window, eth=6, sat=32, w_sub=1, w_op=1,
+                        w_ex=1):
+    """Band-only oracle with saturation at eth+1. Mirrors the jnp/Pallas path.
+
+    s2_window length = len(s1) + 2*eth; position p holds the reference base at
+    (expected read start - eth + p).  Returns (D_band, dirs, dist) where
+    D_band is the last band row and dirs is (n, 2*eth+1) packed direction
+    bytes for rows 1..n.
+    """
+    n = len(s1)
+    band = 2 * eth + 1
+    D = np.full(band, sat, dtype=np.int32)
+    M1 = np.full(band, sat, dtype=np.int32)
+    M2 = np.full(band, sat, dtype=np.int32)
+    # row 0: j = d - eth; D[0,j] = M2 chain = w_op + w_ex*j
+    for d in range(eth, band):
+        j = d - eth
+        if j == 0:
+            D[d] = 0
+        else:
+            D[d] = min(w_op + w_ex * j, sat)
+            M2[d] = D[d]
+    dirs = np.zeros((n, band), dtype=np.uint8)
+    for i in range(1, n + 1):
+        Dp, M1p, M2p = D.copy(), M1.copy(), M2.copy()
+        D = np.full(band, sat, dtype=np.int32)
+        M1 = np.full(band, sat, dtype=np.int32)
+        M2 = np.full(band, sat, dtype=np.int32)
+        for d in range(band):
+            j = i + d - eth
+            if j < 0:
+                continue
+            # vertical gap matrix M1 (prev row, same j -> band d+1)
+            m1_ext = M1p[d + 1] + w_ex if d + 1 < band else INF
+            m1_open = Dp[d + 1] + w_op + w_ex if d + 1 < band else INF
+            M1[d] = min(m1_ext, m1_open, sat)
+            d_m1 = 0 if m1_ext <= m1_open else 1
+            # horizontal gap matrix M2 (same row, j-1 -> band d-1)
+            m2_ext = M2[d - 1] + w_ex if d >= 1 else INF
+            m2_open = D[d - 1] + w_op + w_ex if d >= 1 else INF
+            M2[d] = min(m2_ext, m2_open, sat)
+            d_m2 = 0 if m2_ext <= m2_open else 1
+            if j == 0:
+                D[d] = M1[d]
+                d_d = 2
+            else:
+                diag = Dp[d]
+                if s1[i - 1] == s2_window[i + d - 1]:
+                    D[d] = min(diag, sat)
+                    d_d = 0
+                else:
+                    opts = [(diag + w_sub, 1), (M1[d], 2), (M2[d], 3)]
+                    val, d_d = min(opts, key=lambda t: t[0])
+                    D[d] = min(val, sat)
+            dirs[i - 1, d] = d_d | (d_m1 << 2) | (d_m2 << 3)
+    return D, dirs, int(D[eth])
+
+
+def traceback_numpy(dirs, eth, n):
+    """Walk packed direction bits from (i=n, d=eth).  Returns op list."""
+    ops = []
+    i, d = n, eth
+    state = 0  # 0=D, 1=M1, 2=M2
+    while i > 0 or i + d - eth > 0:
+        j = i + d - eth
+        if i == 0:
+            # top row: only horizontal gap back to (0,0)
+            ops.append(OP_DEL)
+            d -= 1
+            continue
+        if j == 0:
+            ops.append(OP_INS)
+            i -= 1
+            d += 1
+            continue
+        byte = int(dirs[i - 1, d])
+        dd, dm1, dm2 = byte & 0x3, (byte >> 2) & 0x1, (byte >> 3) & 0x1
+        if state == 0:
+            if dd == 0:
+                ops.append(OP_MATCH); i -= 1
+            elif dd == 1:
+                ops.append(OP_SUB); i -= 1
+            elif dd == 2:
+                state = 1
+            else:
+                state = 2
+        elif state == 1:  # M1: vertical move consumes read char
+            ops.append(OP_INS)
+            state = 0 if dm1 == 1 else 1
+            i -= 1; d += 1
+        else:  # M2: horizontal move consumes reference char
+            ops.append(OP_DEL)
+            state = 0 if dm2 == 1 else 2
+            d -= 1
+    ops.reverse()
+    return ops
+
+
+def alignment_cost(ops, w_sub=1, w_op=1, w_ex=1):
+    """Cost of an op string under the paper's affine model (gap L: w_op+w_ex*L)."""
+    cost, prev = 0, None
+    for op in ops:
+        if op == OP_SUB:
+            cost += w_sub
+        elif op in (OP_INS, OP_DEL):
+            cost += w_ex + (w_op if op != prev else 0)
+        prev = op
+    return cost
+
+
+@partial(jax.jit, static_argnames=("eth", "sat"))
+def banded_affine(s1: jnp.ndarray, s2_window: jnp.ndarray, eth: int = 6,
+                  sat: int = 32):
+    """Batched banded affine WF.  s1: (..., n), s2_window: (..., n + 2*eth).
+
+    Returns (dist_end, dist_min, dirs) with dirs (..., n, 2*eth+1) uint8
+    packed direction bytes.  int8 value arithmetic saturated at ``sat``.
+    """
+    n = s1.shape[-1]
+    band = 2 * eth + 1
+    sat = jnp.int32(sat)
+    d_idx = jnp.arange(band, dtype=jnp.int32)
+    lead = s1.shape[:-1]
+
+    j0 = d_idx - eth
+    D0 = jnp.where(j0 < 0, sat, jnp.minimum(jnp.where(j0 == 0, 0, 1 + j0), sat))
+    M0 = jnp.full((band,), sat, dtype=jnp.int32)
+    M20 = jnp.where(j0 > 0, D0, sat)
+    D0 = jnp.broadcast_to(D0, lead + (band,)).astype(jnp.int8)
+    M0 = jnp.broadcast_to(M0, lead + (band,)).astype(jnp.int8)
+    M20 = jnp.broadcast_to(M20, lead + (band,)).astype(jnp.int8)
+
+    sat8 = sat.astype(jnp.int8)
+    big = (sat + 40).astype(jnp.int8)  # stand-in for INF; raw values stay < 127
+
+    def row(carry, i):
+        Dp, M1p, M2p = carry
+        j = i + d_idx - eth
+        chars = jax.lax.dynamic_slice_in_dim(s2_window, i - 1, band, axis=-1)
+        match = s1[..., i - 1][..., None] == chars
+
+        # Direction decisions compare RAW (unclamped) candidates, exactly as
+        # the numpy oracle does; stored values are clamped to sat afterwards.
+        shift = lambda a: jnp.concatenate(
+            [a[..., 1:], jnp.full_like(a[..., :1], big)], axis=-1)
+        m1_ext = shift(M1p) + 1  # raw
+        m1_open = shift(Dp) + 2  # raw
+        M1n = jnp.minimum(jnp.minimum(m1_ext, m1_open), sat8).astype(jnp.int8)
+        dM1 = (m1_open < m1_ext).astype(jnp.uint8)
+        M1n = jnp.where(j >= 0, M1n, sat8).astype(jnp.int8)
+
+        diag = Dp  # D[i-1, j-1]
+
+        # Sequential in-row scan over the band: M2/D interdependence.
+        def step(run, xs):
+            d_left, m2_left = run  # stored D[i, j-1], M2[i, j-1] (or big)
+            dg, m1n, dm1, mt, jj = xs
+            m2_ext = m2_left + 1   # raw
+            m2_open = d_left + 2   # raw
+            m2n = jnp.minimum(jnp.minimum(m2_ext, m2_open), sat8)
+            dm2 = (m2_open < m2_ext).astype(jnp.uint8)
+            m2n = jnp.where(jj <= 0, sat8, m2n).astype(jnp.int8)
+            sub_raw = dg + 1
+            # D candidates (j >= 1): match -> diag; else min(sub, M1, M2)
+            dmin = jnp.minimum(jnp.minimum(sub_raw, m1n), m2n)
+            dval = jnp.where(mt, dg, jnp.minimum(dmin, sat8))
+            dd = jnp.where(
+                mt, jnp.uint8(0),
+                jnp.where(dmin == sub_raw, jnp.uint8(1),
+                          jnp.where(dmin == m1n, jnp.uint8(2), jnp.uint8(3))))
+            # j == 0 column: D = M1
+            dval = jnp.where(jj == 0, m1n, dval)
+            dd = jnp.where(jj == 0, jnp.uint8(2), dd)
+            # j < 0: saturated, dirs zeroed (cells never reached in traceback)
+            dval = jnp.where(jj < 0, sat8, dval).astype(jnp.int8)
+            byte = (dd | (dm1 << 2) | (dm2 << 3)).astype(jnp.uint8)
+            byte = jnp.where(jj < 0, jnp.uint8(0), byte)
+            return (dval, m2n), (dval, m1n, m2n, byte)
+
+        xs = (jnp.moveaxis(diag, -1, 0), jnp.moveaxis(M1n, -1, 0),
+              jnp.moveaxis(dM1, -1, 0), jnp.moveaxis(match, -1, 0), j)
+        init = (jnp.full(lead, big), jnp.full(lead, big))
+        _, (Dn, M1o, M2n, bytes_) = jax.lax.scan(step, init, xs)
+        Dn = jnp.moveaxis(Dn, 0, -1)
+        M1o = jnp.moveaxis(M1o, 0, -1)
+        M2n = jnp.moveaxis(M2n, 0, -1)
+        bytes_ = jnp.moveaxis(bytes_, 0, -1)
+        return (Dn, M1o, M2n), bytes_
+
+    (Dl, _, _), dirs = jax.lax.scan(row, (D0, M0, M20), jnp.arange(1, n + 1))
+    # scan stacks rows on axis 0 -> (n, ..., band); move to (..., n, band)
+    dirs = jnp.moveaxis(dirs, 0, -2)
+    dist_end = Dl[..., eth].astype(jnp.int32)
+    dist_min = jnp.min(Dl, axis=-1).astype(jnp.int32)
+    return dist_end, dist_min, dirs
+
+
+@partial(jax.jit, static_argnames=("eth", "max_ops"))
+def traceback(dirs: jnp.ndarray, eth: int, max_ops: int | None = None):
+    """Vectorizable traceback walk.  dirs: (..., n, band) -> ops (..., max_ops)
+    filled from the END (left-padded with OP_NONE), plus op count."""
+    n = dirs.shape[-2]
+    if max_ops is None:
+        max_ops = 2 * n + 2
+
+    def walk(dirs1):
+        def cond(c):
+            i, d, state, k, _ = c
+            return (i > 0) | (i + d - eth > 0)
+
+        def body(c):
+            i, d, state, k, ops = c
+            j = i + d - eth
+            byte = dirs1[jnp.maximum(i - 1, 0), d].astype(jnp.int32)
+            dd, dm1, dm2 = byte & 3, (byte >> 2) & 1, (byte >> 3) & 1
+            # defaults
+            op = jnp.int32(OP_NONE)
+            ni, nd, ns, emit = i, d, state, False
+            top_row = i == 0
+            left_col = (j == 0) & ~top_row
+            in_d = (state == 0) & ~top_row & ~left_col
+            in_m1 = (state == 1) & ~top_row & ~left_col
+            in_m2 = (state == 2) & ~top_row & ~left_col
+
+            # top row: horizontal to (0,0)
+            op = jnp.where(top_row, OP_DEL, op)
+            nd = jnp.where(top_row, d - 1, nd)
+            emit = emit | top_row
+            # left col: vertical
+            op = jnp.where(left_col, OP_INS, op)
+            ni = jnp.where(left_col, i - 1, ni)
+            nd = jnp.where(left_col, d + 1, nd)
+            emit = emit | left_col
+            # state D
+            diag_move = in_d & (dd <= 1)
+            op = jnp.where(diag_move, jnp.where(dd == 0, OP_MATCH, OP_SUB), op)
+            ni = jnp.where(diag_move, i - 1, ni)
+            emit = emit | diag_move
+            ns = jnp.where(in_d & (dd == 2), 1, ns)
+            ns = jnp.where(in_d & (dd == 3), 2, ns)
+            # state M1: vertical move
+            op = jnp.where(in_m1, OP_INS, op)
+            ni = jnp.where(in_m1, i - 1, ni)
+            nd = jnp.where(in_m1, d + 1, nd)
+            ns = jnp.where(in_m1, jnp.where(dm1 == 1, 0, 1), ns)
+            emit = emit | in_m1
+            # state M2: horizontal move
+            op = jnp.where(in_m2, OP_DEL, op)
+            nd = jnp.where(in_m2, d - 1, nd)
+            ns = jnp.where(in_m2, jnp.where(dm2 == 1, 0, 2), ns)
+            emit = emit | in_m2
+
+            nk = jnp.where(emit, k + 1, k)
+            ops = jnp.where(emit, ops.at[max_ops - 1 - k].set(op), ops)
+            return ni, nd, ns, nk, ops
+
+        init = (jnp.int32(n), jnp.int32(eth), jnp.int32(0), jnp.int32(0),
+                jnp.full((max_ops,), OP_NONE, dtype=jnp.int32))
+        _, _, _, k, ops = jax.lax.while_loop(cond, body, init)
+        return ops, k
+
+    flat = dirs.reshape((-1,) + dirs.shape[-2:])
+    ops, counts = jax.vmap(walk)(flat)
+    return (ops.reshape(dirs.shape[:-2] + (max_ops,)),
+            counts.reshape(dirs.shape[:-2]))

@@ -1,0 +1,246 @@
+"""Distributed read mapping (the paper's Sec. V architecture on a TPU mesh).
+
+DART-PIM's controller hierarchy routes each read to the crossbars owning its
+minimizers; results flow back to the main RISC-V for the final min-reduce.
+On a TPU mesh this is:
+
+  stage A (read owner) : minimizer extraction, destination = hash % n_shards,
+                         bucket into fixed-capacity send buffers
+  all_to_all           : one collective replaces the paper's 1556 GB of
+                         CPU<->memory PL traffic
+  stage B (index owner): local lookup -> banded linear WF over <=max_pls PLs
+                         -> min-extract -> banded affine WF on the winner
+  all_to_all (return)  : (read_id, distance, position) echoes to the owner
+  stage C (read owner) : scatter-min per read  (main-RISC-V reduce)
+
+Fixed buffer capacities are the Reads-FIFO/maxReads mechanism: overflow
+entries are *dropped*, trading accuracy for bounded latency exactly as the
+paper does (measured in benchmarks/accuracy.py).
+
+The index is sharded by minimizer hash (``shard_index``) — DART-PIM's
+"crossbar per minimizer" data organization, with the same deliberate
+segment duplication.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import affine_wf
+from .filtering import gather_windows
+from .index import GenomeIndex
+from .linear_wf import banded_wf
+from .minimizers import hash32, unique_read_minimizers
+from .pipeline import MapperConfig
+
+AXIS = "shards"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedIndex:
+    """Per-shard padded CSR index arrays (leading axis = shard)."""
+    uniq_kmers: np.ndarray   # (S, U) uint32, padded with 0xFFFFFFFF
+    offsets: np.ndarray      # (S, U+1) int32
+    positions: np.ndarray    # (S, O) int32
+    segments: np.ndarray     # (S, O, seg_len) uint8
+    n_shards: int
+    read_len: int
+    k: int
+    w: int
+    eth: int
+
+    def device_arrays(self):
+        return (jnp.asarray(self.uniq_kmers), jnp.asarray(self.offsets),
+                jnp.asarray(self.positions), jnp.asarray(self.segments))
+
+
+def shard_index(index: GenomeIndex, n_shards: int) -> ShardedIndex:
+    """Assign each unique minimizer to shard hash32(kmer) % n_shards."""
+    kmers = index.uniq_kmers
+    h = np.asarray(hash32(jnp.asarray(kmers))) % n_shards
+    counts = np.diff(index.offsets)
+    u_cap = max(int(np.bincount(h, minlength=n_shards).max()), 1)
+    o_cap = max(int(np.bincount(h, weights=counts,
+                                minlength=n_shards).max()), 1) if len(h) else 1
+    U = len(kmers)
+    uq = np.full((n_shards, u_cap), 0xFFFFFFFF, dtype=np.uint32)
+    of = np.zeros((n_shards, u_cap + 1), dtype=np.int32)
+    po = np.zeros((n_shards, o_cap), dtype=np.int32)
+    sg = np.zeros((n_shards, o_cap, index.seg_len), dtype=np.uint8)
+    for s in range(n_shards):
+        sel = np.where(h == s)[0]
+        nu, off = len(sel), 0
+        uq[s, :nu] = kmers[sel]
+        for i, ui in enumerate(sel):
+            c = int(counts[ui])
+            lo = index.offsets[ui]
+            po[s, off : off + c] = index.positions[lo : lo + c]
+            sg[s, off : off + c] = index.segments[lo : lo + c]
+            off += c
+            of[s, i + 1] = off
+        of[s, nu + 1 :] = off
+    return ShardedIndex(uniq_kmers=uq, offsets=of, positions=po, segments=sg,
+                        n_shards=n_shards, read_len=index.read_len,
+                        k=index.k, w=index.w, eth=index.eth)
+
+
+def _bucket_by_dst(dst, payload, n_shards: int, cap: int):
+    """Scatter entries into (n_shards, cap) buckets; overflow dropped.
+
+    dst: (E,) int32 target shard per entry (n_shards = drop).
+    payload: dict of (E, ...) arrays.  Returns dict of (n_shards, cap, ...)
+    plus a valid mask and the number of dropped entries.
+    """
+    E = dst.shape[0]
+    order = jnp.argsort(dst, stable=True)
+    dsorted = dst[order]
+    # rank within group: arange - index of first element of the group
+    first = jnp.searchsorted(dsorted, dsorted)  # leftmost equal
+    rank = jnp.arange(E, dtype=jnp.int32) - first
+    ok = (dsorted < n_shards) & (rank < cap)
+    slot = jnp.where(ok, dsorted * cap + rank, n_shards * cap)
+    out = {}
+    for name, arr in payload.items():
+        a = arr[order]
+        buf = jnp.zeros((n_shards * cap + 1,) + a.shape[1:], dtype=a.dtype)
+        buf = buf.at[slot].set(a)
+        out[name] = buf[:-1].reshape((n_shards, cap) + a.shape[1:])
+    vmask = jnp.zeros((n_shards * cap + 1,), dtype=bool).at[slot].set(ok)
+    out["valid"] = vmask[:-1].reshape(n_shards, cap)
+    dropped = jnp.sum(dsorted < n_shards) - jnp.sum(ok)
+    return out, dropped
+
+
+def _stage_b(local, uniq, offsets, positions, segments, cfg: MapperConfig):
+    """Index-owner compute: lookup -> linear WF -> min -> affine WF."""
+    S, cap = local["kmer"].shape
+    kmers = local["kmer"].reshape(-1)
+    minipos = local["minipos"].reshape(-1)
+    reads = local["read"].reshape(-1, cfg.read_len)
+    valid = local["valid"].reshape(-1)
+
+    idx = jnp.searchsorted(uniq, kmers)
+    idx = jnp.minimum(idx, uniq.shape[0] - 1)
+    found = (uniq[idx] == kmers) & valid
+    start, count = offsets[idx], offsets[idx + 1] - offsets[idx]
+    P = cfg.max_pls
+    occ = start[:, None] + jnp.arange(P, dtype=jnp.int32)[None, :]
+    occ_valid = (jnp.arange(P)[None, :] < count[:, None]) & found[:, None]
+    occ = jnp.where(occ_valid, occ, 0)
+
+    windows = gather_windows(segments, occ, minipos[:, None],
+                             read_len=cfg.read_len, k=cfg.k, eth=cfg.eth)
+    E = kmers.shape[0]
+    s1 = jnp.broadcast_to(reads[:, None, :], (E, P, cfg.read_len))
+    lin_end, _ = banded_wf(s1, windows, eth=cfg.eth)
+    lin_end = jnp.where(occ_valid, lin_end, cfg.eth + 1)
+    best_pl = jnp.argmin(lin_end, axis=-1)
+    best_lin = jnp.take_along_axis(lin_end, best_pl[:, None], 1)[:, 0]
+    passed = best_lin <= cfg.filter_threshold
+
+    sel_win = jnp.take_along_axis(windows, best_pl[:, None, None], 1)[:, 0]
+    aff_end, _, _ = affine_wf.banded_affine(reads, sel_win, eth=cfg.eth,
+                                            sat=cfg.sat_affine)
+    aff_end = jnp.where(passed, aff_end, cfg.sat_affine).astype(jnp.int32)
+    sel_occ = jnp.take_along_axis(occ, best_pl[:, None], 1)[:, 0]
+    pos = positions[sel_occ] - minipos
+    pos = jnp.where(passed, pos, -1)
+    return (aff_end.reshape(S, cap), pos.reshape(S, cap))
+
+
+def make_distributed_mapper(mesh, cfg: MapperConfig, n_shards: int,
+                            send_cap: int):
+    """Build the jitted shard_map mapping step.
+
+    Call signature of the returned fn:
+      fn(uniq (S,U), offsets (S,U+1), positions (S,O), segments (S,O,L),
+         reads (R_global, rl), read_dst_meta...) ->
+         (position (R_global,), distance (R_global,), dropped (S,))
+    """
+    from jax.sharding import PartitionSpec as P
+
+    M = cfg.max_minis
+
+    def step(uniq, offsets, positions, segments, reads):
+        # local shapes: uniq (1, U) ... reads (R_local, rl)
+        uniq, offsets = uniq[0], offsets[0]
+        positions, segments = positions[0], segments[0]
+        R = reads.shape[0]
+
+        # ---- stage A: seeding + bucketing
+        kmers, minipos, valid = jax.vmap(
+            lambda r: unique_read_minimizers(r, k=cfg.k, w=cfg.w, max_uniq=M)
+        )(reads)
+        dst = (hash32(kmers) % n_shards).astype(jnp.int32)
+        dst = jnp.where(valid, dst, n_shards)  # invalid -> drop bucket
+        rid = jnp.broadcast_to(jnp.arange(R, dtype=jnp.int32)[:, None],
+                               (R, M))
+        payload = {
+            "kmer": kmers.reshape(-1),
+            "minipos": minipos.reshape(-1).astype(jnp.int32),
+            "read": jnp.broadcast_to(reads[:, None, :],
+                                     (R, M, cfg.read_len)).reshape(
+                                         -1, cfg.read_len),
+            "rid": rid.reshape(-1),
+        }
+        buckets, dropped = _bucket_by_dst(dst.reshape(-1), payload,
+                                          n_shards, send_cap)
+
+        # ---- exchange: entries travel to their minimizer's home shard
+        recv = {k: jax.lax.all_to_all(v, AXIS, 0, 0, tiled=False)
+                for k, v in buckets.items()}
+
+        # ---- stage B on the index owner
+        aff, pos = _stage_b(recv, uniq, offsets, positions, segments, cfg)
+        aff = jnp.where(recv["valid"], aff, cfg.sat_affine)
+
+        # ---- return trip
+        back_aff = jax.lax.all_to_all(aff, AXIS, 0, 0)
+        back_pos = jax.lax.all_to_all(pos, AXIS, 0, 0)
+        back_rid = buckets["rid"]  # origin kept its own copy (same order)
+        back_val = buckets["valid"]
+
+        # ---- stage C: min-reduce per read (position of the min distance)
+        flat_aff = jnp.where(back_val, back_aff, cfg.sat_affine).reshape(-1)
+        flat_pos = back_pos.reshape(-1)
+        flat_rid = jnp.where(back_val, back_rid, R).reshape(-1)
+        best = jnp.full((R + 1,), cfg.sat_affine, dtype=jnp.int32)
+        best = best.at[flat_rid].min(flat_aff)
+        is_best = (flat_aff == best[flat_rid]) & (flat_rid < R)
+        # leftmost position among ties
+        bigpos = jnp.where(is_best & (flat_pos >= 0), flat_pos, 2 ** 30)
+        posr = jnp.full((R + 1,), 2 ** 30, dtype=jnp.int32)
+        posr = posr.at[flat_rid].min(bigpos)
+        position = jnp.where((best[:R] < cfg.sat_affine) & (posr[:R] < 2 ** 30),
+                             posr[:R], -1)
+        return position, best[:R], dropped[None]
+
+    pspec = P(AXIS)
+    fn = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(pspec, pspec, pspec, pspec, pspec),
+        out_specs=(pspec, pspec, pspec),
+        check_vma=False,  # scan carries are created fresh inside the body
+    )
+    return jax.jit(fn)
+
+
+def distributed_map_reads(mesh, sidx: ShardedIndex, reads: np.ndarray,
+                          cfg: MapperConfig | None = None,
+                          send_cap: int | None = None):
+    """Host wrapper: returns (positions, distances, dropped_per_shard)."""
+    cfg = cfg or MapperConfig(read_len=sidx.read_len, k=sidx.k, w=sidx.w,
+                              eth=sidx.eth)
+    S = sidx.n_shards
+    R = len(reads)
+    assert R % S == 0, "pad reads to a multiple of the shard count"
+    if send_cap is None:
+        send_cap = max(2 * (R // S) * cfg.max_minis // S, 8)
+    fn = make_distributed_mapper(mesh, cfg, S, send_cap)
+    uq, of, po, sg = sidx.device_arrays()
+    pos, dist, dropped = fn(uq, of, po, sg, jnp.asarray(reads))
+    return np.asarray(pos), np.asarray(dist), np.asarray(dropped)

@@ -1,0 +1,69 @@
+"""2-bit DNA base encoding (A=0, C=1, G=2, T=3).
+
+DART-PIM stores reads as 2R bits and reference segments as 4R bits inside a
+crossbar row. On TPU we keep bases as uint8 in {0,1,2,3} (the VPU's narrowest
+lane type); helpers here pack/unpack to the 2-bit representation used when
+computing memory-footprint numbers and k-mer integer codes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+BASES = "ACGT"
+_LUT = np.full(256, 255, dtype=np.uint8)
+for _i, _c in enumerate(BASES):
+    _LUT[ord(_c)] = _i
+    _LUT[ord(_c.lower())] = _i
+
+A, C, G, T = 0, 1, 2, 3
+NUM_BASES = 4
+BITS_PER_BASE = 2
+
+
+def encode_str(s: str) -> np.ndarray:
+    """ASCII DNA string -> uint8 codes in {0..3}. Unknown bases map to A."""
+    out = _LUT[np.frombuffer(s.encode(), dtype=np.uint8)]
+    return np.where(out == 255, 0, out).astype(np.uint8)
+
+
+def decode_to_str(codes) -> str:
+    codes = np.asarray(codes)
+    return "".join(BASES[int(c)] for c in codes)
+
+
+def pack_2bit(codes: np.ndarray) -> np.ndarray:
+    """Pack base codes (len multiple of 4 padded) into bytes, 4 bases/byte."""
+    codes = np.asarray(codes, dtype=np.uint8)
+    pad = (-len(codes)) % 4
+    if pad:
+        codes = np.concatenate([codes, np.zeros(pad, dtype=np.uint8)])
+    c = codes.reshape(-1, 4)
+    return (c[:, 0] | (c[:, 1] << 2) | (c[:, 2] << 4) | (c[:, 3] << 6)).astype(
+        np.uint8
+    )
+
+
+def unpack_2bit(packed: np.ndarray, n: int) -> np.ndarray:
+    packed = np.asarray(packed, dtype=np.uint8)
+    out = np.empty((len(packed), 4), dtype=np.uint8)
+    for j in range(4):
+        out[:, j] = (packed >> (2 * j)) & 0x3
+    return out.reshape(-1)[:n]
+
+
+def kmer_codes(seq: jnp.ndarray, k: int) -> jnp.ndarray:
+    """All k-mer integer codes of ``seq`` (len L) -> (L-k+1,) uint32.
+
+    code = sum_j seq[i+j] << 2*(k-1-j)  (big-endian base order; k <= 16).
+    Vectorized as a sum of k shifted views — k is small and static.
+    """
+    assert k <= 16, "k-mer code must fit 32 bits"
+    L = seq.shape[-1]
+    n = L - k + 1
+    acc = jnp.zeros(seq.shape[:-1] + (n,), dtype=jnp.uint32)
+    for j in range(k):
+        acc = acc | (
+            seq[..., j : j + n].astype(jnp.uint32) << jnp.uint32(2 * (k - 1 - j))
+        )
+    return acc

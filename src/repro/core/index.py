@@ -1,0 +1,121 @@
+"""Offline indexing (paper Sec. V-B) — DART-PIM's data organization.
+
+The reference genome is scanned for minimizer occurrences; for every
+occurrence we **pre-materialize the reference segment** of length
+``2*(rl + eth) - k`` centered on the occurrence, exactly as DART-PIM writes
+segments into crossbar linear-WF buffers.  The ~17x storage blow-up is the
+paper's deliberate trade: all later stages touch only local data.
+
+Layout (CSR over unique minimizer k-mers, sorted for O(log U) lookup):
+  uniq_kmers : (U,)   uint32  sorted unique minimizer k-mer codes
+  offsets    : (U+1,) int32   CSR offsets into positions/segments
+  positions  : (P,)   int32   k-mer start position of each occurrence
+  segments   : (P, seg_len) uint8  pre-extracted reference windows
+               (sentinel base 4 beyond the reference ends — never matches)
+
+A "crossbar" in the TPU mapping is an index shard: minimizers are assigned
+to shards by ``hash(kmer) % num_shards`` (see ``repro.core.distributed``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .minimizers import minimizers
+import jax.numpy as jnp
+
+SENTINEL = 4  # "N"-like base, never equal to a read base
+
+
+@dataclasses.dataclass(frozen=True)
+class GenomeIndex:
+    uniq_kmers: np.ndarray
+    offsets: np.ndarray
+    positions: np.ndarray
+    segments: np.ndarray
+    read_len: int
+    k: int
+    w: int
+    eth: int
+
+    @property
+    def seg_len(self) -> int:
+        return 2 * (self.read_len + self.eth) - self.k
+
+    @property
+    def pad(self) -> int:
+        """Segment extent on each side of the minimizer start."""
+        return self.read_len + self.eth - self.k
+
+    def storage_bytes(self) -> dict:
+        """Footprint accounting, mirroring the paper's 800MB -> 13.3GB note."""
+        hash_table = self.positions.nbytes + self.uniq_kmers.nbytes
+        return {
+            "hash_table_bytes": hash_table,
+            "materialized_segments_bytes": self.segments.nbytes // 4,  # 2-bit
+            "blowup": (self.segments.nbytes // 4) / max(hash_table, 1),
+        }
+
+
+def build_index(ref: np.ndarray, read_len: int = 150, k: int = 12,
+                w: int = 30, eth: int = 6, max_pls_per_minimizer: int = 256,
+                ) -> GenomeIndex:
+    """Scan the reference, collect minimizer occurrences, materialize segments.
+
+    ``max_pls_per_minimizer`` caps hyper-repetitive minimizers (the paper
+    bounds these via the Reads-FIFO / lowTh mechanisms; capping PLs is the
+    standard minimap2-style guard and keeps shapes static downstream).
+    """
+    _, kmers, pos = minimizers(jnp.asarray(ref), k=k, w=w)
+    kmers = np.asarray(kmers)
+    pos = np.asarray(pos)
+    # Dedup (kmer, pos) occurrence pairs (adjacent windows share minimizers).
+    occ = np.unique(np.stack([kmers.astype(np.int64), pos.astype(np.int64)], 1),
+                    axis=0)
+    kmers_u, pos_u = occ[:, 0].astype(np.uint32), occ[:, 1].astype(np.int32)
+    # CSR by kmer (occ already sorted by kmer then pos).
+    uniq, starts, counts = np.unique(kmers_u, return_index=True,
+                                     return_counts=True)
+    # Cap PL lists.
+    keep = np.ones(len(kmers_u), dtype=bool)
+    for s, c in zip(starts[counts > max_pls_per_minimizer],
+                    counts[counts > max_pls_per_minimizer]):
+        keep[s + max_pls_per_minimizer : s + c] = False
+    kmers_u, pos_u = kmers_u[keep], pos_u[keep]
+    uniq, counts = np.unique(kmers_u, return_counts=True)
+    offsets = np.zeros(len(uniq) + 1, dtype=np.int32)
+    offsets[1:] = np.cumsum(counts)
+
+    pad = read_len + eth - k
+    seg_len = 2 * (read_len + eth) - k
+    padded = np.full(len(ref) + 2 * pad, SENTINEL, dtype=np.uint8)
+    padded[pad : pad + len(ref)] = ref
+    # segment for occurrence at p spans ref[p - pad : p - pad + seg_len]
+    segs = np.stack([padded[p : p + seg_len] for p in pos_u]) if len(pos_u) \
+        else np.zeros((0, seg_len), dtype=np.uint8)
+    return GenomeIndex(uniq_kmers=uniq.astype(np.uint32), offsets=offsets,
+                       positions=pos_u, segments=segs.astype(np.uint8),
+                       read_len=read_len, k=k, w=w, eth=eth)
+
+
+def minimizer_frequencies(index: GenomeIndex) -> np.ndarray:
+    """PLs per unique minimizer — drives the lowTh RISC-V/crossbar split."""
+    return np.diff(index.offsets)
+
+
+def low_th_split(index: GenomeIndex, low_th: int = 3) -> dict:
+    """Paper Sec. V-A: minimizers with frequency <= lowTh are offloaded
+    (RISC-V in DART-PIM; the padded residual batch on TPU).
+
+    Returns masks + the workload split statistics that drive Eq. 6/7.
+    """
+    freqs = minimizer_frequencies(index)
+    rare = freqs <= low_th
+    return {
+        "rare_mask": rare,
+        "n_rare_minimizers": int(rare.sum()),
+        "n_minimizers": len(freqs),
+        "rare_pl_fraction": float(freqs[rare].sum() / max(freqs.sum(), 1)),
+        "rare_minimizer_fraction": float(rare.mean()),
+    }

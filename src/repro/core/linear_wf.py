@@ -1,0 +1,114 @@
+"""Linear Wagner-Fischer: banded edit distance (paper Sec. III-A, Alg. 2).
+
+The band has half-width ``eth`` (paper: 6); all values are saturated at
+``eth + 1``.  Only ``2*eth + 1`` cells are live per row — DART-PIM keeps them
+in one crossbar row; we keep them in one VPU-lane-resident int8 vector and
+sweep the read length.  This module is the pure-jnp reference; the Pallas
+kernel in ``repro.kernels.linear_wf`` implements the identical recurrence.
+
+Band coordinates: cell (i, j) of the (n+1) x (m+1) WF matrix is stored at
+``d = j - i + eth`` (valid for |i - j| <= eth).  Row ``i`` of the band needs
+reference chars ``s2_window[i-1 : i-1 + 2*eth+1]`` — a contiguous slice,
+where ``s2_window`` has length ``n + 2*eth`` and position ``p`` holds the
+reference base at (expected read start - eth + p).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def full_wf_numpy(s1: np.ndarray, s2: np.ndarray,
+                  w_del: int = 1, w_ins: int = 1, w_sub: int = 1) -> np.ndarray:
+    """Unbanded Wagner-Fischer distance matrix (oracle). O(n*m) numpy."""
+    n, m = len(s1), len(s2)
+    D = np.zeros((n + 1, m + 1), dtype=np.int32)
+    D[1:, 0] = np.cumsum(np.full(n, w_del))
+    D[0, 1:] = np.cumsum(np.full(m, w_ins))
+    for i in range(1, n + 1):
+        for j in range(1, m + 1):
+            if s1[i - 1] == s2[j - 1]:
+                D[i, j] = D[i - 1, j - 1]
+            else:
+                D[i, j] = min(D[i - 1, j] + w_del,
+                              D[i, j - 1] + w_ins,
+                              D[i - 1, j - 1] + w_sub)
+    return D
+
+
+def banded_wf_numpy(s1: np.ndarray, s2_window: np.ndarray, eth: int = 6):
+    """Band-only oracle with saturation, mirroring paper Algorithm 2 exactly.
+
+    ``s2_window`` must have length len(s1) + 2*eth.  Returns the full band
+    history (n+1, 2*eth+1) and the final distance D[n][n] (= band[n, eth]).
+    """
+    n = len(s1)
+    assert len(s2_window) == n + 2 * eth
+    sat = eth + 1
+    B = np.full((n + 1, 2 * eth + 1), sat, dtype=np.int32)
+    for d in range(eth, 2 * eth + 1):
+        B[0, d] = min(d - eth, sat)
+    for i in range(1, n + 1):
+        for d in range(2 * eth + 1):
+            j = i + d - eth
+            if j < 0:
+                continue  # stays saturated
+            diag = B[i - 1, d]
+            up = B[i - 1, d + 1] if d + 1 <= 2 * eth else sat
+            left = B[i, d - 1] if d >= 1 else sat
+            if j == 0:
+                B[i, d] = min(up + 1, sat)
+                continue
+            sub = int(s1[i - 1] != s2_window[i + d - 1])
+            B[i, d] = min(diag + sub, up + 1, left + 1, sat)
+    return B, int(B[n, eth])
+
+
+@partial(jax.jit, static_argnames=("eth",))
+def banded_wf(s1: jnp.ndarray, s2_window: jnp.ndarray, eth: int = 6):
+    """Batched banded WF distance. s1: (..., n), s2_window: (..., n+2*eth).
+
+    Returns (dist_end, dist_min): the paper-faithful D[n][n] and the
+    semi-global min over the last band row.  int8 arithmetic, saturated at
+    eth+1 (paper: 3-bit cells for eth=6).
+    """
+    n = s1.shape[-1]
+    band = 2 * eth + 1
+    sat = jnp.int8(eth + 1)
+    d_idx = jnp.arange(band, dtype=jnp.int32)
+
+    b0 = jnp.where(d_idx < eth, sat, jnp.minimum(d_idx - eth, eth + 1)).astype(
+        jnp.int8
+    )
+    b0 = jnp.broadcast_to(b0, s1.shape[:-1] + (band,))
+
+    def row(carry, i):
+        prev = carry  # (..., band) row i-1
+        # chars for this row: s2_window[..., i-1 : i-1+band]
+        chars = jax.lax.dynamic_slice_in_dim(s2_window, i - 1, band, axis=-1)
+        sub = (s1[..., i - 1][..., None] != chars).astype(jnp.int8)
+        j = i + d_idx - eth  # (band,)
+        diag = jnp.where(j >= 1, prev + sub, sat)
+        up_src = jnp.concatenate([prev[..., 1:], jnp.full_like(prev[..., :1], sat)],
+                                 axis=-1)
+        up = jnp.where(j >= 0, jnp.minimum(up_src + 1, sat), sat)
+        cand = jnp.minimum(jnp.minimum(diag, up), sat).astype(jnp.int8)
+
+        # left-propagation: running (min,+1) prefix scan over the band
+        def scan_left(run, c):
+            v = jnp.minimum(c, jnp.minimum(run + 1, sat)).astype(jnp.int8)
+            return v, v
+
+        init = jnp.full(cand.shape[:-1], sat, dtype=jnp.int8)
+        _, newT = jax.lax.scan(scan_left, init, jnp.moveaxis(cand, -1, 0))
+        new = jnp.moveaxis(newT, 0, -1)
+        new = jnp.where(j >= 0, new, sat).astype(jnp.int8)
+        return new, None
+
+    last, _ = jax.lax.scan(row, b0, jnp.arange(1, n + 1))
+    dist_end = last[..., eth].astype(jnp.int32)
+    dist_min = jnp.min(last, axis=-1).astype(jnp.int32)
+    return dist_end, dist_min

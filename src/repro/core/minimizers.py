@@ -1,0 +1,108 @@
+"""Minimizer computation (k=12, W=30) — the indexing/seeding substrate.
+
+A window of W consecutive k-mers is represented by its *minimizer*: the k-mer
+with the smallest hash value [Roberts et al. 2004].  DART-PIM assigns one
+crossbar per reference minimizer; we assign one index shard per minimizer
+hash bucket.  The hash is an invertible integer mix (minimap2-style) so that
+minimizer choice is pseudo-random w.r.t. lexicographic order.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .encoding import kmer_codes
+
+
+def hash32(x: jnp.ndarray) -> jnp.ndarray:
+    """Invertible 32-bit integer mix (finalizer-style), uint32 -> uint32."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def sliding_min(values: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Sliding-window minimum along the last axis -> (..., L-window+1).
+
+    Uses log2(window) doubling steps (jnp.minimum of shifted views), the
+    TPU-friendly equivalent of lax.reduce_window for 1-D int data.
+    """
+    L = values.shape[-1]
+    n = L - window + 1
+    acc = values
+    span = 1
+    # doubling min: after the loop acc[i] = min(values[i : i+span]) for span>=window
+    while span < window:
+        step = min(span, window - span)
+        acc = jnp.minimum(acc[..., : acc.shape[-1] - step], acc[..., step:])
+        span += step
+    return acc[..., :n]
+
+
+def sliding_argmin(values: jnp.ndarray, window: int):
+    """Sliding-window (min, leftmost argmin) via (value, index) pair doubling.
+
+    Avoids 64-bit packed keys (x64 is disabled); ties break to the leftmost
+    index, matching minimap2's minimizer convention.
+    """
+    L = values.shape[-1]
+    n = L - window + 1
+    idx = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), values.shape)
+    val, pos = values, idx
+    span = 1
+    while span < window:
+        step = min(span, window - span)
+        a_v, a_p = val[..., : val.shape[-1] - step], pos[..., : pos.shape[-1] - step]
+        b_v, b_p = val[..., step:], pos[..., step:]
+        take_b = (b_v < a_v) | ((b_v == a_v) & (b_p < a_p))
+        val = jnp.where(take_b, b_v, a_v)
+        pos = jnp.where(take_b, b_p, a_p)
+        span += step
+    return val[..., :n], pos[..., :n]
+
+
+@partial(jax.jit, static_argnames=("k", "w"))
+def minimizers(seq: jnp.ndarray, k: int = 12, w: int = 30):
+    """Window minimizers of ``seq``.
+
+    Returns (min_hash, min_kmer, min_pos) each shaped (..., n_windows) where
+    n_windows = L - (w + k - 1) + 1.  ``min_pos`` is the k-mer start position
+    of the minimizer within ``seq``.
+    """
+    codes = kmer_codes(seq, k)  # (..., L-k+1)
+    hashes = hash32(codes)
+    n_win = codes.shape[-1] - w + 1
+    minh, min_pos = sliding_argmin(hashes, w)  # (..., n_win) each
+    min_kmer = jnp.take_along_axis(codes, min_pos, axis=-1)
+    assert minh.shape[-1] == n_win
+    return minh, min_kmer, min_pos
+
+
+@partial(jax.jit, static_argnames=("k", "w", "max_uniq"))
+def unique_read_minimizers(read: jnp.ndarray, k: int = 12, w: int = 30,
+                           max_uniq: int = 24):
+    """Unique minimizers of a single read, static-shape padded.
+
+    Returns (kmers, positions, valid) each (max_uniq,). Deduplicates
+    consecutive windows sharing the same minimizer position (the common
+    case); fully general dedup via sort.
+    """
+    _, kmer, pos = minimizers(read, k=k, w=w)
+    n_win = kmer.shape[-1]
+    # Sort by (kmer, pos); mark first occurrence of each kmer.
+    order = jnp.argsort(kmer, stable=True)
+    ks = kmer[order]
+    ps = pos[order]
+    first = jnp.concatenate([jnp.array([True]), ks[1:] != ks[:-1]])
+    # Compact the first-occurrence entries to the front.
+    rank = jnp.cumsum(first) - 1  # target slot for each kept element
+    slots = jnp.where(first, rank, n_win)  # discard -> overflow slot
+    out_k = jnp.zeros((n_win + 1,), dtype=ks.dtype).at[slots].set(ks)
+    out_p = jnp.zeros((n_win + 1,), dtype=ps.dtype).at[slots].set(ps)
+    n_uniq = jnp.sum(first)
+    valid = jnp.arange(max_uniq) < jnp.minimum(n_uniq, max_uniq)
+    return out_k[:max_uniq], out_p[:max_uniq], valid

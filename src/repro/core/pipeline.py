@@ -1,0 +1,164 @@
+"""End-to-end read mapping (paper Secs. V-B .. V-E), single-shard version.
+
+Stages (numbers = the circled steps of paper Fig. 6):
+  (1)(2) seeding     — minimizer lookup, candidate PLs       (seeding.py)
+  (3)    linear WF   — banded distance for every candidate   (filtering.py)
+  (4)    min extract — best PL per (read, minimizer)
+  (5)(6) affine WF   — alignment + traceback for the winners (affine_wf.py)
+  (7)    reduce      — best PL per read across minimizers
+
+Everything is static-shape and jit-compiled; the distributed version in
+``repro.core.distributed`` wraps the same stages with an all_to_all seeding
+exchange over the device mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import affine_wf
+from .filtering import gather_windows, linear_wf_filter
+from .index import GenomeIndex
+from .linear_wf import banded_wf
+from .seeding import SeedParams, seed_reads
+
+
+@dataclasses.dataclass(frozen=True)
+class MapperConfig:
+    read_len: int = 150
+    k: int = 12
+    w: int = 30
+    eth: int = 6            # band half-width (linear + affine) — Table III
+    sat_affine: int = 32    # affine value saturation (5-bit cells) — Table III
+    max_minis: int = 16
+    max_pls: int = 32       # linear WF buffer rows per crossbar
+    filter_threshold: int = 6
+    max_ops: int | None = None
+
+    @property
+    def seed_params(self) -> SeedParams:
+        return SeedParams(k=self.k, w=self.w, max_minis=self.max_minis,
+                          max_pls=self.max_pls)
+
+
+@dataclasses.dataclass
+class MappingResult:
+    position: np.ndarray   # (R,) int32 best mapping position (-1 if unmapped)
+    distance: np.ndarray   # (R,) int32 affine WF distance
+    mapped: np.ndarray     # (R,) bool
+    ops: np.ndarray        # (R, max_ops) traceback op codes (END-aligned)
+    op_count: np.ndarray   # (R,) int32
+    linear_dist: np.ndarray  # (R, M, P) all candidate linear distances
+    n_candidates: np.ndarray  # (R,) number of valid PLs seeded
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def map_reads_jax(uniq_kmers, offsets, positions, segments, reads,
+                  cfg: MapperConfig):
+    """The jit pipeline. Index arrays are device arrays; reads (R, rl)."""
+    R = reads.shape[0]
+    seeds = seed_reads(uniq_kmers, offsets, reads, cfg.seed_params)
+    occ_idx, occ_valid = seeds["occ_idx"], seeds["occ_valid"]
+    mini_pos = seeds["mini_pos"]  # (R, M)
+
+    # (3) linear WF over every candidate
+    windows = gather_windows(segments, occ_idx, mini_pos[..., None],
+                             read_len=cfg.read_len, k=cfg.k, eth=cfg.eth)
+    lin_end, _ = linear_wf_filter(reads, windows, occ_valid, eth=cfg.eth)
+
+    # (4) min extraction per (read, minimizer); filter threshold
+    best_pl = jnp.argmin(lin_end, axis=-1)                       # (R, M)
+    best_lin = jnp.take_along_axis(lin_end, best_pl[..., None],
+                                   -1)[..., 0]                   # (R, M)
+    pass_filter = best_lin <= cfg.filter_threshold
+
+    # (5)+(6) affine WF on the per-minimizer winners
+    sel_win = jnp.take_along_axis(
+        windows, best_pl[..., None, None], axis=2)[:, :, 0]      # (R, M, wlen)
+    s1 = jnp.broadcast_to(reads[:, None, :],
+                          (R, cfg.max_minis, cfg.read_len))
+    aff_end, _, dirs = affine_wf.banded_affine(s1, sel_win, eth=cfg.eth,
+                                               sat=cfg.sat_affine)
+    aff_end = jnp.where(pass_filter, aff_end, cfg.sat_affine)
+
+    # (7) best minimizer per read — min distance, ties -> leftmost position
+    # (deterministic across the single-shard and distributed mappers)
+    cand_occ = jnp.take_along_axis(occ_idx,
+                                   best_pl[..., None], axis=2)[:, :, 0]
+    cand_pos = positions[cand_occ] - mini_pos                    # (R, M)
+    best_aff = jnp.min(aff_end, axis=-1)
+    mapped = best_aff < cfg.sat_affine
+    is_best = aff_end == best_aff[:, None]
+    pos_key = jnp.where(is_best & (cand_pos >= 0), cand_pos, 2 ** 30)
+    position = jnp.min(pos_key, axis=-1)
+    best_m = jnp.argmin(jnp.where(pos_key == position[:, None],
+                                  jnp.arange(cfg.max_minis)[None, :],
+                                  cfg.max_minis), axis=-1)
+    position = jnp.where(mapped & (position < 2 ** 30), position, -1)
+
+    # traceback for the winning instance only
+    sel_dirs = jnp.take_along_axis(
+        dirs, best_m[:, None, None, None], axis=1)[:, 0]         # (R, n, band)
+    max_ops = cfg.max_ops or 2 * cfg.read_len + 2
+    ops, op_count = affine_wf.traceback(sel_dirs, cfg.eth, max_ops)
+    ops = jnp.where(mapped[:, None], ops, affine_wf.OP_NONE)
+    op_count = jnp.where(mapped, op_count, 0)
+
+    return dict(position=position, distance=best_aff, mapped=mapped, ops=ops,
+                op_count=op_count, linear_dist=lin_end,
+                n_candidates=jnp.sum(occ_valid, axis=(1, 2)))
+
+
+def map_reads(index: GenomeIndex, reads: np.ndarray,
+              cfg: MapperConfig | None = None) -> MappingResult:
+    """Host-friendly wrapper: numpy index + reads -> MappingResult."""
+    cfg = cfg or MapperConfig(read_len=index.read_len, k=index.k, w=index.w,
+                              eth=index.eth)
+    out = map_reads_jax(jnp.asarray(index.uniq_kmers),
+                        jnp.asarray(index.offsets),
+                        jnp.asarray(index.positions),
+                        jnp.asarray(index.segments),
+                        jnp.asarray(reads), cfg)
+    return MappingResult(position=np.asarray(out["position"]),
+                         distance=np.asarray(out["distance"]),
+                         mapped=np.asarray(out["mapped"]),
+                         ops=np.asarray(out["ops"]),
+                         op_count=np.asarray(out["op_count"]),
+                         linear_dist=np.asarray(out["linear_dist"]),
+                         n_candidates=np.asarray(out["n_candidates"]))
+
+
+def oracle_map(ref: np.ndarray, reads: np.ndarray, eth: int = 6,
+               chunk: int = 4096) -> np.ndarray:
+    """Exhaustive banded-WF scan over every reference position (BWA-MEM
+    stand-in ground truth for accuracy tests).  O(G * R) — small inputs only.
+
+    Returns (R,) best position per read (ties -> leftmost).
+    """
+    rl = reads.shape[1]
+    G = len(ref)
+    pad = np.full(G + 2 * eth + rl, 4, dtype=np.uint8)
+    pad[eth : eth + G] = ref
+    n_pos = G - rl + 1
+    starts = np.arange(n_pos)
+    best_d = np.full(len(reads), 10 ** 9, dtype=np.int64)
+    best_p = np.full(len(reads), -1, dtype=np.int64)
+    win = rl + 2 * eth
+    for c0 in range(0, n_pos, chunk):
+        c1 = min(c0 + chunk, n_pos)
+        idx = starts[c0:c1, None] + np.arange(win)[None, :]
+        wins = jnp.asarray(pad[idx])  # (C, win)
+        d_end, _ = banded_wf(jnp.asarray(reads)[:, None, :].repeat(c1 - c0, 1),
+                             jnp.broadcast_to(wins[None], (len(reads), c1 - c0,
+                                                           win)), eth=eth)
+        d = np.asarray(d_end)
+        for r in range(len(reads)):
+            m = int(d[r].argmin())
+            if d[r][m] < best_d[r]:
+                best_d[r] = d[r][m]
+                best_p[r] = c0 + m
+    return best_p, best_d

@@ -1,0 +1,59 @@
+"""Online seeding (paper Sec. V-C): route reads to their minimizers' data.
+
+For each read we extract its unique minimizers (static-shape padded to
+``max_minis``), look each up in the sorted index (binary search), and emit up
+to ``max_pls`` potential locations per (read, minimizer).  In DART-PIM the
+controller hierarchy physically routes the read to each matching crossbar's
+Reads-FIFO; here the result is a static-shape candidate tensor that the
+filtering stage consumes (and that ``repro.core.distributed`` routes across
+the device mesh with one all_to_all).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .minimizers import unique_read_minimizers
+
+
+@dataclasses.dataclass(frozen=True)
+class SeedParams:
+    k: int = 12
+    w: int = 30
+    max_minis: int = 16   # unique minimizers kept per read (Reads-FIFO width)
+    max_pls: int = 32     # PLs per (read, minimizer) — linear WF buffer rows
+
+
+@partial(jax.jit, static_argnames=("params",))
+def seed_reads(uniq_kmers: jnp.ndarray, offsets: jnp.ndarray,
+               reads: jnp.ndarray, params: SeedParams = SeedParams()):
+    """Seed a batch of reads.
+
+    Returns dict with, per read:
+      mini_kmers  (R, M)      uint32  minimizer k-mer codes
+      mini_pos    (R, M)      int32   minimizer start offset within the read
+      mini_valid  (R, M)      bool    found in index & within max_minis
+      occ_idx     (R, M, P)   int32   occurrence row into index.positions/segments
+      occ_valid   (R, M, P)   bool
+    where M = max_minis, P = max_pls.
+    """
+    M, P = params.max_minis, params.max_pls
+
+    def per_read(read):
+        kmers, pos, valid = unique_read_minimizers(
+            read, k=params.k, w=params.w, max_uniq=M)
+        idx = jnp.searchsorted(uniq_kmers, kmers)
+        idx = jnp.minimum(idx, uniq_kmers.shape[0] - 1)
+        found = (uniq_kmers[idx] == kmers) & valid
+        start = offsets[idx]
+        count = offsets[idx + 1] - start
+        occ = start[:, None] + jnp.arange(P, dtype=jnp.int32)[None, :]
+        occ_valid = (jnp.arange(P)[None, :] < count[:, None]) & found[:, None]
+        occ = jnp.where(occ_valid, occ, 0)
+        return dict(mini_kmers=kmers, mini_pos=pos, mini_valid=found,
+                    occ_idx=occ, occ_valid=occ_valid)
+
+    return jax.vmap(per_read)(reads)

@@ -1,0 +1,1 @@
+from . import genome, tokens  # noqa: F401

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for DART-PIM's compute hot-spots.
+
+Each kernel has: <name>.py (pl.pallas_call + BlockSpec), a jit wrapper in
+ops.py, and a pure-jnp oracle in ref.py validated by tests/test_kernels.py.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (same math, no tiling).
+
+These wrap the reference implementations in ``repro.core`` with the kernels'
+transposed calling conventions so tests can assert allclose directly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.affine_wf import banded_affine
+from repro.core.linear_wf import banded_wf
+from repro.core.minimizers import minimizers
+
+
+def linear_wf_ref(s1T, s2T, *, eth: int = 6):
+    """(n, R), (n+2eth, R) -> (2, R) int32 [dist_end; dist_min]."""
+    s1 = jnp.asarray(s1T).T.astype(jnp.uint8)
+    s2 = jnp.asarray(s2T).T.astype(jnp.uint8)
+    de, dm = banded_wf(s1, s2, eth=eth)
+    return jnp.stack([de, dm], axis=0)
+
+
+def affine_wf_ref(s1T, s2T, *, eth: int = 6, sat: int = 32):
+    """-> (dists (2, R) int32, dirs (n*band, R) uint8)."""
+    s1 = jnp.asarray(s1T).T.astype(jnp.uint8)
+    s2 = jnp.asarray(s2T).T.astype(jnp.uint8)
+    de, dm, dirs = banded_affine(s1, s2, eth=eth, sat=sat)
+    n, band = dirs.shape[-2], dirs.shape[-1]
+    dirsT = jnp.moveaxis(dirs.reshape(dirs.shape[0], n * band), 0, -1)
+    return jnp.stack([de, dm], axis=0), dirsT
+
+
+def minimizer_ref(seqT, *, k: int = 12, w: int = 30):
+    """(L, R) -> (hashes (n_win, R) uint32, positions (n_win, R) int32)."""
+    seq = jnp.asarray(seqT).T
+    mh, _, mp = minimizers(seq, k=k, w=w)
+    return mh.T, mp.T
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """Oracle: the exact-softmax grouped-GQA attention from layers."""
+    from repro.models.layers import _sdpa
+    return _sdpa(q, k, v, causal=causal)

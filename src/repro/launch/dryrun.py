@@ -1,0 +1,339 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Per cell this records, into reports/dryrun.json:
+  * memory_analysis()  — per-device argument/temp/output bytes (fits-check)
+  * cost_analysis()    — per-device HLO FLOPs and bytes accessed
+  * parsed collective schedule from the post-SPMD compiled HLO (op kind,
+    per-device bytes, group size) with ring-model link-byte accounting
+  * derived roofline terms (see repro/launch/roofline.py)
+The two XLA_FLAGS lines above MUST stay the first statements — jax locks
+the device count at first init, and only the dry-run wants 512 devices.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, cell_applicable, input_specs
+from repro.launch import mesh as mesh_lib
+from repro.models import lm, transformer
+from repro.models.layers import Shardings
+from repro.train.optimizer import adafactor, adafactor_state_specs, adamw
+
+REPORT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                      "reports", "dryrun.json")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+                "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|u64|s32|u32|s16|u16|s8|"
+                       r"u8|pred|c64|c128)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACES_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        key = "f8" if dt.startswith("f8") else dt
+        total += n * _DTYPE_BYTES.get(key, 4)
+    return total
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> list[dict]:
+    """Extract (kind, per-device result bytes, group size) per collective."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(type_str)
+        g = default_group
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gb = _GROUPS_BRACES_RE.search(line)
+            if gb:
+                g = len(gb.group(1).split(","))
+        out.append({"kind": kind, "result_bytes": nbytes, "group": g})
+    return out
+
+
+def link_bytes(colls: list[dict]) -> float:
+    """Ring-model per-chip link bytes for the parsed collective schedule."""
+    total = 0.0
+    for c in colls:
+        b, g = c["result_bytes"], max(c["group"], 1)
+        f = (g - 1) / g
+        if c["kind"] == "all-reduce":
+            total += 2 * b * f
+        elif c["kind"] == "all-gather":
+            total += b * f            # result is the gathered (large) buffer
+        elif c["kind"] == "reduce-scatter":
+            total += b * (g - 1)      # result is the scattered (small) buffer
+        elif c["kind"] == "all-to-all":
+            total += b * f
+        elif c["kind"] == "collective-permute":
+            total += b
+    return total
+
+
+def pick_microbatches(cfg, shape, data_shards: int,
+                      target_tokens_per_dev: int = 4096) -> int:
+    """Gradient-accumulation factor: keep live tokens/device ~target."""
+    tokens_per_dev = shape.global_batch * shape.seq_len // max(data_shards, 1)
+    m = max(1, tokens_per_dev // target_tokens_per_dev)
+    while shape.global_batch % m or (shape.global_batch // m) % data_shards:
+        m -= 1
+    return max(m, 1)
+
+
+def build_cell(cfg, shape, mesh, variant=None):
+    """Returns (jitted fn, abstract args) for one cell.
+
+    ``variant`` (perf hillclimbing): dict with optional keys
+      micro_target : int  — tokens/device per microbatch (default 4096)
+      kv_quant     : bool — int8 KV cache for decode cells
+      seq_parallel : bool — shard activation carries on (model) over seq
+    """
+    variant = variant or {}
+    multi = "pod" in mesh.axis_names
+    baxes = mesh_lib.batch_axes(mesh)
+    bsize = 1
+    for a in baxes:
+        bsize *= mesh.shape[a]
+    shard_batch = shape.global_batch % bsize == 0 and shape.global_batch >= bsize
+    bspec = baxes if shard_batch else None
+    n_dev = bsize * mesh.shape["model"]
+    if (variant or {}).get("flat_dp") and shape.global_batch % n_dev == 0:
+        # repurpose the model axis as extra data parallelism (small archs:
+        # TP collectives dominate at model=16 — see EXPERIMENTS.md §Perf)
+        bspec = tuple(baxes) + ("model",)
+        sh = Shardings(batch=bspec, model=(), fsdp=("data",), model_size=1)
+    else:
+        sh = Shardings(batch=bspec if shard_batch else (), model=("model",),
+                       fsdp=("data",), model_size=mesh.shape["model"],
+                       seq=("model",) if variant.get("seq_parallel") else ())
+
+    pspecs = transformer.param_specs(cfg, sh)
+    params_abs = transformer.abstract_params(cfg)
+    ns = lambda tree: mesh_lib.named(mesh, tree)
+
+    specs = input_specs(cfg, shape)
+    if shape.kind == "train":
+        # >100B params: factored 2nd moment (Adafactor) — full f32 Adam
+        # state would not leave workspace on 16 GiB chips at 256-way
+        # sharding (see EXPERIMENTS.md §Perf).
+        if cfg.n_params() > 1.0e11:
+            opt = adafactor()
+            opt_specs = adafactor_state_specs(pspecs)
+        else:
+            opt = adamw()
+            opt_specs = {"m": pspecs, "v": pspecs}
+        data_like = (n_dev if (variant or {}).get("flat_dp")
+                     and shape.global_batch % n_dev == 0 else bsize)
+        n_micro = pick_microbatches(
+            cfg, shape, data_like,
+            target_tokens_per_dev=variant.get("micro_target", 4096))
+        # >100B params: bf16 grad accumulator by default (hillclimbed —
+        # the f32 accumulator alone is 3.4 GiB/device at 235B)
+        acc = (jnp.bfloat16 if (variant.get("grad_acc_bf16")
+                                or cfg.n_params() > 1.0e11) else jnp.float32)
+        step = lm.make_train_step(cfg, opt, sh, num_microbatches=n_micro,
+                                  acc_dtype=acc)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        state_abs = (params_abs, opt_abs, jax.ShapeDtypeStruct((), jnp.int32))
+        state_specs = (pspecs, opt_specs, P())
+        dspec = {k: P(bspec, *([None] * (len(v.shape) - 1)))
+                 for k, v in specs.items()}
+        fn = jax.jit(step, in_shardings=(ns(state_specs), ns(dspec)),
+                     donate_argnums=(0,))
+        return fn, (state_abs, specs)
+    if shape.kind == "prefill":
+        step = lm.make_prefill_step(cfg, sh)
+        dspec = {k: P(bspec, *([None] * (len(v.shape) - 1)))
+                 for k, v in specs.items()}
+        fn = jax.jit(step, in_shardings=(ns(pspecs), ns(dspec)))
+        return fn, (params_abs, specs)
+    # decode: serving holds bf16 weights RESIDENT (no per-token FSDP
+    # gathers) — params bf16 shard on `model` alone for every family except
+    # MoE, whose expert tables exceed a single model-axis shard (they keep
+    # the fsdp axis; ragged expert-parallel serving is logged future work).
+    if cfg.family != "moe" and cfg.n_params() < 32e9:
+        sh = Shardings(batch=sh.batch, model=sh.model, fsdp=(),
+                       model_size=mesh.shape["model"])
+        pspecs = transformer.param_specs(cfg, sh)
+    params_abs = jax.eval_shape(transformer.cast_params, params_abs)
+    seq_axes = () if shard_batch else tuple(baxes)  # long_500k: shard cache S
+    kv_quant = bool(variant.get("kv_quant"))
+    step = lm.make_serve_step(cfg, sh)
+    cache_abs = transformer.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                       abstract=True, kv_quant=kv_quant)
+    cspecs = transformer.cache_specs(cfg, sh, seq_shard_axes=seq_axes,
+                                     kv_quant=kv_quant)
+    tok_abs = specs["token"]
+    if cfg.input_kind == "embeds":
+        tok_abs = jax.ShapeDtypeStruct(
+            (shape.global_batch, 1, cfg.d_model), jnp.bfloat16)
+        tspec = P(bspec, None, None)
+    else:
+        tspec = P(bspec, None)
+    fn = jax.jit(step, in_shardings=(ns(pspecs), ns(cspecs), ns(tspec),
+                                     NamedSharding(mesh, P())),
+                 donate_argnums=(1,))
+    return fn, (params_abs, cache_abs, tok_abs, specs["pos"])
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant=None) -> dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        return {"status": "SKIP", "reason": reason}
+    if (variant or {}).get("mesh_override"):
+        import jax as _jax
+        from jax.sharding import AxisType as _AT
+        d, m = (int(x) for x in variant["mesh_override"].split("x"))
+        mesh = _jax.make_mesh((d, m), ("data", "model"),
+                              axis_types=(_AT.Auto,) * 2)
+    else:
+        mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        fn, args = build_cell(cfg, shape, mesh, variant=variant)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    n_dev = len(jax.devices())
+    colls = parse_collectives(hlo, default_group=n_dev)
+    coll_summary = {}
+    for c in colls:
+        k = c["kind"]
+        coll_summary.setdefault(k, {"count": 0, "bytes": 0})
+        coll_summary[k]["count"] += 1
+        coll_summary[k]["bytes"] += c["result_bytes"]
+    return {
+        "status": "OK",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "per_device": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            # live peak: args + temps + non-aliased outputs (donated state
+            # aliases its argument buffers)
+            "peak_bytes": (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                           + ma.output_size_in_bytes
+                           - ma.alias_size_in_bytes),
+            "flops": ca.get("flops", 0.0),
+            "bytes_accessed": ca.get("bytes accessed", 0.0),
+            "link_bytes": link_bytes(colls),
+        },
+        "collectives": coll_summary,
+        "n_collectives": len(colls),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--report", default=None)
+    ap.add_argument("--tag", default="", help="variant suffix for the key")
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--micro-target", type=int, default=4096)
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--grad-acc-bf16", action="store_true")
+    ap.add_argument("--flat-dp", action="store_true")
+    ap.add_argument("--mesh-override", default=None,
+                    help="DxM re-aim of the 256 chips (perf variant)")
+    args = ap.parse_args()
+    variant = {"kv_quant": args.kv_quant, "micro_target": args.micro_target,
+               "seq_parallel": args.seq_parallel,
+               "grad_acc_bf16": args.grad_acc_bf16, "flat_dp": args.flat_dp,
+               "mesh_override": args.mesh_override}
+
+    report_path = args.report or os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "../../..",
+                     "reports/dryrun.json"))
+    os.makedirs(os.path.dirname(report_path), exist_ok=True)
+    results = {}
+    if os.path.exists(report_path):
+        with open(report_path) as f:
+            results = json.load(f)
+
+    cells = []
+    archs = list(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    for a, s, mp in cells:
+        key = f"{a}|{s}|{'2x16x16' if mp else '16x16'}" + (
+            f"|{args.tag}" if args.tag else "")
+        if results.get(key, {}).get("status") in ("OK", "SKIP"):
+            print(f"[cached] {key}: {results[key]['status']}")
+            continue
+        print(f"[run] {key} ...", flush=True)
+        try:
+            res = run_cell(a, s, mp, variant=variant)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            res = {"status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+        results[key] = res
+        with open(report_path, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"  -> {res['status']} "
+              + (f"compile={res.get('compile_s')}s "
+                 f"flops/dev={res['per_device']['flops']:.3g} "
+                 f"temp/dev={res['per_device']['temp_bytes']/2**30:.2f}GiB"
+                 if res["status"] == "OK" else res.get("reason",
+                                                       res.get("error", ""))),
+              flush=True)
+
+    n_ok = sum(1 for r in results.values() if r["status"] == "OK")
+    n_skip = sum(1 for r in results.values() if r["status"] == "SKIP")
+    n_fail = sum(1 for r in results.values() if r["status"] == "FAIL")
+    print(f"dry-run cells: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

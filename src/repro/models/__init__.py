@@ -1,0 +1,1 @@
+from . import layers, lm, ssm, transformer  # noqa: F401

@@ -1,0 +1,472 @@
+"""Transformer building blocks (pure JAX, sharding-annotated).
+
+Conventions:
+  * params are plain dicts of jnp arrays; fp32 storage, bf16 compute.
+  * every function takes a ``Shardings`` helper so activation constraints
+    follow whatever mesh (('data','model') or ('pod','data','model')) is
+    active; with no mesh the constraints are no-ops.
+  * attention supports GQA, RoPE (with position offset for decode), optional
+    qk-norm (Qwen3), causal/bidirectional, and a KV-cache decode path with
+    optional *sequence-sharded* cache (distributed flash-decode: local
+    softmax stats + psum combine) for the long-context cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Shardings:
+    """Logical->mesh axis mapping. Empty tuples mean 'replicated'.
+
+    ``fsdp`` names the mesh axes that additionally shard *parameters*
+    (ZeRO-3: weights gathered at use, optimizer state stays sharded) —
+    typically the data axis.  ``model_size`` is the model-axis extent, used
+    to drop head-axis constraints when head counts don't divide it.
+    """
+    batch: tuple = ("data",)     # ('pod','data') on the multi-pod mesh
+    model: tuple = ("model",)
+    fsdp: tuple = ()
+    seq: tuple = ()              # sequence-parallel carries (perf variant)
+    model_size: int = 1
+    enabled: bool = True
+
+    def spec(self, *axes) -> P:
+        return P(*[a if a else None for a in axes])
+
+    def maybe_model(self, n: int) -> tuple:
+        """Model axes only if ``n`` divides evenly (e.g. few KV heads)."""
+        if self.model and self.model_size > 1 and n % self.model_size != 0:
+            return ()
+        return self.model
+
+    def constrain(self, x, *axes):
+        if not self.enabled:
+            return x
+        try:
+            return jax.lax.with_sharding_constraint(x, self.spec(*axes))
+        except ValueError:
+            return x  # no mesh in context (e.g. plain CPU tests)
+
+
+NO_SHARD = Shardings(batch=(), model=(), enabled=False)
+
+
+def compute_dtype(x):
+    return x.astype(jnp.bfloat16)
+
+
+# ----------------------------------------------------------------- norms
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale=None, bias=None, eps: float = 1e-5):
+    """LayerNorm; scale/bias may be None (OLMo's non-parametric LN)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(x, p, kind: str):
+    if kind == "rms":
+        return rms_norm(x, p["scale"])
+    if kind == "ln":
+        return layer_norm(x, p.get("scale"), p.get("bias"))
+    if kind == "ln_nonparam":
+        return layer_norm(x, None, None)
+    raise ValueError(kind)
+
+
+def init_norm(key, d, kind: str):
+    if kind == "ln_nonparam":
+        return {}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+# ----------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x (..., S, H, hd); positions (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                    # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin,
+                            xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+def init_attention(key, cfg):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": jax.random.normal(k1, (d, nh * hd), jnp.float32) * s,
+        "wk": jax.random.normal(k2, (d, nkv * hd), jnp.float32) * s,
+        "wv": jax.random.normal(k3, (d, nkv * hd), jnp.float32) * s,
+        "wo": jax.random.normal(k4, (nh * hd, d), jnp.float32) * s,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _qkv(x, p, cfg, positions, sh: Shardings):
+    B, S, _ = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ compute_dtype(p["wq"])).reshape(B, S, nh, hd)
+    k = (x @ compute_dtype(p["wk"])).reshape(B, S, nkv, hd)
+    v = (x @ compute_dtype(p["wv"])).reshape(B, S, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = sh.constrain(q, sh.batch, None, sh.maybe_model(nh), None)
+    k = sh.constrain(k, sh.batch, None, sh.maybe_model(nkv), None)
+    v = sh.constrain(v, sh.batch, None, sh.maybe_model(nkv), None)
+    return q, k, v
+
+
+def _sdpa(q, k, v, causal: bool, q_offset=None):
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd) -> (B,Sq,H,hd).
+
+    GQA via grouped einsum — the KV tensors are never replicated across the
+    query-head group (a ``repeat`` would copy the whole KV cache rep times
+    in the decode path)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, Sq, KV, rep, hd)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32)
+    logits = logits * scale
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + (0 if q_offset is None else q_offset)
+        ki = jnp.arange(k.shape[1])[None, :]
+        logits = jnp.where((qi >= ki)[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", w, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _sdpa_chunked(q, k, v, causal: bool, q_chunk: int = 1024,
+                  kv_chunk: int = 1024):
+    """Flash-style online-softmax attention: O(q_chunk * kv_chunk) live
+    memory instead of O(S^2).  q (B,S,H,hd); k/v (B,S,KV,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, S)
+    nq, nk = S // qc, S // kc
+    scale = 1.0 / math.sqrt(hd)
+    # grouped GQA: KV never replicated across the rep query heads
+    qr = jnp.moveaxis(q.reshape(B, nq, qc, KV, rep, hd), 1, 0)
+    kr = jnp.moveaxis(k.reshape(B, nk, kc, KV, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(B, nk, kc, KV, hd), 1, 0)
+
+    def q_block(_, qin):
+        qb, qi = qin                                       # (B,qc,KV,rep,hd)
+        m0 = jnp.full((B, KV, rep, qc), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, qc), jnp.float32)
+        a0 = jnp.zeros((B, qc, KV, rep, hd), jnp.float32)
+
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def kv_block(carry, kin):
+            m, l, acc = carry
+            kb, vb, ki = kin
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qb, kb).astype(
+                jnp.float32) * scale
+            if causal:
+                qpos = qi * qc + jnp.arange(qc)[:, None]
+                kpos = ki * kc + jnp.arange(kc)[None, :]
+                s = jnp.where((qpos >= kpos)[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))     # (B,KV,rep,qc)
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * jnp.moveaxis(corr, 3, 1)[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bqgrd", p.astype(qb.dtype), vb).astype(
+                    jnp.float32)
+            return (m_new, l_new, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0),
+            (kr, vr, jnp.arange(nk)))
+        # l (B,KV,rep,qc) -> (B,qc,KV,rep,1) to divide acc
+        out = acc / jnp.maximum(jnp.transpose(l, (0, 3, 1, 2)),
+                                1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    # remat per chunk: backward recomputes score blocks instead of saving
+    # every (B, H, qc, kc) probability tile (flash-attention memory shape).
+    q_block = jax.checkpoint(
+        q_block, policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = jax.lax.scan(q_block, None, (qr, jnp.arange(nq)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+
+
+ATTN_CHUNK_THRESHOLD = 2048
+
+
+def attention(x, p, cfg, sh: Shardings, positions=None, causal=True):
+    """Full (training / prefill) attention. x (B, S, D)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _qkv(x, p, cfg, positions, sh)
+    if S > ATTN_CHUNK_THRESHOLD:
+        o = _sdpa_chunked(q, k, v, causal)
+    else:
+        o = _sdpa(q, k, v, causal)
+    o = o.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    out = o @ compute_dtype(p["wo"])
+    return sh.constrain(out, sh.batch, None, None)
+
+
+def decode_attention(x, p, cfg, sh: Shardings, cache, pos, *,
+                     seq_shard_axes: Sequence[str] = ()):
+    """One-token decode with KV cache.
+
+    x (B, 1, D); cache dict {k,v: (B, S_max, KV, hd), len: scalar int32}.
+    ``seq_shard_axes``: mesh axes the cache sequence dim is sharded over —
+    softmax stats are psum-combined across them (distributed flash-decode),
+    enabling long_500k where one device cannot hold the cache.
+    """
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    q, k_new, v_new = _qkv(x, p, cfg, positions, sh)
+    if seq_shard_axes:
+        # each shard owns rows [flat*S_local, (flat+1)*S_local) of the cache
+        flat = jnp.int32(0)
+        for a in seq_shard_axes:
+            flat = flat * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        S_local = cache["k"].shape[1]
+        local_pos = pos - flat * S_local
+        in_range = (local_pos >= 0) & (local_pos < S_local)
+        up = jnp.clip(local_pos, 0, S_local - 1)
+        k_cache = jnp.where(
+            in_range,
+            jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, up, 1),
+            cache["k"])
+        v_cache = jnp.where(
+            in_range,
+            jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, up, 1),
+            cache["v"])
+        H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        rep = H // KV
+        qg = q.reshape(B, 1, KV, rep, hd)
+        logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg,
+                            k_cache).astype(jnp.float32)
+        logits = logits / math.sqrt(hd)
+        kidx = jnp.arange(S_local)[None, None, None, None, :] + flat * S_local
+        logits = jnp.where(kidx <= pos, logits, -1e30)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        for a in seq_shard_axes:
+            m = jax.lax.pmax(m, a)
+        ew = jnp.exp(logits - m)                         # (B,KV,rep,1,S)
+        num = jnp.einsum("bgrqk,bkgd->bqgrd", ew.astype(q.dtype), v_cache)
+        den = jnp.sum(ew, axis=-1).astype(jnp.float32)   # (B,KV,rep,1)
+        num = num.astype(jnp.float32)
+        for a in seq_shard_axes:
+            num = jax.lax.psum(num, a)
+            den = jax.lax.psum(den, a)
+        den_q = jnp.transpose(den, (0, 3, 1, 2))[..., None]  # (B,1,KV,rep,1)
+        o = (num / jnp.maximum(den_q, 1e-30)).astype(x.dtype)
+        o = o.reshape(B, 1, H, hd)
+        new_cache = {"k": k_cache, "v": v_cache}
+    elif cache["k"].dtype == jnp.int8:
+        # int8-quantized KV cache (beyond-paper §Perf optimization):
+        # halves the decode memory-roofline term.  Per-(token, kv-head)
+        # symmetric scales; dequantization is folded into the attention
+        # einsums — the cache is never materialized in bf16.
+        B1, _, KV, hd = k_new.shape
+        H = cfg.n_heads
+        rep = H // KV
+
+        def quant(x):
+            s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                        keepdims=True) / 127.0 + 1e-12
+            return jnp.round(x.astype(jnp.float32) / s).astype(jnp.int8), \
+                s.astype(jnp.float32)
+
+        k_q, k_s = quant(k_new)
+        v_q, v_s = quant(v_new)
+        upd = lambda c, n: jax.lax.dynamic_update_slice_in_dim(c, n, pos, 1)
+        k_cache = upd(cache["k"], k_q)
+        v_cache = upd(cache["v"], v_q)
+        ks_cache = upd(cache["k_scale"], k_s)
+        vs_cache = upd(cache["v_scale"], v_s)
+        qg = q.reshape(B, 1, KV, rep, hd)
+        logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg,
+                            k_cache.astype(jnp.bfloat16)).astype(jnp.float32)
+        # fold in the per-(token, head) scale: (B,S,KV,1)->(B,KV,1,1,S)
+        ksT = jnp.transpose(ks_cache, (0, 2, 3, 1))[:, :, :, None, :]
+        logits = logits * ksT / math.sqrt(hd)
+        kidx = jnp.arange(k_cache.shape[1])[None, None, None, None, :]
+        logits = jnp.where(kidx <= pos, logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        vsT = jnp.transpose(vs_cache, (0, 2, 3, 1))[:, :, :, None, :]
+        o = jnp.einsum("bgrqk,bkgd->bqgrd", (w * vsT).astype(jnp.bfloat16),
+                       v_cache.astype(jnp.bfloat16))
+        o = o.reshape(B, 1, H, hd).astype(x.dtype)
+        new_cache = {"k": k_cache, "v": v_cache, "k_scale": ks_cache,
+                     "v_scale": vs_cache}
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new,
+                                                      pos, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new,
+                                                      pos, 1)
+        o = _sdpa(q, k_cache, v_cache, causal=True, q_offset=pos)
+        new_cache = {"k": k_cache, "v": v_cache}
+    o = o.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    out = o @ compute_dtype(p["wo"])
+    return sh.constrain(out, sh.batch, None, None), new_cache
+
+
+# ----------------------------------------------------------------- mlp
+def init_mlp(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    s = 1.0 / math.sqrt(d)
+    return {
+        "wi": jax.random.normal(k1, (d, f), jnp.float32) * s,
+        "wg": jax.random.normal(k2, (d, f), jnp.float32) * s,
+        "wo": jax.random.normal(k3, (f, d), jnp.float32) / math.sqrt(f),
+    }
+
+
+def mlp(x, p, sh: Shardings):
+    h = jax.nn.silu(x @ compute_dtype(p["wg"])) * (x @ compute_dtype(p["wi"]))
+    h = sh.constrain(h, sh.batch, None, sh.model)
+    return sh.constrain(h @ compute_dtype(p["wo"]), sh.batch, None, None)
+
+
+# ----------------------------------------------------------------- MoE
+def init_moe(key, cfg):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s = 1.0 / math.sqrt(d)
+    return {
+        "router": jax.random.normal(k1, (d, e), jnp.float32) * s,
+        "wi": jax.random.normal(k2, (e, d, f), jnp.float32) * s,
+        "wg": jax.random.normal(k3, (e, d, f), jnp.float32) * s,
+        "wo": jax.random.normal(k4, (e, f, d), jnp.float32) / math.sqrt(f),
+    }
+
+
+MOE_SEQ_CHUNK = 4096
+
+
+def moe(x, p, cfg, sh: Shardings, capacity_factor: float = 1.25):
+    """Sequence-chunked wrapper over ``_moe_chunk``: long sequences are
+    dispatched in <=MOE_SEQ_CHUNK slices via lax.scan so the (B, E*cap, D)
+    dispatch buffer stays bounded (prefill_32k would otherwise need a
+    ~5 GiB/device buffer).  Capacity is per chunk — slightly *more*
+    load-balanced than global capacity."""
+    B, S, D = x.shape
+    C = MOE_SEQ_CHUNK
+    if S <= C:
+        return _moe_chunk(x, p, cfg, sh, capacity_factor)
+    assert S % C == 0
+    xc = jnp.moveaxis(x.reshape(B, S // C, C, D), 1, 0)
+
+    def body(aux, xi):
+        y, a = _moe_chunk(xi, p, cfg, sh, capacity_factor)
+        return aux + a, y
+
+    aux, ys = jax.lax.scan(body, jnp.float32(0.0), xc)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D)
+    return y, aux / (S // C)
+
+
+def _moe_chunk(x, p, cfg, sh: Shardings, capacity_factor: float = 1.25):
+    """Token-choice top-k MoE with per-batch-row capacity, EP over ``model``.
+
+    Dispatch is scatter-based (sort-free ranking via a cumsum over one-hot
+    expert assignments), computed independently per batch row so every
+    tensor keeps a leading batch axis — the dispatch buffer shards as
+    (batch, expert, ...) over (data, model), i.e. DP x EP, and the
+    scatter/gather reshard is GSPMD's all_to_all.  This is the paper's
+    owner-computes pattern (minimizer-sharded segments) applied to experts;
+    overflow tokens are dropped (residual passthrough), the same bounded-
+    capacity trade as DART-PIM's Reads-FIFO.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    cap = max(int(capacity_factor * S * K / E), 1)
+    logits = (x @ compute_dtype(p["router"])).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                   # (B, S, E)
+    top_p, top_e = jax.lax.top_k(probs, K)                    # (B, S, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # rank of each (token, k) within its expert, per batch row — sort-based:
+    # O(S*K log) and O(S*K) memory (a one-hot cumsum would materialize a
+    # (B, S*K, E) int32 tensor: hundreds of GiB at prefill_32k scale).
+    flat_e = top_e.reshape(B, S * K)
+    order = jnp.argsort(flat_e, axis=1, stable=True)          # (B, S*K)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    first = jax.vmap(jnp.searchsorted)(sorted_e, sorted_e)    # leftmost equal
+    rank_sorted = (jnp.arange(S * K, dtype=jnp.int32)[None, :]
+                   - first.astype(jnp.int32))
+    rank = jnp.zeros((B, S * K), jnp.int32)
+    rank = rank.at[jnp.arange(B)[:, None], order].set(rank_sorted)
+    rank = rank.reshape(B, S, K)
+    keep = rank < cap
+    slot = jnp.where(keep, top_e * cap + rank, E * cap)       # (B, S, K)
+
+    # dispatch/combine as vmapped per-row scatter/gather: the batching dim
+    # stays a real batch dim in the HLO, so GSPMD keeps everything sharded
+    # on (data) — explicit b_idx index arrays defeat that and replicate.
+    x_rep = jnp.broadcast_to(x[:, :, None, :], (B, S, K, D))
+    flat_slot = slot.reshape(B, S * K)
+
+    def scatter_row(xr, sl):
+        return jnp.zeros((E * cap + 1, D), x.dtype).at[sl].set(xr)
+
+    buf = jax.vmap(scatter_row)(x_rep.reshape(B, S * K, D), flat_slot)
+    hidden = buf[:, :-1].reshape(B, E, cap, D)
+    hidden = sh.constrain(hidden, sh.batch, sh.model, None, None)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", hidden,
+                               compute_dtype(p["wg"])))
+    h = h * jnp.einsum("becd,edf->becf", hidden, compute_dtype(p["wi"]))
+    out = jnp.einsum("becf,efd->becd", h, compute_dtype(p["wo"]))
+    out = sh.constrain(out, sh.batch, sh.model, None, None)
+    outflat = jnp.concatenate(
+        [out.reshape(B, E * cap, D), jnp.zeros((B, 1, D), out.dtype)], axis=1)
+    gathered = jnp.take_along_axis(outflat, flat_slot[..., None], axis=1)
+    gathered = gathered.reshape(B, S, K, D)
+    combined = jnp.sum(gathered * top_p[..., None].astype(out.dtype), axis=2)
+    # aux load-balancing loss (Switch-style), returned for the trainer
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return sh.constrain(combined, sh.batch, None, None), aux

@@ -1,0 +1,168 @@
+"""Loss, train_step, prefill/serve_step factories.
+
+``make_train_step``/``make_serve_step`` return jit-ready pure functions; the
+launcher (repro/launch) attaches meshes and in/out shardings.  Cross-entropy
+is computed against vocab-sharded logits (softmax stats reduce over the
+sharded axis under GSPMD — no full logits replica ever materializes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+from .layers import NO_SHARD, Shardings
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def cross_entropy(logits, labels):
+    """logits (B,S,V) any float dtype; labels (B,S) int32 -> scalar f32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def make_loss_fn(cfg, sh: Shardings = NO_SHARD):
+    def loss_fn(params, batch):
+        logits, aux = transformer.forward(params, batch, cfg, sh)
+        ce = cross_entropy(logits, batch["labels"])
+        loss = ce + MOE_AUX_WEIGHT * aux / max(cfg.n_layers, 1)
+        return loss, {"ce": ce, "moe_aux": aux}
+    return loss_fn
+
+
+def make_train_step(cfg, optimizer, sh: Shardings = NO_SHARD,
+                    num_microbatches: int = 1,
+                    acc_dtype=jnp.float32):
+    """optimizer: repro.train.optimizer.Optimizer (init/update pair).
+
+    ``num_microbatches`` > 1 accumulates gradients over a lax.scan of
+    microbatches — live activation/remat memory scales 1/M while the math
+    is identical (mean of per-microbatch grads).  Microbatches interleave
+    batch rows (stride M) so every data shard contributes rows to every
+    microbatch — no resharding inside the scan.
+    """
+    loss_fn = make_loss_fn(cfg, sh)
+    pspecs = transformer.param_specs(cfg, sh) if sh.enabled else None
+
+    def constrain_like_params(tree):
+        """Pin gradient shardings to the param specs — without this the
+        scan-backward grad stacks come out replicated along the fsdp axis
+        (multi-GiB per device at 72B scale)."""
+        if pspecs is None:
+            return tree
+        try:
+            return jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                tree, pspecs,
+                is_leaf=lambda x: not isinstance(x, dict))
+        except ValueError:
+            return tree  # no mesh context
+
+    def grads_of(params, batch):
+        """Differentiate w.r.t. the bf16-cast tree: per-layer grad slices
+        stay bf16 inside the scan backward (half the transient footprint);
+        they are widened to f32 only at the (sharded) accumulation."""
+        pc = transformer.cast_params(params)
+        (loss, metrics), gb = jax.value_and_grad(loss_fn, has_aux=True)(
+            pc, batch)
+        gb = constrain_like_params(gb)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), gb)
+        grads = constrain_like_params(grads)
+        return (loss, metrics), grads
+
+    def train_step(state, batch):
+        params, opt_state, step = state
+        if num_microbatches == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            M = num_microbatches
+
+            def split(a):
+                B = a.shape[0]
+                assert B % M == 0, (B, M)
+                a = a.reshape((B // M, M) + a.shape[1:])
+                return jnp.swapaxes(a, 0, 1)  # (M, B/M, ...) strided rows
+
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                gacc, lacc, aacc = carry
+                (l, m), g = grads_of(params, mb)
+                gacc = jax.tree.map(
+                    lambda x, y: (x + y.astype(acc_dtype)).astype(acc_dtype),
+                    gacc, g)
+                return (gacc, lacc + m["ce"], aacc + m["moe_aux"]), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            (gsum, ce_sum, aux_sum), _ = jax.lax.scan(
+                body, (g0, jnp.float32(0), jnp.float32(0)), micro)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32) / M, gsum)
+            loss = ce_sum / M + MOE_AUX_WEIGHT * (aux_sum / M) / max(
+                cfg.n_layers, 1)
+            metrics = {"ce": ce_sum / M, "moe_aux": aux_sum / M}
+        updates, new_opt = optimizer.update(grads, opt_state, params, step)
+        new_params = jax.tree.map(lambda p, u: p + u, params, updates)
+        gnorm = optimizer.global_norm(grads)
+        return (new_params, new_opt, step + 1), {
+            "loss": loss, "grad_norm": gnorm, **metrics}
+
+    return train_step
+
+
+def make_eval_step(cfg, sh: Shardings = NO_SHARD):
+    loss_fn = make_loss_fn(cfg, sh)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return {"loss": loss, **metrics}
+
+    return eval_step
+
+
+def make_prefill_step(cfg, sh: Shardings = NO_SHARD):
+    """Full-sequence forward (the prefill_* cells). Returns last logits."""
+    def prefill(params, batch):
+        logits, _ = transformer.forward(params, batch, cfg, sh,
+                                        last_only=True)
+        return logits[:, -1]
+    return prefill
+
+
+def make_serve_step(cfg, sh: Shardings = NO_SHARD,
+                    seq_shard_axes: Sequence[str] = ()):
+    """One-token decode (the decode_* / long_* cells)."""
+    def serve_step(params, cache, token, pos):
+        logits, new_cache = transformer.decode_step(
+            params, cache, token, pos, cfg, sh,
+            seq_shard_axes=seq_shard_axes)
+        return logits[:, -1], new_cache
+    return serve_step
+
+
+def greedy_generate(params, cfg, prompt_tokens, n_new: int,
+                    max_seq: int | None = None, sh: Shardings = NO_SHARD):
+    """Small-scale generation helper for the examples (prefill+decode)."""
+    B, S0 = prompt_tokens.shape
+    max_seq = max_seq or (S0 + n_new)
+    cache = transformer.init_cache(cfg, B, max_seq)
+    serve = jax.jit(make_serve_step(cfg, sh))
+
+    # prefill by stepping (simple + exact; fine for example scale)
+    tok = prompt_tokens[:, :1]
+    out = [prompt_tokens]
+    logits = None
+    for t in range(S0 + n_new - 1):
+        logits, cache = serve(params, cache, tok, jnp.int32(t))
+        if t + 1 < S0:
+            tok = prompt_tokens[:, t + 1 : t + 2]
+        else:
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,276 @@
+"""State-space blocks: Mamba-1 (falcon-mamba) and Mamba-2 / SSD (zamba2).
+
+Training path uses **chunked scans**: the sequence is cut into static chunks;
+within a chunk Mamba-1 uses a numerically-stable associative scan over
+(decay, input) pairs and Mamba-2 uses the SSD matmul formulation (decay-
+masked (C·B^T) attention-like GEMMs — MXU-friendly); chunks are chained with
+a lax.scan carrying the (B, heads/channels, state) SSM state.  This bounds
+live memory to one chunk's expanded tensors instead of O(S * d_inner * N).
+
+Decode path carries (ssm_state, conv_state) per layer — O(1) per token, the
+reason the long_500k cell is runnable for these families at all.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Shardings, compute_dtype
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv, window K.  x (B, S, C), w (K, C), b (C,).
+
+    If conv_state (B, K-1, C) is given (decode), it prefixes x and the new
+    state is returned."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * compute_dtype(w)[i] for i in range(K))
+    y = y + compute_dtype(b)
+    new_state = xp[:, -(K - 1) :] if K > 1 else None
+    return y, new_state
+
+
+# ===================================================================== Mamba-1
+def init_mamba1(key, cfg):
+    d, di, N = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    dtr = cfg.ssm_dt_rank
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), jnp.float32) * s,
+        "conv_w": jax.random.normal(ks[1], (K, di), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": jax.random.normal(ks[2], (di, dtr + 2 * N),
+                                    jnp.float32) / math.sqrt(di),
+        "dt_proj": jax.random.normal(ks[3], (dtr, di),
+                                     jnp.float32) / math.sqrt(dtr),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus ~ 0.01
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[4], (di, d),
+                                      jnp.float32) / math.sqrt(di),
+    }
+
+
+def _mamba1_scan_chunk(h_in, a, bx):
+    """Associative scan within a chunk.  a, bx (B, C, di, N); h_in (B, di, N).
+
+    h_t = a_t * h_{t-1} + bx_t.  Returns (h_all (B,C,di,N), h_out)."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    a_c, b_c = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h_all = a_c * h_in[:, None] + b_c
+    return h_all, h_all[:, -1]
+
+
+def mamba1_block(x, p, cfg, sh: Shardings):
+    """Training/prefill forward.  x (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    di, N, dtr = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_dt_rank
+    C = min(cfg.ssm_chunk, S)
+    assert S % C == 0
+    xz = x @ compute_dtype(p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = sh.constrain(xin, sh.batch, None, sh.model)
+    xin, _ = _causal_conv(xin, p["conv_w"], p["conv_b"])
+    xin = jax.nn.silu(xin)
+    dbc = xin @ compute_dtype(p["x_proj"])
+    dt_in, Bm, Cm = jnp.split(dbc, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_in @ compute_dtype(p["dt_proj"])).astype(jnp.float32)
+        + p["dt_bias"])                                   # (B,S,di) f32
+    A = -jnp.exp(p["A_log"])                              # (di, N)
+
+    nc = S // C
+    xin_c = xin.reshape(B, nc, C, di)
+    dt_c = dt.reshape(B, nc, C, di)
+    B_c = Bm.reshape(B, nc, C, N)
+    C_c = Cm.reshape(B, nc, C, N)
+
+    def chunk_step(h, inputs):
+        xc, dtc, bc, cc = inputs                          # (B,C,...)
+        a = jnp.exp(dtc[..., None] * A).astype(jnp.float32)   # (B,C,di,N)
+        bx = (dtc * xc.astype(jnp.float32))[..., None] \
+            * bc.astype(jnp.float32)[:, :, None, :]          # (B,C,di,N)
+        h_all, h_out = _mamba1_scan_chunk(h, a, bx)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all,
+                       cc.astype(jnp.float32))               # (B,C,di)
+        return h_out, y
+
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    xs = (jnp.moveaxis(xin_c, 1, 0), jnp.moveaxis(dt_c, 1, 0),
+          jnp.moveaxis(B_c, 1, 0), jnp.moveaxis(C_c, 1, 0))
+    _, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di).astype(x.dtype)
+    y = y + xin * compute_dtype(p["D"])
+    y = y * jax.nn.silu(z)
+    y = sh.constrain(y, sh.batch, None, sh.model)
+    out = y @ compute_dtype(p["out_proj"])
+    return sh.constrain(out, sh.batch, None, None)
+
+
+def mamba1_decode(x, p, cfg, sh: Shardings, state):
+    """x (B, 1, D); state {"h": (B,di,N) f32, "conv": (B,K-1,di)}."""
+    B = x.shape[0]
+    di, N, dtr = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_dt_rank
+    xz = x @ compute_dtype(p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin, conv_state = _causal_conv(xin, p["conv_w"], p["conv_b"],
+                                   state["conv"])
+    xin = jax.nn.silu(xin)
+    dbc = xin @ compute_dtype(p["x_proj"])
+    dt_in, Bm, Cm = jnp.split(dbc, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_in @ compute_dtype(p["dt_proj"])).astype(jnp.float32)
+        + p["dt_bias"])[:, 0]                             # (B, di)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None] * A)                        # (B,di,N)
+    bx = (dt * xin[:, 0].astype(jnp.float32))[..., None] \
+        * Bm[:, 0].astype(jnp.float32)[:, None, :]
+    h = a * state["h"] + bx
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32))
+    y = y[:, None].astype(x.dtype) + xin * compute_dtype(p["D"])
+    y = y * jax.nn.silu(z)
+    out = y @ compute_dtype(p["out_proj"])
+    return sh.constrain(out, sh.batch, None, None), \
+        {"h": h, "conv": conv_state}
+
+
+def init_mamba1_state(cfg, batch: int):
+    return {"h": jnp.zeros((batch, cfg.ssm_d_inner, cfg.ssm_state),
+                           jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_d_inner),
+                              jnp.bfloat16)}
+
+
+# ===================================================================== Mamba-2
+def init_mamba2(key, cfg):
+    d, di, N = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state
+    H = cfg.ssm_heads
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        # [x, z, B, C, dt]
+        "in_proj": jax.random.normal(
+            ks[0], (d, 2 * di + 2 * N + H), jnp.float32) * s,
+        "conv_w": jax.random.normal(ks[1], (K, di + 2 * N),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((di + 2 * N,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[2], (di, d),
+                                      jnp.float32) / math.sqrt(di),
+    }
+
+
+def mamba2_block(x, p, cfg, sh: Shardings):
+    """SSD chunked forward.  x (B, S, D) -> (B, S, D)."""
+    from .layers import rms_norm
+    B, S, D = x.shape
+    di, N, H = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = di // H
+    C = min(cfg.ssm_chunk, S)
+    assert S % C == 0
+    proj = x @ compute_dtype(p["in_proj"])
+    xin, z, Bm, Cm, dt_in = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xin, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    xin = sh.constrain(xin, sh.batch, None, sh.model)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                        # (H,)
+    la = dt * A                                                     # log-decay
+
+    nc = S // C
+    xh = xin.reshape(B, nc, C, H, P)
+    dtc = dt.reshape(B, nc, C, H)
+    lac = la.reshape(B, nc, C, H)
+    Bc = Bm.reshape(B, nc, C, N)
+    Cc = Cm.reshape(B, nc, C, N)
+
+    tri = jnp.tril(jnp.ones((C, C), jnp.float32))
+
+    def chunk_step(h, inputs):
+        xc, dtk, lak, bk, ck = inputs   # (B,C,H,P) (B,C,H) (B,C,H) (B,C,N) x2
+        cum = jnp.cumsum(lak, axis=1)                       # (B,C,H)
+        # intra-chunk: att[t,s] = (C_t . B_s) exp(cum_t - cum_s) dt_s, s<=t
+        cb = jnp.einsum("btn,bsn->bts", ck.astype(jnp.float32),
+                        bk.astype(jnp.float32))             # (B,C,C)
+        decay = jnp.exp(cum[:, :, None] - cum[:, None])     # (B,t,s,H)
+        att = cb[..., None] * decay * dtk[:, None]          # (B,t,s,H)
+        att = att * tri[None, :, :, None]
+        y = jnp.einsum("btsh,bshp->bthp", att,
+                       xc.astype(jnp.float32))              # (B,C,H,P)
+        # inter-chunk: y_t += C_t . (exp(cum_t) h_in)
+        y = y + jnp.einsum("btn,bhpn,bth->bthp", ck.astype(jnp.float32),
+                           h, jnp.exp(cum))
+        # state update
+        tot = cum[:, -1]                                    # (B,H)
+        hb = jnp.einsum("bsh,bsn,bshp->bhpn",
+                        jnp.exp(tot[:, None] - cum) * dtk,
+                        bk.astype(jnp.float32), xc.astype(jnp.float32))
+        h_out = jnp.exp(tot)[:, :, None, None] * h + hb
+        return h_out, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = tuple(jnp.moveaxis(v, 1, 0) for v in (xh, dtc, lac, Bc, Cc))
+    _, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di).astype(x.dtype)
+    y = y + xin * jnp.repeat(compute_dtype(p["D"]), P)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    out = y @ compute_dtype(p["out_proj"])
+    return sh.constrain(out, sh.batch, None, None)
+
+
+def mamba2_decode(x, p, cfg, sh: Shardings, state):
+    """x (B,1,D); state {"h": (B,H,P,N) f32, "conv": (B,K-1,di+2N)}."""
+    from .layers import rms_norm
+    B = x.shape[0]
+    di, N, H = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = di // H
+    proj = x @ compute_dtype(p["in_proj"])
+    xin, z, Bm, Cm, dt_in = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state["conv"])
+    xbc = jax.nn.silu(xbc)
+    xin, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt_in[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                   # (B,H)
+    xh = xin[:, 0].reshape(B, H, P).astype(jnp.float32)
+    hb = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm[:, 0].astype(jnp.float32), xh)
+    h = a[:, :, None, None] * state["h"] + hb
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = y + xin * jnp.repeat(compute_dtype(p["D"]), P)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    out = y @ compute_dtype(p["out_proj"])
+    return sh.constrain(out, sh.batch, None, None), \
+        {"h": h, "conv": conv_state}
+
+
+def init_mamba2_state(cfg, batch: int):
+    H, P = cfg.ssm_heads, cfg.ssm_d_inner // cfg.ssm_heads
+    return {"h": jnp.zeros((batch, H, P, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros(
+                (batch, cfg.ssm_conv - 1, cfg.ssm_d_inner + 2 * cfg.ssm_state),
+                jnp.bfloat16)}

@@ -1,0 +1,459 @@
+"""Model assembly: init, param sharding specs, forward, prefill, decode.
+
+All families share one pytree layout:
+  params = {
+    "embed"      : (V, D)  [tokens archs]           — sharded (None, model)
+    "blocks"     : stacked per-layer dicts (L, ...) — scanned
+    "shared_attn": {"ln", "attn"}                   [hybrid only, ONE copy]
+    "final_norm" : norm params
+    "lm_head"    : (D, V)                           — sharded (None, model)
+  }
+
+scan-over-layers keeps the HLO O(1) in depth (essential for 80-94-layer
+configs compiling on one CPU host); ``cfg.remat`` wraps the block body in
+jax.checkpoint with a dots-saveable policy for training memory.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, ssm
+from .layers import Shardings, compute_dtype
+from jax.sharding import PartitionSpec as P
+
+
+# ------------------------------------------------------------------ init
+def _init_block(key, cfg):
+    ks = jax.random.split(key, 4)
+    if cfg.family in ("dense", "encoder"):
+        return {"ln1": layers.init_norm(ks[0], cfg.d_model, cfg.norm),
+                "attn": layers.init_attention(ks[1], cfg),
+                "ln2": layers.init_norm(ks[2], cfg.d_model, cfg.norm),
+                "mlp": layers.init_mlp(ks[3], cfg)}
+    if cfg.family == "moe":
+        return {"ln1": layers.init_norm(ks[0], cfg.d_model, cfg.norm),
+                "attn": layers.init_attention(ks[1], cfg),
+                "ln2": layers.init_norm(ks[2], cfg.d_model, cfg.norm),
+                "moe": layers.init_moe(ks[3], cfg)}
+    if cfg.family == "ssm":
+        return {"ln1": layers.init_norm(ks[0], cfg.d_model, cfg.norm),
+                "mamba": ssm.init_mamba1(ks[1], cfg)}
+    if cfg.family == "hybrid":
+        return {"ln1": layers.init_norm(ks[0], cfg.d_model, cfg.norm),
+                "mamba": ssm.init_mamba2(ks[1], cfg)}
+    raise ValueError(cfg.family)
+
+
+def init_params(cfg, key):
+    k_emb, k_blocks, k_head, k_shared = jax.random.split(key, 4)
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    params = {
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg))(block_keys),
+        "final_norm": layers.init_norm(k_head, cfg.d_model, cfg.norm),
+        "lm_head": jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab_size), jnp.float32)
+        / (cfg.d_model ** 0.5),
+    }
+    if cfg.input_kind == "tokens":
+        params["embed"] = jax.random.normal(
+            k_emb, (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02
+    if cfg.family == "hybrid":
+        params["shared_attn"] = {
+            "ln": layers.init_norm(k_shared, cfg.d_model, cfg.norm),
+            "attn": layers.init_attention(k_shared, cfg)}
+    return params
+
+
+def abstract_params(cfg, key=None):
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg),
+        jax.random.key(0) if key is None else key)
+
+
+# ------------------------------------------------------- sharding specs
+# Parameters shard 2-D: TP over ``model`` (output/contract dims) x ZeRO-3
+# over ``fsdp`` (the other large dim).  GSPMD all-gathers the fsdp shards at
+# use and reduce-scatters gradients back — optimizer state stays fully
+# sharded, which is what lets 72B/235B param configs fit 16 GiB chips.
+def _attn_specs(cfg, sh: Shardings, prefix=()):
+    m, f = sh.model, sh.fsdp
+    pre = lambda s: P(*(prefix + tuple(s)))
+    out = {"wq": pre((f, m)), "wk": pre((f, m)), "wv": pre((f, m)),
+           "wo": pre((m, f))}
+    if cfg.qk_norm:
+        out["q_norm"] = pre((None,))
+        out["k_norm"] = pre((None,))
+    return out
+
+
+def _norm_specs(cfg, prefix=()):
+    if cfg.norm == "ln_nonparam":
+        return {}
+    return {"scale": P(*(prefix + (None,)))}
+
+
+def _block_specs(cfg, sh: Shardings):
+    m, f = sh.model, sh.fsdp
+    pre = (None,)  # stacked layer axis
+    if cfg.family in ("dense", "encoder"):
+        return {"ln1": _norm_specs(cfg, pre),
+                "attn": _attn_specs(cfg, sh, pre),
+                "ln2": _norm_specs(cfg, pre),
+                "mlp": {"wi": P(None, f, m), "wg": P(None, f, m),
+                        "wo": P(None, m, f)}}
+    if cfg.family == "moe":
+        return {"ln1": _norm_specs(cfg, pre),
+                "attn": _attn_specs(cfg, sh, pre),
+                "ln2": _norm_specs(cfg, pre),
+                "moe": {"router": P(None, f, None),
+                        "wi": P(None, m, f, None),
+                        "wg": P(None, m, f, None),
+                        "wo": P(None, m, None, f)}}
+    if cfg.family == "ssm":
+        return {"ln1": _norm_specs(cfg, pre),
+                "mamba": {"in_proj": P(None, f, m),
+                          "conv_w": P(None, None, m),
+                          "conv_b": P(None, m),
+                          "x_proj": P(None, m, f),
+                          "dt_proj": P(None, f, m),
+                          "dt_bias": P(None, m),
+                          "A_log": P(None, m, None),
+                          "D": P(None, m),
+                          "out_proj": P(None, m, f)}}
+    if cfg.family == "hybrid":
+        return {"ln1": _norm_specs(cfg, pre),
+                "mamba": {"in_proj": P(None, f, m),
+                          "conv_w": P(None, None, None),
+                          "conv_b": P(None, None),
+                          "dt_bias": P(None, None),
+                          "A_log": P(None, None),
+                          "D": P(None, None),
+                          "norm_scale": P(None, m),
+                          "out_proj": P(None, m, f)}}
+    raise ValueError(cfg.family)
+
+
+def param_specs(cfg, sh: Shardings):
+    m, f = sh.model, sh.fsdp
+    vocab_m = sh.maybe_model(cfg.vocab_size)  # hubert's 504 stays unsharded
+    specs = {
+        "blocks": _block_specs(cfg, sh),
+        "final_norm": _norm_specs(cfg),
+        "lm_head": P(f, vocab_m if vocab_m else None),
+    }
+    if cfg.input_kind == "tokens":
+        # column-sharded: row gather stays local (no one-hot rewrite / table
+        # all-gather); the vocab axis is sharded only at the unembed.
+        specs["embed"] = P(f, m)
+    if cfg.family == "hybrid":
+        specs["shared_attn"] = {"ln": _norm_specs(cfg),
+                                "attn": _attn_specs(cfg, sh)}
+    return specs
+
+
+# ------------------------------------------------------------- forward
+_KEEP_F32 = {"A_log", "dt_bias", "conv_b", "D", "scale", "norm_scale",
+             "q_norm", "k_norm", "router"}
+
+
+def cast_params(params):
+    """bf16-cast the large matrices ONCE, outside the layer scan — FSDP
+    all-gathers then move bf16, halving gather traffic and the per-layer
+    gathered-weights footprint.  Precision-sensitive leaves stay f32."""
+    def cast(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in _KEEP_F32 or leaf.dtype != jnp.float32:
+            return leaf
+        return leaf.astype(jnp.bfloat16)
+    return jax.tree_util.tree_map_with_path(cast, params)
+
+
+def _block_fwd(x, pl, cfg, sh: Shardings):
+    """One layer. Returns (x, aux)."""
+    aux = jnp.float32(0.0)
+    if cfg.family in ("dense", "encoder"):
+        h = layers.apply_norm(x, pl["ln1"], cfg.norm)
+        x = x + layers.attention(h, pl["attn"], cfg, sh, causal=cfg.causal)
+        h = layers.apply_norm(x, pl["ln2"], cfg.norm)
+        x = x + layers.mlp(h, pl["mlp"], sh)
+    elif cfg.family == "moe":
+        h = layers.apply_norm(x, pl["ln1"], cfg.norm)
+        x = x + layers.attention(h, pl["attn"], cfg, sh, causal=cfg.causal)
+        h = layers.apply_norm(x, pl["ln2"], cfg.norm)
+        y, aux = layers.moe(h, pl["moe"], cfg, sh)
+        x = x + y
+    elif cfg.family == "ssm":
+        h = layers.apply_norm(x, pl["ln1"], cfg.norm)
+        x = x + ssm.mamba1_block(h, pl["mamba"], cfg, sh)
+    elif cfg.family == "hybrid":
+        h = layers.apply_norm(x, pl["ln1"], cfg.norm)
+        x = x + ssm.mamba2_block(h, pl["mamba"], cfg, sh)
+    return x, aux
+
+
+def _scan_blocks(x, blocks, cfg, sh: Shardings):
+    """Depth scan with sqrt(L) two-level remat.
+
+    Per-layer jax.checkpoint alone still saves the (L, B, S, D) carry stack
+    for the backward pass; nesting a second checkpoint around segments of
+    ~sqrt(L) layers cuts the saved stack to O(sqrt(L)) segment boundaries
+    plus one transient segment during its backward — the classic
+    sqrt-remat trade (a few % extra recompute for ~L/(2*sqrt(L)) less
+    carry memory).
+    """
+    fn = functools.partial(_block_fwd, cfg=cfg, sh=sh)
+    if cfg.remat:
+        fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(carry, pl):
+        x, aux = carry
+        # barrier: stops XLA hoisting the FSDP weight all-gather out of the
+        # loop (LICM would materialize the *full* gathered weight stack —
+        # tens of GiB at 72B scale — defeating ZeRO-3).
+        pl = jax.lax.optimization_barrier(pl)
+        if sh.seq:
+            # sequence parallelism: carries live seq-sharded on the model
+            # axis; GSPMD all-gathers around attention and reduce-scatters
+            # after the projections (perf variant, see EXPERIMENTS.md §Perf)
+            x = sh.constrain(x, sh.batch, sh.seq, None)
+        x, a = fn(x, pl)
+        return (x, aux + a), None
+
+    def seq(x, aux, blks):
+        (x, aux), _ = jax.lax.scan(body, (x, aux), blks)
+        return x, aux
+
+    L = jax.tree.leaves(blocks)[0].shape[0]
+    if not cfg.remat or L < 16:
+        return seq(x, jnp.float32(0.0), blocks)
+
+    s = max(int(L ** 0.5 + 0.5), 1)
+    k = L // s
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def seg_fn(x, aux, seg):
+        return seq(x, aux, seg)
+
+    main = jax.tree.map(
+        lambda a: a[: k * s].reshape((k, s) + a.shape[1:]), blocks)
+
+    def outer(carry, seg):
+        x, aux = carry
+        x, aux = seg_fn(x, aux, seg)
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(outer, (x, jnp.float32(0.0)), main)
+    if L - k * s:
+        rest = jax.tree.map(lambda a: a[k * s :], blocks)
+        x, aux = seg_fn(x, aux, rest)
+    return x, aux
+
+
+def _shared_attn(x, p, cfg, sh: Shardings):
+    h = layers.apply_norm(x, p["ln"], cfg.norm)
+    return x + layers.attention(h, p["attn"], cfg, sh, causal=cfg.causal)
+
+
+def forward(params, batch, cfg, sh: Shardings = layers.NO_SHARD,
+            last_only: bool = False):
+    """Training/prefill forward pass -> (logits, aux).
+
+    ``last_only``: unembed only the final position (prefill serving) — the
+    (B, S, V) logits tensor is never materialized."""
+    params = cast_params(params)
+    if cfg.input_kind == "tokens":
+        x = compute_dtype(params["embed"])[batch["tokens"]]
+    else:
+        x = batch["embeds"].astype(jnp.bfloat16)
+    x = sh.constrain(x, sh.batch, None, None)
+
+    if cfg.family == "hybrid" and cfg.attn_every:
+        n_seg = cfg.n_layers // cfg.attn_every
+        seg_blocks = jax.tree.map(
+            lambda a: a.reshape((n_seg, cfg.attn_every) + a.shape[1:]),
+            params["blocks"])
+        aux = jnp.float32(0.0)
+        for s in range(n_seg):
+            seg = jax.tree.map(lambda a: a[s], seg_blocks)
+            x, a = _scan_blocks(x, seg, cfg, sh)
+            x = _shared_attn(x, params["shared_attn"], cfg, sh)
+            aux = aux + a
+    else:
+        x, aux = _scan_blocks(x, params["blocks"], cfg, sh)
+
+    x = layers.apply_norm(x, params["final_norm"], cfg.norm)
+    if last_only:
+        x = x[:, -1:]
+    logits = x @ compute_dtype(params["lm_head"])
+    logits = sh.constrain(logits, sh.batch, None, sh.model)
+    return logits, aux
+
+
+# ------------------------------------------------------------- serving
+def init_cache(cfg, batch: int, max_seq: int, abstract: bool = False,
+               kv_quant: bool = False):
+    """Per-layer decode state, stacked on the layer axis.
+
+    ``kv_quant``: int8 KV cache + per-(token, head) f32 scales (beyond-paper
+    decode optimization; see layers.decode_attention)."""
+    def mk(shape, dtype):
+        return (jax.ShapeDtypeStruct(shape, dtype) if abstract
+                else jnp.zeros(shape, dtype))
+
+    L = cfg.n_layers
+
+    def kv():
+        shp = (L, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+        if kv_quant:
+            sshp = (L, batch, max_seq, cfg.n_kv_heads, 1)
+            return {"k": mk(shp, jnp.int8), "v": mk(shp, jnp.int8),
+                    "k_scale": mk(sshp, jnp.float32),
+                    "v_scale": mk(sshp, jnp.float32)}
+        return {"k": mk(shp, jnp.bfloat16), "v": mk(shp, jnp.bfloat16)}
+    if cfg.family in ("dense", "moe", "encoder"):
+        return {"attn": kv()}
+    if cfg.family == "ssm":
+        return {"ssm": {
+            "h": mk((L, batch, cfg.ssm_d_inner, cfg.ssm_state), jnp.float32),
+            "conv": mk((L, batch, cfg.ssm_conv - 1, cfg.ssm_d_inner),
+                       jnp.bfloat16)}}
+    if cfg.family == "hybrid":
+        n_sites = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+        di2 = cfg.ssm_d_inner + 2 * cfg.ssm_state
+        c = {"ssm": {
+            "h": mk((L, batch, cfg.ssm_heads,
+                     cfg.ssm_d_inner // cfg.ssm_heads, cfg.ssm_state),
+                    jnp.float32),
+            "conv": mk((L, batch, cfg.ssm_conv - 1, di2), jnp.bfloat16)}}
+        if n_sites:
+            c["attn"] = {
+                "k": mk((n_sites, batch, max_seq, cfg.n_kv_heads,
+                         cfg.head_dim), jnp.bfloat16),
+                "v": mk((n_sites, batch, max_seq, cfg.n_kv_heads,
+                         cfg.head_dim), jnp.bfloat16)}
+        return c
+    raise ValueError(cfg.family)
+
+
+def cache_specs(cfg, sh: Shardings, seq_shard_axes: Sequence[str] = (),
+                kv_quant: bool = False):
+    """PartitionSpecs matching init_cache structure.
+
+    KV caches shard on the kv-head axis when the head count divides the
+    model axis; otherwise the *sequence* axis takes the model axis
+    (distributed flash-decode — GSPMD inserts the softmax-stat reductions).
+    ``seq_shard_axes`` (long_500k) forces sequence sharding on those axes.
+    """
+    seq = tuple(seq_shard_axes) if seq_shard_axes else None
+    heads = sh.maybe_model(cfg.n_kv_heads) if cfg.n_kv_heads else ()
+    if seq is None and not heads and sh.model:
+        seq = sh.model
+    kvspec = P(None, sh.batch if not seq_shard_axes else None, seq,
+               heads if heads else None, None)
+    if cfg.family in ("dense", "moe", "encoder"):
+        d = {"attn": {"k": kvspec, "v": kvspec}}
+        if kv_quant:
+            d["attn"]["k_scale"] = kvspec
+            d["attn"]["v_scale"] = kvspec
+        return d
+    if cfg.family == "ssm":
+        return {"ssm": {"h": P(None, sh.batch, sh.model, None),
+                        "conv": P(None, sh.batch, None, sh.model)}}
+    if cfg.family == "hybrid":
+        c = {"ssm": {"h": P(None, sh.batch, None, None, None),
+                     "conv": P(None, sh.batch, None, None)}}
+        if cfg.attn_every:
+            c["attn"] = {"k": kvspec, "v": kvspec}
+        return c
+    raise ValueError(cfg.family)
+
+
+def _block_decode(x, pl, cache_l, pos, cfg, sh, seq_shard_axes):
+    if cfg.family in ("dense", "moe", "encoder"):
+        h = layers.apply_norm(x, pl["ln1"], cfg.norm)
+        a, kv = layers.decode_attention(h, pl["attn"], cfg, sh,
+                                        cache_l["attn"], pos,
+                                        seq_shard_axes=seq_shard_axes)
+        x = x + a
+        h = layers.apply_norm(x, pl["ln2"], cfg.norm)
+        if cfg.family == "moe":
+            # decode batches are tiny: provision full capacity (no drops)
+            y, _ = layers.moe(h, pl["moe"], cfg, sh,
+                              capacity_factor=cfg.n_experts / cfg.top_k)
+        else:
+            y = layers.mlp(h, pl["mlp"], sh)
+        x = x + y
+        return x, {"attn": kv}
+    if cfg.family == "ssm":
+        h = layers.apply_norm(x, pl["ln1"], cfg.norm)
+        y, st = ssm.mamba1_decode(h, pl["mamba"], cfg, sh, cache_l["ssm"])
+        return x + y, {"ssm": st}
+    if cfg.family == "hybrid":
+        h = layers.apply_norm(x, pl["ln1"], cfg.norm)
+        y, st = ssm.mamba2_decode(h, pl["mamba"], cfg, sh, cache_l["ssm"])
+        return x + y, {"ssm": st}
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, cache, token, pos, cfg,
+                sh: Shardings = layers.NO_SHARD,
+                seq_shard_axes: Sequence[str] = ()):
+    """One-token decode. token (B, 1) int32 (or embeds (B,1,D)); pos scalar.
+
+    Returns (logits (B, 1, V), new_cache)."""
+    params = cast_params(params)
+    if cfg.input_kind == "tokens":
+        x = compute_dtype(params["embed"])[token]
+    else:
+        x = token.astype(jnp.bfloat16)
+    x = sh.constrain(x, sh.batch, None, None)
+
+    def body(x, inputs):
+        pl, cache_l = inputs
+        x, new_c = _block_decode(x, pl, cache_l, pos, cfg, sh,
+                                 seq_shard_axes)
+        return x, new_c
+
+    if cfg.family == "hybrid" and cfg.attn_every:
+        n_seg = cfg.n_layers // cfg.attn_every
+        seg_blocks = jax.tree.map(
+            lambda a: a.reshape((n_seg, cfg.attn_every) + a.shape[1:]),
+            params["blocks"])
+        seg_ssm = jax.tree.map(
+            lambda a: a.reshape((n_seg, cfg.attn_every) + a.shape[1:]),
+            cache["ssm"])
+        new_ssm, new_k, new_v = [], [], []
+        for s in range(n_seg):
+            seg = jax.tree.map(lambda a: a[s], seg_blocks)
+            seg_c = {"ssm": jax.tree.map(lambda a: a[s], seg_ssm)}
+            x, nc = jax.lax.scan(
+                lambda xx, ins: body(xx, (ins[0], {"ssm": ins[1]})),
+                x, (seg, seg_c["ssm"]))
+            new_ssm.append(nc["ssm"])
+            h = layers.apply_norm(x, params["shared_attn"]["ln"], cfg.norm)
+            site_cache = {"k": cache["attn"]["k"][s],
+                          "v": cache["attn"]["v"][s]}
+            a, kv = layers.decode_attention(
+                h, params["shared_attn"]["attn"], cfg, sh, site_cache, pos,
+                seq_shard_axes=seq_shard_axes)
+            x = x + a
+            new_k.append(kv["k"])
+            new_v.append(kv["v"])
+        new_cache = {
+            "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                                *new_ssm),
+            "attn": {"k": jnp.stack(new_k), "v": jnp.stack(new_v)}}
+    else:
+        x, new_inner = jax.lax.scan(body, x, (params["blocks"], cache))
+        new_cache = new_inner
+
+    x = layers.apply_norm(x, params["final_norm"], cfg.norm)
+    logits = x @ compute_dtype(params["lm_head"])
+    logits = sh.constrain(logits, sh.batch, None, sh.model)
+    return logits, new_cache

@@ -1,0 +1,153 @@
+"""AdamW with global-norm clipping and cosine schedule — pure JAX.
+
+Optimizer state lives in fp32 (params too); sharding of the state follows
+the param specs 1:1 (the launcher maps param_specs over (m, v)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+    global_norm: Callable
+
+
+def adafactor(lr=1e-2, decay_pow=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0, warmup=100,
+              total_steps=10_000) -> Optimizer:
+    """Adafactor (Shazeer & Stern 2018), momentum-free, factored 2nd moment.
+
+    Optimizer state is O(rows + cols) per matrix instead of O(rows * cols) —
+    the difference between a 235B-param config fitting a 16 GiB chip
+    (~3.5 GiB param+state/device at 256-way sharding) and not (~10.3 GiB
+    with Adam's full m, v).  State leaves per param: (vr, vc); for <2-D
+    params vr holds the full second moment and vc is a scalar dummy.
+    """
+    sched = cosine_schedule(lr, warmup, total_steps)
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def per(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"vr": jnp.zeros_like(p, dtype=jnp.float32),
+                    "vc": jnp.zeros((), jnp.float32)}
+        return jax.tree.map(per, params)
+
+    def global_norm(tree):
+        leaves = jax.tree.leaves(tree)
+        return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                            for l in leaves))
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1
+        beta2 = 1.0 - t ** (-decay_pow)
+        lr_t = sched(step)
+
+        def per(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                  eps)[..., None])
+                u = g / jnp.maximum(denom, eps)
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                vr = beta2 * st["vr"] + (1 - beta2) * g2
+                u = g / jnp.sqrt(vr + eps)
+                new_st = {"vr": vr, "vc": st["vc"]}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            upd = -lr_t * u - lr_t * weight_decay * p
+            return upd.astype(p.dtype), new_st
+
+        flat_u, flat_s = [], []
+        g_l, s_l, p_l = (jax.tree.leaves(grads),
+                         jax.tree.leaves(state,
+                                         is_leaf=lambda x: isinstance(x, dict)
+                                         and "vr" in x),
+                         jax.tree.leaves(params))
+        for g, st, p in zip(g_l, s_l, p_l):
+            u, ns = per(g, st, p)
+            flat_u.append(u)
+            flat_s.append(ns)
+        treedef = jax.tree.structure(params)
+        return (jax.tree.unflatten(treedef, flat_u),
+                jax.tree.unflatten(treedef, flat_s))
+
+    return Optimizer(init=init, update=update, global_norm=global_norm)
+
+
+def adafactor_state_specs(pspecs):
+    """PartitionSpecs for adafactor state given the param spec tree."""
+    from jax.sharding import PartitionSpec as P
+
+    def per(s):
+        s = tuple(s)
+        vr = P(*s[:-1]) if len(s) >= 2 else P(*s)
+        vc = P(*(s[:-2] + s[-1:])) if len(s) >= 2 else P()
+        return {"vr": vr, "vc": vc}
+
+    return jax.tree.map(per, pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          clip_norm=1.0, warmup=100, total_steps=10_000) -> Optimizer:
+    sched = cosine_schedule(lr, warmup, total_steps)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def global_norm(tree):
+        leaves = jax.tree.leaves(tree)
+        return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                            for l in leaves))
+
+    def update(grads, state, params, step):
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        m = jax.tree.map(lambda mu, g: b1 * mu + (1 - b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda nu, g: b2 * nu + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+        t = step.astype(jnp.float32) + 1
+        mhat_s = 1.0 / (1 - b1 ** t)
+        vhat_s = 1.0 / (1 - b2 ** t)
+        lr_t = sched(step)
+        updates = jax.tree.map(
+            lambda mu, nu, p: -lr_t * (mu * mhat_s /
+                                       (jnp.sqrt(nu * vhat_s) + eps)
+                                       + weight_decay * p),
+            m, v, params)
+        return updates, {"m": m, "v": v}
+
+    return Optimizer(init=init, update=update, global_norm=global_norm)

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# src/ layout without installation
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

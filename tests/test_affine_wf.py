@@ -1,0 +1,134 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.affine_wf import (OP_DEL, OP_INS, OP_MATCH, OP_NONE, OP_SUB,
+                                  alignment_cost, banded_affine,
+                                  banded_affine_numpy, full_affine_numpy,
+                                  traceback, traceback_numpy)
+
+
+def _make_pair(r, n, eth, n_edits):
+    s1 = r.integers(0, 4, n).astype(np.uint8)
+    lst = list(np.concatenate([r.integers(0, 4, eth), s1,
+                               r.integers(0, 4, eth)]))
+    for _ in range(n_edits):
+        p = int(r.integers(eth, eth + n - 2))
+        t = int(r.integers(0, 3))
+        if t == 0:
+            lst[p] = int(r.integers(0, 4))
+        elif t == 1:
+            lst.insert(p, int(r.integers(0, 4)))
+        else:
+            del lst[p]
+    win = np.array((lst + [0] * (n + 2 * eth))[: n + 2 * eth], dtype=np.uint8)
+    return s1, win
+
+
+@given(st.integers(0, 10 ** 6), st.integers(10, 50), st.integers(0, 4))
+@settings(max_examples=30, deadline=None)
+def test_jnp_matches_numpy_including_directions(seed, n, edits):
+    r = np.random.default_rng(seed)
+    eth, sat = 6, 32
+    s1, win = _make_pair(r, n, eth, edits)
+    Db, dirs_np, d_np = banded_affine_numpy(s1, win, eth, sat)
+    de, dm, dirs = banded_affine(jnp.array(s1), jnp.array(win), eth=eth,
+                                 sat=sat)
+    assert int(de) == d_np
+    assert (np.array(dirs) == dirs_np).all()
+
+
+@given(st.integers(0, 10 ** 6), st.integers(10, 40))
+@settings(max_examples=25, deadline=None)
+def test_band_matches_full_gotoh_in_band(seed, n):
+    r = np.random.default_rng(seed)
+    eth, sat = 8, 32
+    s1, win = _make_pair(r, n, eth, int(r.integers(0, 3)))
+    _, _, d_band = banded_affine_numpy(s1, win, eth, sat)
+    D, _, _ = full_affine_numpy(s1, win[eth : eth + n])
+    if D[n, n] <= eth:  # optimal path provably inside the band
+        assert d_band == D[n, n]
+
+
+@given(st.integers(0, 10 ** 6), st.integers(10, 50), st.integers(0, 4))
+@settings(max_examples=30, deadline=None)
+def test_traceback_cost_equals_distance(seed, n, edits):
+    """The reconstructed alignment's affine cost equals the DP distance —
+    the traceback-validity property (paper contribution 4)."""
+    r = np.random.default_rng(seed)
+    eth, sat = 6, 32
+    s1, win = _make_pair(r, n, eth, edits)
+    _, dirs_np, d_np = banded_affine_numpy(s1, win, eth, sat)
+    if d_np >= sat:
+        return
+    ops = traceback_numpy(dirs_np, eth, n)
+    assert alignment_cost(ops) == d_np
+    # ops consume exactly n read chars (match/sub/ins)
+    consumed = sum(1 for o in ops if o in (OP_MATCH, OP_SUB, OP_INS))
+    assert consumed == n
+    # jax traceback agrees
+    opsj, k = traceback(jnp.array(dirs_np)[None], eth)
+    oj = [int(x) for x in np.array(opsj[0]) if x != OP_NONE]
+    assert alignment_cost(oj) == d_np
+    assert int(k[0]) == len(oj)
+
+
+@given(st.integers(0, 10 ** 6), st.integers(10, 40))
+@settings(max_examples=20, deadline=None)
+def test_traceback_reconstructs_reference(seed, n):
+    """Replaying ops against the read must regenerate the aligned reference
+    span (match ops copy read chars; they must equal the window chars)."""
+    r = np.random.default_rng(seed)
+    eth, sat = 6, 32
+    s1, win = _make_pair(r, n, eth, int(r.integers(0, 3)))
+    _, dirs_np, d_np = banded_affine_numpy(s1, win, eth, sat)
+    if d_np >= sat:
+        return
+    ops = traceback_numpy(dirs_np, eth, n)
+    i = j = 0  # j indexes the diagonal-aligned window s2 = win[eth:]
+    s2 = win[eth:]
+    for op in ops:
+        if op == OP_MATCH:
+            assert s1[i] == s2[j], (i, j)
+            i += 1
+            j += 1
+        elif op == OP_SUB:
+            assert s1[i] != s2[j]
+            i += 1
+            j += 1
+        elif op == OP_INS:
+            i += 1
+        elif op == OP_DEL:
+            j += 1
+    assert i == n and j == n
+
+
+def test_affine_prefers_contiguous_gaps():
+    """Affine model: a 2-insertion run + 2-deletion run (cost 3+3=6) must
+    beat the 8-substitution positional alignment (cost 8) — checks the
+    M1/M2 machinery is actually affine with gap runs, not char-by-char."""
+    origin = np.array([0, 1, 2, 3] * 3, dtype=np.uint8)       # period 4
+    # read: first 4 chars, insert [3,3], then origin[4:10] (drops the tail)
+    s1 = np.concatenate([origin[:4], [3, 3], origin[4:10]]).astype(np.uint8)
+    assert len(s1) == 12
+    eth = 4
+    win = np.concatenate([np.full(eth, 4), origin,
+                          np.full(eth, 4)]).astype(np.uint8)
+    _, dirs, d = banded_affine_numpy(s1, win, eth, 32)
+    assert d == 6  # w_op + 2*w_ex twice, not 8 substitutions
+    ops = traceback_numpy(dirs, eth, len(s1))
+    assert alignment_cost(ops) == 6
+
+    def runs_of(code):
+        runs, prev = [], None
+        for o in ops:
+            if o == code:
+                if prev == code:
+                    runs[-1] += 1
+                else:
+                    runs.append(1)
+            prev = o
+        return runs
+
+    assert 2 in runs_of(OP_INS)
+    assert 2 in runs_of(OP_DEL)

@@ -1,0 +1,33 @@
+"""Property tests for the distributed seeding exchange primitives."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distributed import _bucket_by_dst
+
+
+@given(st.integers(0, 10 ** 6), st.integers(1, 8), st.integers(1, 16))
+@settings(max_examples=25, deadline=None)
+def test_bucket_by_dst_invariants(seed, n_shards, cap):
+    r = np.random.default_rng(seed)
+    E = int(r.integers(1, 60))
+    dst = jnp.asarray(r.integers(0, n_shards + 1, E), jnp.int32)  # +1=drop
+    payload = {"x": jnp.asarray(r.integers(0, 1000, E), jnp.int32)}
+    out, dropped = _bucket_by_dst(dst, payload, n_shards, cap)
+    x = np.asarray(out["x"])
+    valid = np.asarray(out["valid"])
+    d = np.asarray(dst)
+    # 1. conservation: valid slots + dropped == in-range entries
+    n_in = int((d < n_shards).sum())
+    assert int(valid.sum()) + int(dropped) == n_in
+    # 2. no bucket exceeds capacity
+    assert valid.sum(axis=1).max(initial=0) <= cap
+    # 3. every valid payload value really was sent to that shard
+    for s in range(n_shards):
+        sent = sorted(np.asarray(payload["x"])[d == s][:cap].tolist())
+        got = sorted(x[s][valid[s]].tolist())
+        assert got == sent, (s, got, sent)
+    # 4. dropped only when over capacity
+    for s in range(n_shards):
+        n_s = int((d == s).sum())
+        assert valid[s].sum() == min(n_s, cap)

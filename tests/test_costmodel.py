@@ -1,0 +1,83 @@
+"""Cost-model reproduction of the paper's own numbers (Tables I/IV, Figs 9-10).
+
+These are the validation points for the faithful reproduction: the analytic
+model must land on the published values.
+"""
+import numpy as np
+import pytest
+
+from repro.core import costmodel as cm
+
+
+def test_algorithm1_cell_cost_closed_form():
+    # paper: 37b + 19 ops per linear WF cell; b=3 -> 130
+    assert cm.linear_wf_cell_ops_closed(3) == 130
+    assert cm.linear_wf_cell_ops_closed(8) == 315
+
+
+def test_table_iv_linear_cycles_exact():
+    lin = cm.linear_wf_cycles()
+    assert lin["cells"] == 1950                     # 13 x 150
+    assert lin["magic_cycles"] == 254_585           # paper Table IV
+    assert lin["total_cycles"] == 258_620
+    assert lin["energy_J"] == pytest.approx(45.9e-9, rel=0.01)
+
+
+def test_table_iv_affine():
+    aff = cm.affine_wf_cycles()
+    assert aff["total_cycles"] == 1_308_699
+    assert aff["energy_J"] == pytest.approx(229e-9, rel=0.01)
+
+
+@pytest.mark.parametrize("max_reads,t_paper", [(12.5e3, 43.8), (50e3, 174.0)])
+def test_execution_time_vs_paper(max_reads, t_paper):
+    est = cm.dart_pim_system(max_reads=max_reads)
+    assert est.exec_time_s == pytest.approx(t_paper, rel=0.05)
+
+
+def test_energy_vs_paper_range():
+    # paper: 20.8 kJ (12.5k) .. 34.9 kJ (50k)
+    lo = cm.dart_pim_system(max_reads=12.5e3).energy_J
+    hi = cm.dart_pim_system(max_reads=50e3).energy_J
+    assert lo == pytest.approx(20.8e3, rel=0.10)
+    assert hi == pytest.approx(34.9e3, rel=0.10)
+
+
+def test_headline_speedups():
+    st = cm.speedup_table(25e3)
+    # paper Sec. VII-C: 227x / 5.7x / 334x / 257x vs minimap2 / Parabricks /
+    # GenASM / SeGraM
+    assert st["minimap2"]["speedup"] == pytest.approx(227, rel=0.05)
+    assert st["parabricks"]["speedup"] == pytest.approx(5.7, rel=0.05)
+    assert st["genasm"]["speedup"] == pytest.approx(334, rel=0.05)
+    assert st["segram"]["speedup"] == pytest.approx(257, rel=0.05)
+
+
+def test_energy_efficiency_vs_paper():
+    st = cm.speedup_table(25e3)
+    assert st["minimap2"]["energy_eff"] == pytest.approx(90.6, rel=0.10)
+    assert st["segram"]["energy_eff"] == pytest.approx(20.7, rel=0.10)
+
+
+def test_sw_vs_wf_latency_claim():
+    # paper Sec. IV-B: linear WF ~2.8x lower latency than in-memory SW —
+    # bit-width model gives 2.4x; the remainder comes from the two-row SW
+    # layout, so assert the modelled range.
+    r = cm.sw_vs_wf_latency_ratio()
+    assert 2.0 < r < 3.0
+    assert 2 * cm.linear_wf_cell_ops_closed(8) / (
+        2 * cm.linear_wf_cell_ops_closed(3)) == pytest.approx(r)
+
+
+def test_area_total():
+    est = cm.dart_pim_system()
+    assert est.area_mm2 == pytest.approx(8182, rel=0.01)  # paper: ~8170 mm^2
+
+
+def test_full_system_simulation_caps():
+    reads = np.array([30_000, 10_000, 50])
+    pls = np.array([64, 200, 8])
+    k_l, k_a, j_l, j_a = cm.full_system_simulation(reads, pls,
+                                                   max_reads=25_000)
+    assert k_l == 10_000 * 7          # bottleneck: 200 PLs -> 7 iterations
+    assert j_a == 25_000 + 10_000 + 50

@@ -1,0 +1,91 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+rng = np.random.default_rng(11)
+
+
+def _pair_batch(R, n, eth, near=True):
+    s1 = rng.integers(0, 4, (R, n)).astype(np.uint8)
+    s2 = rng.integers(0, 4, (R, n + 2 * eth)).astype(np.uint8)
+    if near:
+        s2[: R // 2, eth : eth + n] = s1[: R // 2]
+        for r in range(R // 2):
+            for _ in range(int(rng.integers(0, 4))):
+                s2[r, eth + int(rng.integers(0, n))] = rng.integers(0, 4)
+    return s1, s2
+
+
+@pytest.mark.parametrize("R,n,eth,block_r", [
+    (33, 24, 6, 32),
+    (64, 40, 6, 64),
+    (128, 50, 4, 128),
+    (16, 30, 8, 16),
+])
+def test_linear_wf_kernel_sweep(R, n, eth, block_r):
+    s1, s2 = _pair_batch(R, n, eth)
+    de, dm = ops.linear_wf(jnp.array(s1), jnp.array(s2), eth=eth,
+                           block_r=block_r)
+    r = ref.linear_wf_ref(jnp.array(s1).T, jnp.array(s2).T, eth=eth)
+    np.testing.assert_array_equal(np.array(de), np.array(r[0]))
+    np.testing.assert_array_equal(np.array(dm), np.array(r[1]))
+
+
+@pytest.mark.parametrize("R,n,eth,sat,block_r", [
+    (17, 24, 6, 32, 32),
+    (32, 40, 4, 16, 32),
+    (64, 30, 6, 32, 64),
+])
+def test_affine_wf_kernel_sweep(R, n, eth, sat, block_r):
+    s1, s2 = _pair_batch(R, n, eth)
+    de, dm, dirs = ops.affine_wf(jnp.array(s1), jnp.array(s2), eth=eth,
+                                 sat=sat, block_r=block_r)
+    rd, rdirs = ref.affine_wf_ref(jnp.array(s1).T, jnp.array(s2).T,
+                                  eth=eth, sat=sat)
+    band = 2 * eth + 1
+    np.testing.assert_array_equal(np.array(de), np.array(rd[0]))
+    np.testing.assert_array_equal(np.array(dm), np.array(rd[1]))
+    np.testing.assert_array_equal(
+        np.array(dirs), np.array(rdirs).T.reshape(R, n, band))
+
+
+@pytest.mark.parametrize("R,L,k,w,block_r", [
+    (8, 150, 12, 30, 8),
+    (33, 100, 12, 30, 64),
+    (16, 80, 8, 16, 16),
+])
+def test_minimizer_kernel_sweep(R, L, k, w, block_r):
+    seqs = rng.integers(0, 4, (R, L)).astype(np.uint8)
+    mh, mp = ops.minimizer_scan(jnp.array(seqs), k=k, w=w, block_r=block_r)
+    rh, rp = ref.minimizer_ref(jnp.array(seqs).T, k=k, w=w)
+    np.testing.assert_array_equal(np.array(mh), np.array(rh).T)
+    np.testing.assert_array_equal(np.array(mp), np.array(rp).T)
+
+
+def test_kernel_padding_path():
+    """R not divisible by block_r exercises the pad/unpad wrapper."""
+    s1, s2 = _pair_batch(21, 24, 6)
+    de, _ = ops.linear_wf(jnp.array(s1), jnp.array(s2), eth=6, block_r=64)
+    r = ref.linear_wf_ref(jnp.array(s1).T, jnp.array(s2).T, eth=6)
+    np.testing.assert_array_equal(np.array(de), np.array(r[0]))
+
+
+@pytest.mark.parametrize("B,S,H,KV,hd,causal,qc,kc", [
+    (2, 128, 4, 2, 32, True, 64, 64),
+    (1, 256, 8, 8, 16, True, 64, 128),
+    (2, 128, 6, 2, 32, False, 32, 64),
+    (1, 64, 4, 1, 64, True, 64, 32),
+])
+def test_flash_attention_kernel_sweep(B, S, H, KV, hd, causal, qc, kc):
+    r = np.random.default_rng(5)
+    q = jnp.asarray(r.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((B, S, KV, hd)), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, q_chunk=qc, kv_chunk=kc)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=2e-3, rtol=2e-3)

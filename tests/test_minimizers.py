@@ -1,0 +1,74 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import (decode_to_str, encode_str, kmer_codes,
+                                 pack_2bit, unpack_2bit)
+from repro.core.minimizers import (hash32, minimizers, sliding_argmin,
+                                   sliding_min, unique_read_minimizers)
+
+rng = np.random.default_rng(0)
+
+
+def test_encoding_roundtrip():
+    s = "ACGTACGTTTGACA"
+    c = encode_str(s)
+    assert decode_to_str(c) == s
+    assert (unpack_2bit(pack_2bit(c), len(c)) == c).all()
+
+
+@given(st.lists(st.integers(0, 3), min_size=12, max_size=64))
+@settings(max_examples=30, deadline=None)
+def test_kmer_codes_match_reference(seq):
+    seq = np.array(seq, dtype=np.uint8)
+    k = 12
+    codes = np.array(kmer_codes(jnp.array(seq), k))
+    for i in range(len(seq) - k + 1):
+        ref = 0
+        for j in range(k):
+            ref = (ref << 2) | int(seq[i + j])
+        assert codes[i] == ref
+
+
+@given(st.integers(1, 20), st.integers(0, 10 ** 6))
+@settings(max_examples=25, deadline=None)
+def test_sliding_min_and_argmin(window, seed):
+    r = np.random.default_rng(seed)
+    v = r.integers(0, 50, window + int(r.integers(0, 40))).astype(np.uint32)
+    got = np.array(sliding_min(jnp.array(v), window))
+    mn, am = sliding_argmin(jnp.array(v), window)
+    for i in range(len(v) - window + 1):
+        w = v[i : i + window]
+        assert got[i] == w.min()
+        assert np.array(mn)[i] == w.min()
+        assert np.array(am)[i] == i + int(np.argmin(w))  # leftmost tie
+
+
+def test_minimizer_positions_bruteforce():
+    seq = rng.integers(0, 4, 300).astype(np.uint8)
+    mh, mk, mp = minimizers(jnp.array(seq), k=12, w=30)
+    codes = np.array(kmer_codes(jnp.array(seq), 12))
+    hs = np.array(hash32(jnp.array(codes)))
+    for i in range(len(np.array(mh))):
+        w = hs[i : i + 30]
+        assert np.array(mh)[i] == w.min()
+        assert np.array(mp)[i] == i + int(np.argmin(w))
+
+
+def test_unique_read_minimizers_dedup():
+    read = rng.integers(0, 4, 150).astype(np.uint8)
+    ks, ps, valid = unique_read_minimizers(jnp.array(read))
+    kk = np.array(ks)[np.array(valid)]
+    assert len(set(kk.tolist())) == len(kk)
+    # all returned positions are actual minimizer positions
+    _, mk, mp = minimizers(jnp.array(read), k=12, w=30)
+    real = set(zip(np.array(mk).tolist(), np.array(mp).tolist()))
+    for kmer, pos in zip(kk, np.array(ps)[np.array(valid)]):
+        assert (int(kmer), int(pos)) in real
+
+
+def test_hash32_invertible_no_collisions_sample():
+    xs = rng.integers(0, 2 ** 24, 4096, dtype=np.uint32)
+    hs = np.array(hash32(jnp.array(xs, dtype=jnp.uint32)))
+    assert len(np.unique(hs)) == len(np.unique(xs))

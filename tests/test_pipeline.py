@@ -1,0 +1,133 @@
+"""End-to-end read-mapping behaviour (paper Secs. V-B..V-E + VII-A)."""
+import numpy as np
+import pytest
+
+from repro.core.index import build_index, minimizer_frequencies
+from repro.core.pipeline import MapperConfig, map_reads, oracle_map
+from repro.data.genome import make_reference, sample_reads
+
+
+@pytest.fixture(scope="module")
+def world():
+    ref = make_reference(20_000, seed=0, repeat_frac=0.02)
+    idx = build_index(ref)
+    return ref, idx
+
+
+def test_index_structure(world):
+    ref, idx = world
+    assert idx.seg_len == 2 * (150 + 6) - 12
+    assert (np.diff(idx.offsets) >= 0).all()
+    assert idx.offsets[-1] == len(idx.positions) == len(idx.segments)
+    # each segment contains the reference bytes around its position
+    pad = idx.pad
+    for i in np.random.default_rng(0).choice(len(idx.positions), 16):
+        p = idx.positions[i]
+        lo, hi = max(0, p - pad), min(len(ref), p - pad + idx.seg_len)
+        inner = idx.segments[i][lo - (p - pad) : hi - (p - pad)]
+        assert (inner == ref[lo:hi]).all()
+    # storage blow-up accounting is present (paper: ~17x on HG38)
+    sb = idx.storage_bytes()
+    assert sb["blowup"] > 1
+
+
+def test_mapping_accuracy_clean_reads(world):
+    ref, idx = world
+    rs = sample_reads(ref, 48, sub_rate=0.0, ins_rate=0, del_rate=0, seed=1)
+    res = map_reads(idx, rs.reads)
+    assert res.mapped.all()
+    assert (res.distance == 0).all()
+    assert (res.position == rs.true_pos).mean() >= 0.95  # repeats may tie
+
+
+def test_mapping_accuracy_noisy_reads(world):
+    ref, idx = world
+    rs = sample_reads(ref, 64, seed=3)
+    res = map_reads(idx, rs.reads)
+    assert res.mapped.mean() > 0.95
+    close = np.abs(res.position - rs.true_pos) <= 6
+    assert close.mean() > 0.95
+    # reported distance bounded by simulated edit count (within band)
+    ok = res.mapped & close
+    assert (res.distance[ok] <= rs.n_errors[ok] + 6).all()
+
+
+def test_filter_reduces_candidates(world):
+    ref, idx = world
+    rs = sample_reads(ref, 32, seed=5)
+    res = map_reads(idx, rs.reads)
+    sat = 6 + 1
+    total = (res.linear_dist < 10**9).sum()
+    passed = (res.linear_dist <= 6).sum()
+    assert passed < total  # the filter actually discards PLs
+
+
+def test_agrees_with_exhaustive_oracle():
+    ref = make_reference(3_000, seed=2, repeat_frac=0.0)
+    idx = build_index(ref)
+    rs = sample_reads(ref, 12, seed=4)
+    res = map_reads(idx, rs.reads)
+    bp, bd = oracle_map(ref, rs.reads)
+    ok = res.mapped
+    # oracle distance can only be <= ours; when equal the position matches
+    agree = (np.abs(res.position[ok] - bp[ok]) <= 6).mean()
+    assert agree > 0.9
+
+
+def test_minimizer_frequency_histogram(world):
+    _, idx = world
+    freqs = minimizer_frequencies(idx)
+    assert freqs.sum() == len(idx.positions)
+    assert (freqs >= 1).all()
+
+
+def test_unmapped_random_reads(world):
+    ref, idx = world
+    rng = np.random.default_rng(9)
+    junk = rng.integers(0, 4, (16, 150)).astype(np.uint8)
+    res = map_reads(idx, junk)
+    # random 150-mers should rarely align within 6 edits
+    assert res.mapped.mean() <= 0.2
+
+
+def test_low_th_split(world):
+    from repro.core.index import low_th_split
+    _, idx = world
+    s = low_th_split(idx, low_th=3)
+    assert 0 < s["rare_minimizer_fraction"] <= 1
+    assert s["n_rare_minimizers"] <= s["n_minimizers"]
+    # rare minimizers carry a small fraction of total PL work (the paper's
+    # premise for offloading them: 0.16% of affine instances)
+    assert s["rare_pl_fraction"] <= s["rare_minimizer_fraction"] + 0.5
+
+
+def test_base_count_filter_is_sound(world):
+    """Base-count histogram distance lower-bounds substitution-only edit
+    distance -> the filter never discards a true sub-only match within
+    threshold (the soundness property the paper's filter relies on)."""
+    import jax.numpy as jnp
+    from repro.core.filtering import base_count_filter
+    ref, idx = world
+    rng = np.random.default_rng(17)
+    rl, eth = 150, 6
+    reads, wins, true_d = [], [], []
+    for _ in range(24):
+        p = int(rng.integers(0, len(ref) - rl - 2 * eth))
+        seg = ref[p : p + rl + 2 * eth].copy()
+        read = seg[eth : eth + rl].copy()
+        k = int(rng.integers(0, 6))
+        for _ in range(k):
+            q = int(rng.integers(0, rl))
+            read[q] = (read[q] + int(rng.integers(1, 4))) % 4
+        reads.append(read)
+        wins.append(seg)
+        true_d.append(k)
+    reads = jnp.asarray(np.stack(reads))
+    wins = jnp.asarray(np.stack(wins))[:, None, None, :]
+    valid = jnp.ones((24, 1, 1), bool)
+    keep, hist = base_count_filter(reads, wins, valid, threshold=6)
+    hist = np.asarray(hist)[:, 0, 0]
+    for h, d in zip(hist, true_d):
+        assert h <= d  # lower bound
+    kept = np.asarray(keep)[:, 0, 0]
+    assert kept[np.array(true_d) <= 6].all()
