@@ -1,36 +1,100 @@
-"""End-to-end mapping pipeline wall time on CPU (jnp path) + full-system
-iteration counts feeding Eq. 6 (the full-system-simulator analog)."""
-import time
+"""End-to-end mapping pipeline wall time on CPU: padded reference vs the
+candidate-compacted engine (jnp and Pallas backends), plus full-system
+iteration counts feeding Eq. 6 (the full-system-simulator analog).
 
-import numpy as np
+``bench_pipeline`` is the machine-readable entry (``benchmarks/run.py
+--pipeline-json`` writes its output to BENCH_pipeline.json); ``rows`` keeps
+the CSV harness fast with a smaller read batch.
+"""
+import time
 
 from repro.core import costmodel as cm
 from repro.core.index import build_index, minimizer_frequencies
-from repro.core.pipeline import map_reads
+from repro.core.pipeline import MapperConfig, map_reads
 from repro.data.genome import make_reference, sample_reads
 
 
-def rows():
-    ref = make_reference(30_000, seed=0, repeat_frac=0.03)
-    idx = build_index(ref)
-    rs = sample_reads(ref, 128, seed=2)
-    map_reads(idx, rs.reads)  # compile
+def _timed_map(idx, reads, cfg, iters=1):
+    map_reads(idx, reads, cfg)  # compile
     t0 = time.perf_counter()
-    res = map_reads(idx, rs.reads)
-    dt = time.perf_counter() - t0
+    for _ in range(iters):
+        res = map_reads(idx, reads, cfg)
+    dt = (time.perf_counter() - t0) / iters
+    return res, dt
+
+
+def _make_world(genome: int):
+    ref = make_reference(genome, seed=0, repeat_frac=0.03)
+    return ref, build_index(ref)
+
+
+def bench_pipeline(R: int = 1024, genome: int = 30_000,
+                   include_pallas: bool = True, world=None) -> dict:
+    """Compare the execution engines at batch size R.  Returns a dict with
+    per-engine wall time / per-read time, the measured candidate-pruning
+    ratio, and the affine instance counts (padded vs compacted)."""
+    ref, idx = world or _make_world(genome)
+    rs = sample_reads(ref, R, seed=2)
+
+    engines = {
+        "padded_jnp": MapperConfig(engine="padded", wf_backend="jnp"),
+        "compacted_jnp": MapperConfig(engine="compacted", wf_backend="jnp"),
+    }
+    if include_pallas:
+        engines["compacted_pallas"] = MapperConfig(engine="compacted",
+                                                   wf_backend="pallas")
+
+    out = {"R": R, "genome": genome, "engines": {}}
+    baseline = None
+    for name, cfg in engines.items():
+        try:
+            res, dt = _timed_map(idx, rs.reads, cfg)
+        except Exception as e:  # noqa: BLE001 — report, keep the others
+            out["engines"][name] = {"error": f"{type(e).__name__}: {e}"}
+            continue
+        entry = {
+            "wall_s": round(dt, 4),
+            "per_read_us": round(dt / R * 1e6, 2),
+            "reads_per_s": round(R / dt, 1),
+            "mapped_frac": round(float(res.mapped.mean()), 4),
+        }
+        if name == "padded_jnp":
+            baseline, base_dt = res, dt
+            entry["speedup_vs_padded"] = 1.0
+        elif baseline is not None:  # only meaningful vs a live padded run
+            entry["speedup_vs_padded"] = round(base_dt / dt, 2)
+            entry["matches_padded"] = bool(
+                (res.position == baseline.position).all()
+                and (res.distance == baseline.distance).all())
+        if res.stats:
+            entry.update(res.stats)
+        out["engines"][name] = entry
+    return out
+
+
+def rows():
+    world = _make_world(30_000)
+    bench = bench_pipeline(R=128, include_pallas=False, world=world)
+    pad = bench["engines"]["padded_jnp"]
+    cmp_ = bench["engines"]["compacted_jnp"]
 
     # full-system simulation: reads/PLs per minimizer -> Eq. 6 iteration
     # counts -> DP-memory execution time at DART-PIM scale
-    freqs = minimizer_frequencies(idx)
+    freqs = minimizer_frequencies(world[1])
     # synthetic read load per minimizer proportional to its PL count
-    read_load = freqs * float(len(rs.reads)) / max(freqs.sum(), 1)
+    read_load = freqs * 128.0 / max(freqs.sum(), 1)
     k_l, k_a, j_l, j_a = cm.full_system_simulation(read_load * 1000, freqs)
     t_dp = (k_l * cm.linear_wf_cycles()["total_cycles"]
             + k_a * cm.affine_wf_cycles()["total_cycles"]) * cm.T_CLK
     return [
-        ("pipeline_cpu_128reads_ms", round(dt * 1e3, 1),
-         f"{len(rs.reads)/dt:.0f} reads/s CPU-jnp; "
-         f"mapped={res.mapped.mean():.3f}"),
+        ("pipeline_padded_cpu_128reads_ms", round(pad["wall_s"] * 1e3, 1),
+         f"{pad['reads_per_s']:.0f} reads/s CPU-jnp; "
+         f"mapped={pad['mapped_frac']:.3f}"),
+        ("pipeline_compacted_cpu_128reads_ms", round(cmp_["wall_s"] * 1e3, 1),
+         f"speedup={cmp_['speedup_vs_padded']}x; "
+         f"affine {cmp_['affine_dist_instances']} of "
+         f"{cmp_['padded_affine_instances']} padded; "
+         f"pruning={cmp_['pruning_ratio']:.3f}"),
         ("fullsys_eq6_dpmem_s", round(t_dp, 4),
          f"K_L={k_l:.0f} K_A={k_a:.0f} J_L={j_l:.3g} J_A={j_a:.3g}"),
     ]

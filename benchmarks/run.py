@@ -1,13 +1,42 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,value,derived`` CSV (value is us_per_call for timed rows,
-the modelled/papers' metric otherwise).
+Default mode prints ``name,value,derived`` CSV (value is us_per_call for
+timed rows, the modelled/papers' metric otherwise).
+
+``--pipeline-json [PATH]`` instead runs the end-to-end engine comparison
+(padded reference vs candidate-compacted, jnp vs Pallas backends) at
+R=1024 and writes the result to PATH (default BENCH_pipeline.json), so the
+perf trajectory is tracked across PRs.
 """
+import argparse
+import json
 import sys
 import time
 
 
-def main() -> None:
+def emit_pipeline_json(path: str, reads: int) -> None:
+    from benchmarks.pipeline_bench import bench_pipeline
+    bench = bench_pipeline(R=reads)
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=2, sort_keys=True)
+        f.write("\n")
+    for name, e in bench["engines"].items():
+        if "error" in e:
+            print(f"{name}: ERROR {e['error']}")
+        else:
+            extra = ""
+            if "survivors" in e:
+                extra = (f" affine={e['affine_dist_instances']}"
+                         f"/{e['padded_affine_instances']}padded"
+                         f" survivors={e['survivors']}"
+                         f" pruning={e['pruning_ratio']:.3f}")
+            print(f"{name}: {e['wall_s']:.3f}s "
+                  f"{e['per_read_us']:.1f}us/read "
+                  f"speedup={e.get('speedup_vs_padded', 1.0)}x{extra}")
+    print(f"wrote {path}")
+
+
+def run_csv() -> None:
     from benchmarks import (accuracy, area, costmodel_tables, energy,
                             pipeline_bench, roofline_report, throughput,
                             wf_kernel_bench, wf_roofline)
@@ -32,6 +61,21 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             print(f"{name},ERROR,{type(e).__name__}: {e}")
         sys.stdout.flush()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--pipeline-json", nargs="?", const="BENCH_pipeline.json",
+                    default=None, metavar="PATH",
+                    help="write the end-to-end engine comparison JSON "
+                         "instead of the CSV sweep")
+    ap.add_argument("--reads", type=int, default=1024,
+                    help="batch size for --pipeline-json (default 1024)")
+    args = ap.parse_args()
+    if args.pipeline_json:
+        emit_pipeline_json(args.pipeline_json, args.reads)
+    else:
+        run_csv()
 
 
 if __name__ == "__main__":

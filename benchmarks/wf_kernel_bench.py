@@ -13,8 +13,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.affine_wf import banded_affine
+from repro.core.affine_wf import banded_affine, banded_affine_dist
 from repro.core.linear_wf import banded_wf
+from repro.kernels import ops
 
 VPU_INT8_OPS = 49e12  # conservative: 1/4 of bf16 MXU peak as scalar int8 VPU
 
@@ -37,6 +38,14 @@ def rows():
     t_lin = _time(jax.jit(lambda a, b: banded_wf(a, b, eth=eth)), s1, s2)
     t_aff = _time(jax.jit(lambda a, b: banded_affine(a, b, eth=eth, sat=32)),
                   s1, s2)
+    t_affd = _time(
+        jax.jit(lambda a, b: banded_affine_dist(a, b, eth=eth, sat=32)),
+        s1, s2)
+    # Pallas kernels (interpret mode on CPU: correctness-path timing only;
+    # compiled-mode numbers require a TPU)
+    t_plin = _time(lambda a, b: ops.linear_wf(a, b, eth=eth), s1, s2)
+    t_paffd = _time(lambda a, b: ops.affine_wf_dist(a, b, eth=eth, sat=32),
+                    s1, s2)
 
     # TPU projection: ops per instance ~= rows x band x ~12 int8 VPU ops
     ops_lin = n * (2 * eth + 1) * 12
@@ -48,6 +57,12 @@ def rows():
          f"cpu_inst_us={t_lin/R*1e6:.2f}"),
         ("affine_wf_cpu_batch1024", round(t_aff * 1e6, 1),
          f"cpu_inst_us={t_aff/R*1e6:.2f}"),
+        ("affine_wf_dist_cpu_batch1024", round(t_affd * 1e6, 1),
+         f"cpu_inst_us={t_affd/R*1e6:.2f}; no direction planes"),
+        ("linear_wf_pallas_interp_batch1024", round(t_plin * 1e6, 1),
+         f"cpu_inst_us={t_plin/R*1e6:.2f}; interpret mode"),
+        ("affine_wf_dist_pallas_interp_batch1024", round(t_paffd * 1e6, 1),
+         f"cpu_inst_us={t_paffd/R*1e6:.2f}; interpret mode"),
         ("linear_wf_tpu_proj_inst_ns", round(tpu_lin_inst_s * 1e9, 2),
          f"~{1/tpu_lin_inst_s:.3g} inst/s/core (DART-PIM xbar: "
          "258620cyc*2ns=517us/inst, x8M xbars)"),

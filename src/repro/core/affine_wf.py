@@ -171,14 +171,12 @@ def alignment_cost(ops, w_sub=1, w_op=1, w_ex=1):
     return cost
 
 
-@partial(jax.jit, static_argnames=("eth", "sat"))
-def banded_affine(s1: jnp.ndarray, s2_window: jnp.ndarray, eth: int = 6,
-                  sat: int = 32):
-    """Batched banded affine WF.  s1: (..., n), s2_window: (..., n + 2*eth).
-
-    Returns (dist_end, dist_min, dirs) with dirs (..., n, 2*eth+1) uint8
-    packed direction bytes.  int8 value arithmetic saturated at ``sat``.
-    """
+@partial(jax.jit, static_argnames=("eth", "sat", "emit_dirs"))
+def _banded_affine_impl(s1: jnp.ndarray, s2_window: jnp.ndarray, eth: int,
+                        sat: int, emit_dirs: bool):
+    """Shared affine band recurrence; ``emit_dirs`` statically selects
+    whether the packed direction bytes are computed and stacked (the
+    Pallas twin of this split is ``repro.kernels.affine_wf._row_step``)."""
     n = s1.shape[-1]
     band = 2 * eth + 1
     sat = jnp.int32(sat)
@@ -221,21 +219,23 @@ def banded_affine(s1: jnp.ndarray, s2_window: jnp.ndarray, eth: int = 6,
             m2_ext = m2_left + 1   # raw
             m2_open = d_left + 2   # raw
             m2n = jnp.minimum(jnp.minimum(m2_ext, m2_open), sat8)
-            dm2 = (m2_open < m2_ext).astype(jnp.uint8)
             m2n = jnp.where(jj <= 0, sat8, m2n).astype(jnp.int8)
             sub_raw = dg + 1
             # D candidates (j >= 1): match -> diag; else min(sub, M1, M2)
             dmin = jnp.minimum(jnp.minimum(sub_raw, m1n), m2n)
             dval = jnp.where(mt, dg, jnp.minimum(dmin, sat8))
+            # j == 0 column: D = M1; j < 0: saturated
+            dval = jnp.where(jj == 0, m1n, dval)
+            dval = jnp.where(jj < 0, sat8, dval).astype(jnp.int8)
+            if not emit_dirs:
+                return (dval, m2n), (dval, m1n, m2n)
+            dm2 = (m2_open < m2_ext).astype(jnp.uint8)
             dd = jnp.where(
                 mt, jnp.uint8(0),
                 jnp.where(dmin == sub_raw, jnp.uint8(1),
                           jnp.where(dmin == m1n, jnp.uint8(2), jnp.uint8(3))))
-            # j == 0 column: D = M1
-            dval = jnp.where(jj == 0, m1n, dval)
             dd = jnp.where(jj == 0, jnp.uint8(2), dd)
-            # j < 0: saturated, dirs zeroed (cells never reached in traceback)
-            dval = jnp.where(jj < 0, sat8, dval).astype(jnp.int8)
+            # j < 0 dirs zeroed (cells never reached in traceback)
             byte = (dd | (dm1 << 2) | (dm2 << 3)).astype(jnp.uint8)
             byte = jnp.where(jj < 0, jnp.uint8(0), byte)
             return (dval, m2n), (dval, m1n, m2n, byte)
@@ -243,19 +243,46 @@ def banded_affine(s1: jnp.ndarray, s2_window: jnp.ndarray, eth: int = 6,
         xs = (jnp.moveaxis(diag, -1, 0), jnp.moveaxis(M1n, -1, 0),
               jnp.moveaxis(dM1, -1, 0), jnp.moveaxis(match, -1, 0), j)
         init = (jnp.full(lead, big), jnp.full(lead, big))
-        _, (Dn, M1o, M2n, bytes_) = jax.lax.scan(step, init, xs)
-        Dn = jnp.moveaxis(Dn, 0, -1)
-        M1o = jnp.moveaxis(M1o, 0, -1)
-        M2n = jnp.moveaxis(M2n, 0, -1)
-        bytes_ = jnp.moveaxis(bytes_, 0, -1)
+        _, ys = jax.lax.scan(step, init, xs)
+        Dn = jnp.moveaxis(ys[0], 0, -1)
+        M1o = jnp.moveaxis(ys[1], 0, -1)
+        M2n = jnp.moveaxis(ys[2], 0, -1)
+        bytes_ = jnp.moveaxis(ys[3], 0, -1) if emit_dirs else None
         return (Dn, M1o, M2n), bytes_
 
     (Dl, _, _), dirs = jax.lax.scan(row, (D0, M0, M20), jnp.arange(1, n + 1))
-    # scan stacks rows on axis 0 -> (n, ..., band); move to (..., n, band)
-    dirs = jnp.moveaxis(dirs, 0, -2)
     dist_end = Dl[..., eth].astype(jnp.int32)
     dist_min = jnp.min(Dl, axis=-1).astype(jnp.int32)
-    return dist_end, dist_min, dirs
+    if not emit_dirs:
+        return dist_end, dist_min, None
+    # scan stacks rows on axis 0 -> (n, ..., band); move to (..., n, band)
+    return dist_end, dist_min, jnp.moveaxis(dirs, 0, -2)
+
+
+@partial(jax.jit, static_argnames=("eth", "sat"))
+def banded_affine(s1: jnp.ndarray, s2_window: jnp.ndarray, eth: int = 6,
+                  sat: int = 32):
+    """Batched banded affine WF.  s1: (..., n), s2_window: (..., n + 2*eth).
+
+    Returns (dist_end, dist_min, dirs) with dirs (..., n, 2*eth+1) uint8
+    packed direction bytes.  int8 value arithmetic saturated at ``sat``.
+    """
+    return _banded_affine_impl(s1, s2_window, eth, sat, emit_dirs=True)
+
+
+@partial(jax.jit, static_argnames=("eth", "sat"))
+def banded_affine_dist(s1: jnp.ndarray, s2_window: jnp.ndarray, eth: int = 6,
+                       sat: int = 32):
+    """Distance-only banded affine WF: ``banded_affine`` minus the direction
+    planes.  Same recurrence, same saturation, but nothing O(n * band) is
+    materialized — this is the distance-pass variant the compacted pipeline
+    runs on every filter survivor, reserving the dirs-emitting pass for the
+    one winner per read.
+
+    s1: (..., n), s2_window: (..., n + 2*eth).  Returns (dist_end, dist_min).
+    """
+    de, dm, _ = _banded_affine_impl(s1, s2_window, eth, sat, emit_dirs=False)
+    return de, dm
 
 
 @partial(jax.jit, static_argnames=("eth", "max_ops"))

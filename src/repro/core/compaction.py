@@ -1,0 +1,73 @@
+"""Candidate compaction: static-capacity valid-only buckets (Sec. V dataflow).
+
+DART-PIM's filtering stage exists so the expensive affine WF only runs on the
+few candidates the linear WF admits.  The padded reference pipeline ignores
+that: it executes every slot of the static ``(R, M, P)`` candidate tensor,
+valid or not.  This module supplies the primitives of the compacted execution
+engine:
+
+  * ``bucket_capacity``  — host-side choice of a static lane-aligned
+    power-of-two capacity for a measured candidate count, so jit recompiles
+    are bounded (one compile per occupied bucket size, not per batch);
+  * ``compact_indices``  — inside-jit stable compaction of a boolean mask
+    into a ``(cap,)`` slot->flat-index table (cumsum + scatter, no sort);
+  * ``scatter_to``       — inverse scatter of per-slot results back to the
+    flat candidate tensor, invalid slots filled with a sentinel.
+
+The compacted engine keeps one WF *instance* per lane (the crossbar-row
+mapping of the Pallas kernels), so capacities are aligned to the kernel block
+size ``block_r`` — a power of two itself, making "power-of-two and
+lane-aligned" a single rounding.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bucket_capacity(count: int, *, align: int, cap_max: int) -> int:
+    """Smallest power-of-two >= count, >= align, <= next_pow2(cap_max).
+
+    ``count`` is a *host* integer (the measured number of valid candidates);
+    the result is used as a static shape, so equal buckets reuse the same
+    compiled executable.  ``align`` must be a power of two (the Pallas
+    ``block_r``); the rounded capacity is then automatically lane-aligned.
+    """
+    assert align >= 1 and (align & (align - 1)) == 0, "align must be a pow2"
+    cap = max(int(count), 1)
+    cap = 1 << (cap - 1).bit_length()          # next power of two
+    cap = max(cap, align)
+    ceil_ = max(cap_max, 1)
+    ceil_ = 1 << (ceil_ - 1).bit_length()
+    return min(cap, max(ceil_, align))
+
+
+def compact_indices(valid: jnp.ndarray, cap: int):
+    """Compact a flat boolean mask into a static-capacity slot table.
+
+    valid: (N,) bool.  Returns (slots (cap,) int32, slot_valid (cap,) bool)
+    where ``slots[s]`` is the flat index of the s-th valid entry (original
+    order preserved) and ``slot_valid[s]`` marks occupied slots.  Entries
+    beyond ``cap`` valids are dropped (callers pick cap >= count on the
+    host, so this only triggers at the cap_max ceiling).
+    """
+    N = valid.shape[0]
+    rank = jnp.cumsum(valid.astype(jnp.int32)) - 1        # (N,)
+    slot = jnp.where(valid & (rank < cap), rank, cap)     # overflow -> cap
+    slots = jnp.zeros((cap + 1,), jnp.int32).at[slot].set(
+        jnp.arange(N, dtype=jnp.int32), mode="drop")[:cap]
+    slot_valid = jnp.zeros((cap + 1,), bool).at[slot].set(
+        True, mode="drop")[:cap]
+    return slots, slot_valid
+
+
+def scatter_to(n_flat: int, slots: jnp.ndarray, slot_valid: jnp.ndarray,
+               values: jnp.ndarray, fill) -> jnp.ndarray:
+    """Scatter per-slot ``values`` back to a (n_flat, ...) tensor.
+
+    Unoccupied candidate positions get ``fill``.  Invalid slots write to a
+    shadow row that is sliced off, so duplicate slot 0 entries never clobber
+    candidate 0.
+    """
+    dst = jnp.where(slot_valid, slots, n_flat)
+    out = jnp.full((n_flat + 1,) + values.shape[1:], fill, values.dtype)
+    return out.at[dst].set(values, mode="drop")[:n_flat]

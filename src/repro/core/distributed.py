@@ -30,10 +30,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import affine_wf
+from . import wf_backend as wfb
 from .filtering import gather_windows
 from .index import GenomeIndex
-from .linear_wf import banded_wf
 from .minimizers import hash32, unique_read_minimizers
 from .pipeline import MapperConfig
 
@@ -136,15 +135,21 @@ def _stage_b(local, uniq, offsets, positions, segments, cfg: MapperConfig):
                              read_len=cfg.read_len, k=cfg.k, eth=cfg.eth)
     E = kmers.shape[0]
     s1 = jnp.broadcast_to(reads[:, None, :], (E, P, cfg.read_len))
-    lin_end, _ = banded_wf(s1, windows, eth=cfg.eth)
+    lin_end, _ = wfb.linear_wf_dist(s1, windows, eth=cfg.eth,
+                                    backend=cfg.wf_backend,
+                                    block_r=cfg.lin_block_r)
     lin_end = jnp.where(occ_valid, lin_end, cfg.eth + 1)
     best_pl = jnp.argmin(lin_end, axis=-1)
     best_lin = jnp.take_along_axis(lin_end, best_pl[:, None], 1)[:, 0]
     passed = best_lin <= cfg.filter_threshold
 
+    # distance-only affine: stage B never tracebacks, so no (E, n, band)
+    # direction planes are materialized
     sel_win = jnp.take_along_axis(windows, best_pl[:, None, None], 1)[:, 0]
-    aff_end, _, _ = affine_wf.banded_affine(reads, sel_win, eth=cfg.eth,
-                                            sat=cfg.sat_affine)
+    aff_end, _ = wfb.affine_wf_dist(reads, sel_win, eth=cfg.eth,
+                                    sat=cfg.sat_affine,
+                                    backend=cfg.wf_backend,
+                                    block_r=cfg.aff_block_r)
     aff_end = jnp.where(passed, aff_end, cfg.sat_affine).astype(jnp.int32)
     sel_occ = jnp.take_along_axis(occ, best_pl[:, None], 1)[:, 0]
     pos = positions[sel_occ] - minipos

@@ -12,7 +12,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .linear_wf import banded_wf
+from . import wf_backend as wfb
+from .linear_wf import banded_wf  # noqa: F401 — re-exported for callers
 
 
 def gather_windows(segments: jnp.ndarray, occ_idx: jnp.ndarray,
@@ -45,17 +46,21 @@ def gather_windows(segments: jnp.ndarray, occ_idx: jnp.ndarray,
     return wins.reshape(occ_idx.shape + (wlen,))
 
 
-@partial(jax.jit, static_argnames=("eth",))
+@partial(jax.jit, static_argnames=("eth", "backend", "block_r"))
 def linear_wf_filter(reads: jnp.ndarray, windows: jnp.ndarray,
-                     occ_valid: jnp.ndarray, eth: int = 6):
+                     occ_valid: jnp.ndarray, eth: int = 6,
+                     backend: str = "jnp", block_r: int = 512):
     """Banded linear WF distance per candidate; invalid -> saturated.
 
     reads: (R, rl); windows: (R, M, P, rl + 2*eth); occ_valid: (R, M, P).
+    ``backend`` selects the jnp reference or the Pallas kernel (see
+    ``repro.core.wf_backend``; ``block_r`` is the kernel lane-block size).
     Returns distances (R, M, P) int32 in [0, eth+1].
     """
     R, M, P, _ = windows.shape
     s1 = jnp.broadcast_to(reads[:, None, None, :], (R, M, P, reads.shape[-1]))
-    dist_end, dist_min = banded_wf(s1, windows, eth=eth)
+    dist_end, dist_min = wfb.linear_wf_dist(s1, windows, eth=eth,
+                                            backend=backend, block_r=block_r)
     sat = eth + 1
     return jnp.where(occ_valid, dist_end, sat), jnp.where(occ_valid, dist_min,
                                                           sat)

@@ -7,9 +7,31 @@ Stages (numbers = the circled steps of paper Fig. 6):
   (5)(6) affine WF   — alignment + traceback for the winners (affine_wf.py)
   (7)    reduce      — best PL per read across minimizers
 
-Everything is static-shape and jit-compiled; the distributed version in
-``repro.core.distributed`` wraps the same stages with an all_to_all seeding
-exchange over the device mesh.
+Two execution engines share these semantics bit-for-bit:
+
+``engine="padded"`` — the fully-jit reference: one compiled program that
+runs the linear WF over every slot of the static ``(R, M, P)`` candidate
+tensor (invalid ones included) and the affine WF over every ``(R, M)``
+winner, direction planes and all.
+
+``engine="compacted"`` (default) — the candidate-compacted engine that
+mirrors DART-PIM's actual dataflow: seeding output is flattened and
+compacted to valid-only candidates in a static power-of-two, lane-aligned
+capacity bucket (``repro.core.compaction``); the linear WF runs on just
+those instances; the filter threshold is applied *before* the affine stage,
+which then runs a distance-only pass on the compacted survivors; the
+dirs-emitting affine pass + traceback run solely on the one winner per
+read.  Capacities are chosen host-side from the measured counts, so jit
+recompiles are bounded by the number of distinct bucket sizes.  Large read
+batches stream through in ``chunk_reads``-sized chunks instead of
+materializing one giant window tensor.
+
+Both engines run their WF inner loops on the backend selected by
+``MapperConfig.wf_backend``: the pure-jnp reference or the Pallas kernels
+of ``repro.kernels`` (interpret mode on CPU, compiled on TPU).
+
+The distributed version in ``repro.core.distributed`` wraps the same
+stages with an all_to_all seeding exchange over the device mesh.
 """
 from __future__ import annotations
 
@@ -21,6 +43,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import affine_wf
+from . import wf_backend as wfb
+from .compaction import bucket_capacity, compact_indices, scatter_to
 from .filtering import gather_windows, linear_wf_filter
 from .index import GenomeIndex
 from .linear_wf import banded_wf
@@ -38,6 +62,11 @@ class MapperConfig:
     max_pls: int = 32       # linear WF buffer rows per crossbar
     filter_threshold: int = 6
     max_ops: int | None = None
+    engine: str = "compacted"     # "compacted" | "padded"
+    wf_backend: str = "jnp"       # "jnp" | "pallas"  (see core.wf_backend)
+    lin_block_r: int = 512        # linear kernel lanes; linear bucket align
+    aff_block_r: int = 256        # affine kernel lanes; affine bucket align
+    chunk_reads: int | None = None  # stream reads in chunks of this size
 
     @property
     def seed_params(self) -> SeedParams:
@@ -54,12 +83,14 @@ class MappingResult:
     op_count: np.ndarray   # (R,) int32
     linear_dist: np.ndarray  # (R, M, P) all candidate linear distances
     n_candidates: np.ndarray  # (R,) number of valid PLs seeded
+    stats: dict | None = None  # compacted engine: instance-count accounting
 
 
 @partial(jax.jit, static_argnames=("cfg",))
 def map_reads_jax(uniq_kmers, offsets, positions, segments, reads,
                   cfg: MapperConfig):
-    """The jit pipeline. Index arrays are device arrays; reads (R, rl)."""
+    """The padded-reference jit pipeline.  Index arrays are device arrays;
+    reads (R, rl).  Every (R, M, P) slot is executed, valid or not."""
     R = reads.shape[0]
     seeds = seed_reads(uniq_kmers, offsets, reads, cfg.seed_params)
     occ_idx, occ_valid = seeds["occ_idx"], seeds["occ_valid"]
@@ -68,7 +99,9 @@ def map_reads_jax(uniq_kmers, offsets, positions, segments, reads,
     # (3) linear WF over every candidate
     windows = gather_windows(segments, occ_idx, mini_pos[..., None],
                              read_len=cfg.read_len, k=cfg.k, eth=cfg.eth)
-    lin_end, _ = linear_wf_filter(reads, windows, occ_valid, eth=cfg.eth)
+    lin_end, _ = linear_wf_filter(reads, windows, occ_valid, eth=cfg.eth,
+                                  backend=cfg.wf_backend,
+                                  block_r=cfg.lin_block_r)
 
     # (4) min extraction per (read, minimizer); filter threshold
     best_pl = jnp.argmin(lin_end, axis=-1)                       # (R, M)
@@ -81,8 +114,10 @@ def map_reads_jax(uniq_kmers, offsets, positions, segments, reads,
         windows, best_pl[..., None, None], axis=2)[:, :, 0]      # (R, M, wlen)
     s1 = jnp.broadcast_to(reads[:, None, :],
                           (R, cfg.max_minis, cfg.read_len))
-    aff_end, _, dirs = affine_wf.banded_affine(s1, sel_win, eth=cfg.eth,
-                                               sat=cfg.sat_affine)
+    aff_end, _, dirs = wfb.affine_wf_dirs(s1, sel_win, eth=cfg.eth,
+                                          sat=cfg.sat_affine,
+                                          backend=cfg.wf_backend,
+                                          block_r=cfg.aff_block_r)
     aff_end = jnp.where(pass_filter, aff_end, cfg.sat_affine)
 
     # (7) best minimizer per read — min distance, ties -> leftmost position
@@ -113,31 +148,217 @@ def map_reads_jax(uniq_kmers, offsets, positions, segments, reads,
                 n_candidates=jnp.sum(occ_valid, axis=(1, 2)))
 
 
+# --------------------------------------------------------------------------
+# Compacted execution engine
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg", "cap"))
+def _linear_stage(segments, reads, occ_idx, occ_valid, mini_pos,
+                  cfg: MapperConfig, cap: int):
+    """(3)+(4): compact valid candidates -> linear WF on ``cap`` instances
+    -> scatter distances back -> per-(read, minimizer) min + filter."""
+    R = reads.shape[0]
+    M, P = cfg.max_minis, cfg.max_pls
+    N = R * M * P
+    sat = cfg.eth + 1
+
+    slots, slot_ok = compact_indices(occ_valid.reshape(-1), cap)
+    r_idx = slots // (M * P)
+    m_idx = (slots // P) % M
+    occ = occ_idx.reshape(-1)[slots]
+    mpos = mini_pos[r_idx, m_idx]
+
+    wins = gather_windows(segments, occ, mpos, read_len=cfg.read_len,
+                          k=cfg.k, eth=cfg.eth)                  # (cap, wlen)
+    de, _ = wfb.linear_wf_dist(reads[r_idx], wins, eth=cfg.eth,
+                               backend=cfg.wf_backend,
+                               block_r=cfg.lin_block_r)
+    de = jnp.where(slot_ok, de, sat).astype(jnp.int32)
+    lin_end = scatter_to(N, slots, slot_ok, de,
+                         jnp.int32(sat)).reshape(R, M, P)
+
+    best_pl = jnp.argmin(lin_end, axis=-1)                       # (R, M)
+    best_lin = jnp.take_along_axis(lin_end, best_pl[..., None],
+                                   -1)[..., 0]                   # (R, M)
+    pass_filter = best_lin <= cfg.filter_threshold
+    return lin_end, best_pl, pass_filter, jnp.sum(occ_valid, axis=(1, 2))
+
+
+@partial(jax.jit, static_argnames=("cfg", "cap"))
+def _affine_stage(segments, positions, reads, occ_idx, mini_pos, best_pl,
+                  pass_filter, cfg: MapperConfig, cap: int):
+    """(5)+(7): distance-only affine WF on the compacted filter survivors,
+    then the per-read winner reduce (identical tie-breaking to the padded
+    engine: min distance, ties -> leftmost position)."""
+    R = reads.shape[0]
+    M = cfg.max_minis
+    sat = cfg.sat_affine
+
+    slots, slot_ok = compact_indices(pass_filter.reshape(-1), cap)
+    r_idx = slots // M
+    m_idx = slots % M
+    pl = best_pl.reshape(-1)[slots]
+    occ = occ_idx[r_idx, m_idx, pl]
+    mpos = mini_pos[r_idx, m_idx]
+
+    wins = gather_windows(segments, occ, mpos, read_len=cfg.read_len,
+                          k=cfg.k, eth=cfg.eth)                  # (cap, wlen)
+    ae, _ = wfb.affine_wf_dist(reads[r_idx], wins, eth=cfg.eth, sat=sat,
+                               backend=cfg.wf_backend,
+                               block_r=cfg.aff_block_r)
+    ae = jnp.where(slot_ok, ae, sat).astype(jnp.int32)
+    aff_end = scatter_to(R * M, slots, slot_ok, ae,
+                         jnp.int32(sat)).reshape(R, M)
+
+    cand_occ = jnp.take_along_axis(occ_idx,
+                                   best_pl[..., None], axis=2)[:, :, 0]
+    cand_pos = positions[cand_occ] - mini_pos                    # (R, M)
+    best_aff = jnp.min(aff_end, axis=-1)
+    mapped = best_aff < sat
+    is_best = aff_end == best_aff[:, None]
+    pos_key = jnp.where(is_best & (cand_pos >= 0), cand_pos, 2 ** 30)
+    position = jnp.min(pos_key, axis=-1)
+    best_m = jnp.argmin(jnp.where(pos_key == position[:, None],
+                                  jnp.arange(M)[None, :], M), axis=-1)
+    position = jnp.where(mapped & (position < 2 ** 30), position, -1)
+    return best_aff, mapped, position, best_m
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _traceback_stage(segments, reads, occ_idx, mini_pos, best_pl, best_m,
+                     mapped, cfg: MapperConfig):
+    """(6): dirs-emitting affine WF + traceback on the per-read winners only
+    — R direction planes instead of (R, M, n*band)."""
+    R = reads.shape[0]
+    r = jnp.arange(R, dtype=jnp.int32)
+    pl = best_pl[r, best_m]
+    occ = occ_idx[r, best_m, pl]
+    mpos = mini_pos[r, best_m]
+    wins = gather_windows(segments, occ, mpos, read_len=cfg.read_len,
+                          k=cfg.k, eth=cfg.eth)                  # (R, wlen)
+    _, _, dirs = wfb.affine_wf_dirs(reads, wins, eth=cfg.eth,
+                                    sat=cfg.sat_affine,
+                                    backend=cfg.wf_backend,
+                                    block_r=cfg.aff_block_r)
+    max_ops = cfg.max_ops or 2 * cfg.read_len + 2
+    ops, op_count = affine_wf.traceback(dirs, cfg.eth, max_ops)
+    ops = jnp.where(mapped[:, None], ops, affine_wf.OP_NONE)
+    op_count = jnp.where(mapped, op_count, 0)
+    return ops, op_count
+
+
+def _map_chunk_compacted(dev, reads: jnp.ndarray, cfg: MapperConfig,
+                         n_real: int):
+    """One chunk through the staged engine.  Host code between the jit
+    stages measures candidate/survivor counts and picks static bucket
+    capacities (``bucket_capacity``), so each jit sees a fixed shape.
+
+    ``n_real`` is the unpadded read count: executed-instance stats count
+    the whole (shape-static) chunk, but candidate/survivor accounting and
+    the padded-equivalent baselines exclude the zero-padding reads so the
+    reported pruning reflects the actual workload.
+    """
+    uniq_kmers, offsets, positions, segments = dev
+    R = reads.shape[0]
+    M, P = cfg.max_minis, cfg.max_pls
+
+    seeds = seed_reads(uniq_kmers, offsets, reads, cfg.seed_params)
+    occ_idx, occ_valid = seeds["occ_idx"], seeds["occ_valid"]
+    mini_pos = seeds["mini_pos"]
+
+    n_valid = int(jnp.sum(occ_valid))
+    lin_cap = bucket_capacity(n_valid, align=cfg.lin_block_r,
+                              cap_max=R * M * P)
+    lin_end, best_pl, pass_filter, n_cand = _linear_stage(
+        segments, reads, occ_idx, occ_valid, mini_pos, cfg, lin_cap)
+
+    n_surv = int(jnp.sum(pass_filter))
+    aff_cap = bucket_capacity(n_surv, align=cfg.aff_block_r, cap_max=R * M)
+    best_aff, mapped, position, best_m = _affine_stage(
+        segments, positions, reads, occ_idx, mini_pos, best_pl, pass_filter,
+        cfg, aff_cap)
+
+    ops, op_count = _traceback_stage(segments, reads, occ_idx, mini_pos,
+                                     best_pl, best_m, mapped, cfg)
+
+    if n_real == R:
+        n_valid_real, n_surv_real = n_valid, n_surv
+    else:
+        n_valid_real = int(jnp.sum(occ_valid[:n_real]))
+        n_surv_real = int(jnp.sum(pass_filter[:n_real]))
+    stats = dict(candidates_valid=n_valid_real,
+                 linear_instances=lin_cap,
+                 padded_linear_instances=n_real * M * P,
+                 survivors=n_surv_real,
+                 affine_dist_instances=aff_cap,
+                 padded_affine_instances=n_real * M,
+                 affine_dirs_instances=n_real)
+    out = dict(position=position, distance=best_aff, mapped=mapped, ops=ops,
+               op_count=op_count, linear_dist=lin_end, n_candidates=n_cand)
+    return out, stats
+
+
+def _merge_stats(parts: list[dict]) -> dict:
+    out = {k: sum(p[k] for p in parts) for k in parts[0]}
+    out["pruning_ratio"] = (
+        1.0 - out["survivors"] / max(out["candidates_valid"], 1))
+    out["n_chunks"] = len(parts)
+    return out
+
+
 def map_reads(index: GenomeIndex, reads: np.ndarray,
               cfg: MapperConfig | None = None) -> MappingResult:
-    """Host-friendly wrapper: numpy index + reads -> MappingResult."""
+    """Host-friendly wrapper: numpy index + reads -> MappingResult.
+
+    ``cfg.engine`` selects the padded reference or the candidate-compacted
+    engine (default); both produce identical positions/distances.  The
+    compacted engine streams ``cfg.chunk_reads``-sized read chunks and
+    reports its instance accounting in ``MappingResult.stats``.
+    """
     cfg = cfg or MapperConfig(read_len=index.read_len, k=index.k, w=index.w,
                               eth=index.eth)
-    out = map_reads_jax(jnp.asarray(index.uniq_kmers),
-                        jnp.asarray(index.offsets),
-                        jnp.asarray(index.positions),
-                        jnp.asarray(index.segments),
-                        jnp.asarray(reads), cfg)
-    return MappingResult(position=np.asarray(out["position"]),
-                         distance=np.asarray(out["distance"]),
-                         mapped=np.asarray(out["mapped"]),
-                         ops=np.asarray(out["ops"]),
-                         op_count=np.asarray(out["op_count"]),
-                         linear_dist=np.asarray(out["linear_dist"]),
-                         n_candidates=np.asarray(out["n_candidates"]))
+    dev = (jnp.asarray(index.uniq_kmers), jnp.asarray(index.offsets),
+           jnp.asarray(index.positions), jnp.asarray(index.segments))
+
+    if cfg.engine == "padded":
+        out = map_reads_jax(*dev, jnp.asarray(reads), cfg)
+        parts, stats = [out], None
+    elif cfg.engine == "compacted":
+        R = len(reads)
+        chunk = cfg.chunk_reads or max(R, 1)
+        parts, stat_parts = [], []
+        for c0 in range(0, R, chunk):
+            sub = np.asarray(reads[c0 : c0 + chunk])
+            pad = chunk - len(sub)
+            if pad:  # keep the chunk shape static; trim the outputs below
+                sub = np.concatenate(
+                    [sub, np.zeros((pad, sub.shape[1]), sub.dtype)])
+            out, st = _map_chunk_compacted(dev, jnp.asarray(sub), cfg,
+                                           chunk - pad)
+            if pad:
+                out = {k: v[: chunk - pad] for k, v in out.items()}
+            parts.append(out)
+            stat_parts.append(st)
+        stats = _merge_stats(stat_parts)
+    else:
+        raise ValueError(f"unknown engine {cfg.engine!r}")
+
+    cat = (lambda k: np.asarray(parts[0][k]) if len(parts) == 1 else
+           np.concatenate([np.asarray(p[k]) for p in parts]))
+    return MappingResult(position=cat("position"), distance=cat("distance"),
+                         mapped=cat("mapped"), ops=cat("ops"),
+                         op_count=cat("op_count"),
+                         linear_dist=cat("linear_dist"),
+                         n_candidates=cat("n_candidates"), stats=stats)
 
 
 def oracle_map(ref: np.ndarray, reads: np.ndarray, eth: int = 6,
-               chunk: int = 4096) -> np.ndarray:
+               chunk: int = 4096):
     """Exhaustive banded-WF scan over every reference position (BWA-MEM
     stand-in ground truth for accuracy tests).  O(G * R) — small inputs only.
 
-    Returns (R,) best position per read (ties -> leftmost).
+    Returns ``(best_p, best_d)``: per-read best position (ties -> leftmost)
+    and its banded-WF distance, each of shape (R,).
     """
     rl = reads.shape[1]
     G = len(ref)

@@ -1,0 +1,80 @@
+"""WF backend dispatch: ``"jnp"`` reference | ``"pallas"`` kernels.
+
+One switch, threaded through ``MapperConfig`` into the filtering, pipeline
+and distributed layers, selects the execution engine for every banded-WF
+stage:
+
+  * ``"jnp"``    — the pure-jnp batched references in ``repro.core``
+    (always available, shape-polymorphic);
+  * ``"pallas"`` — the lane-parallel kernels in ``repro.kernels``, in
+    interpret mode on CPU (correctness of the exact TPU code) and compiled
+    on TPU.  Inputs are flattened to one instance axis and handed to the
+    (seq, instances)-transposed kernels; the ops wrappers pad to the kernel
+    block size, so any instance count is accepted — the compacted pipeline
+    picks lane-aligned capacities so that padding is a no-op.
+
+All three entry points accept arbitrary leading batch dims like the jnp
+references do.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .affine_wf import banded_affine, banded_affine_dist
+from .linear_wf import banded_wf
+
+BACKENDS = ("jnp", "pallas")
+
+
+def _check(backend: str) -> None:
+    if backend not in BACKENDS:
+        raise ValueError(f"wf_backend must be one of {BACKENDS}, "
+                         f"got {backend!r}")
+
+
+def linear_wf_dist(s1: jnp.ndarray, s2_window: jnp.ndarray, *, eth: int,
+                   backend: str = "jnp", block_r: int = 512):
+    """Banded linear WF distances.  s1 (..., n), s2_window (..., n+2*eth) ->
+    (dist_end, dist_min) int32 of shape (...)."""
+    _check(backend)
+    if backend == "jnp":
+        return banded_wf(s1, s2_window, eth=eth)
+    from repro.kernels import ops
+    lead = s1.shape[:-1]
+    de, dm = ops.linear_wf(s1.reshape(-1, s1.shape[-1]),
+                           s2_window.reshape(-1, s2_window.shape[-1]),
+                           eth=eth, block_r=block_r)
+    return de.reshape(lead), dm.reshape(lead)
+
+
+def affine_wf_dist(s1: jnp.ndarray, s2_window: jnp.ndarray, *, eth: int,
+                   sat: int, backend: str = "jnp", block_r: int = 256):
+    """Distance-only banded affine WF (no direction planes)."""
+    _check(backend)
+    if backend == "jnp":
+        return banded_affine_dist(s1, s2_window, eth=eth, sat=sat)
+    from repro.kernels import ops
+    lead = s1.shape[:-1]
+    de, dm = ops.affine_wf_dist(s1.reshape(-1, s1.shape[-1]),
+                                s2_window.reshape(-1, s2_window.shape[-1]),
+                                eth=eth, sat=sat, block_r=block_r)
+    return de.reshape(lead), dm.reshape(lead)
+
+
+def affine_wf_dirs(s1: jnp.ndarray, s2_window: jnp.ndarray, *, eth: int,
+                   sat: int, backend: str = "jnp", block_r: int = 256):
+    """Banded affine WF with packed direction planes (traceback pass).
+
+    Returns (dist_end, dist_min, dirs (..., n, 2*eth+1) uint8)."""
+    _check(backend)
+    if backend == "jnp":
+        return banded_affine(s1, s2_window, eth=eth, sat=sat)
+    from repro.kernels import ops
+    lead = s1.shape[:-1]
+    n = s1.shape[-1]
+    band = 2 * eth + 1
+    de, dm, dirs = ops.affine_wf(s1.reshape(-1, n),
+                                 s2_window.reshape(-1, s2_window.shape[-1]),
+                                 eth=eth, sat=sat, block_r=block_r)
+    return (de.reshape(lead), dm.reshape(lead),
+            dirs.reshape(lead + (n, band)))

@@ -7,8 +7,17 @@ DART-PIM's traceback rows (4 bits/cell; we emit one uint8 per cell, packed
 dD | dM1<<2 | dM2<<3, into an (n * band, R) plane so traceback runs without
 re-computing values).
 
+Two entry points share the row recurrence:
+  ``affine_wf_pallas``      — distances + direction planes (traceback pass,
+                              runs on the one winner per read);
+  ``affine_wf_dist_pallas`` — distances only.  No (n * band, R) plane is
+                              allocated or written; this is the kernel the
+                              compacted pipeline runs on every filter
+                              survivor.
+
 VMEM per block (block_r = 256, n = 150, eth = 6): inputs ~78 KiB, three
-bands ~10 KiB, dirs block n*band*block_r = 487 KiB — comfortably resident.
+bands ~10 KiB, dirs block n*band*block_r = 487 KiB — comfortably resident
+(and absent entirely in the dist-only variant).
 """
 from __future__ import annotations
 
@@ -19,65 +28,105 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(s1_ref, s2_ref, out_ref, dirs_ref, *, eth: int, n: int, sat: int):
+def _row_step(Dp, M1p, M2p, chars, s1c, d_col, i, *, eth: int, sat8,
+              block_r: int, emit_dirs: bool):
+    """One band-row update shared by both kernels.
+
+    Returns (Dn, M1n, M2n, bytes_or_None); direction-byte work is only
+    emitted when ``emit_dirs`` (the dist-only kernel never materializes it).
+    """
     band = 2 * eth + 1
-    block_r = s1_ref.shape[1]
+    big = (sat8 + 40).astype(jnp.int8)
+    match = chars == s1c[None, :]
+    j = i + d_col - eth                                   # (band, 1)
+
+    shift = lambda a: jnp.concatenate(
+        [a[1:], jnp.full((1, block_r), big, jnp.int8)], axis=0)
+    m1_ext = shift(M1p) + 1                               # raw
+    m1_open = shift(Dp) + 2                               # raw
+    M1n = jnp.minimum(jnp.minimum(m1_ext, m1_open), sat8).astype(jnp.int8)
+    dM1 = (m1_open < m1_ext).astype(jnp.uint8) if emit_dirs else None
+    M1n = jnp.where(j >= 0, M1n, sat8).astype(jnp.int8)
+
+    d_left = jnp.full((block_r,), big, jnp.int8)
+    m2_left = jnp.full((block_r,), big, jnp.int8)
+    D_rows, M2_rows, B_rows = [], [], []
+    for dd in range(band):
+        jj = j[dd, 0]
+        m2_ext = m2_left + 1
+        m2_open = d_left + 2
+        m2n = jnp.minimum(jnp.minimum(m2_ext, m2_open), sat8)
+        m2n = jnp.where(jj <= 0, sat8, m2n).astype(jnp.int8)
+        sub_raw = Dp[dd] + 1
+        m1n = M1n[dd]
+        dmin = jnp.minimum(jnp.minimum(sub_raw, m1n), m2n)
+        dval = jnp.where(match[dd], Dp[dd], jnp.minimum(dmin, sat8))
+        dval = jnp.where(jj == 0, m1n, dval)
+        dval = jnp.where(jj < 0, sat8, dval).astype(jnp.int8)
+        if emit_dirs:
+            dm2 = (m2_open < m2_ext).astype(jnp.uint8)
+            ddir = jnp.where(
+                match[dd], jnp.uint8(0),
+                jnp.where(dmin == sub_raw, jnp.uint8(1),
+                          jnp.where(dmin == m1n, jnp.uint8(2), jnp.uint8(3))))
+            ddir = jnp.where(jj == 0, jnp.uint8(2), ddir)
+            byte = (ddir | (dM1[dd] << 2) | (dm2 << 3)).astype(jnp.uint8)
+            byte = jnp.where(jj < 0, jnp.uint8(0), byte)
+            B_rows.append(byte)
+        D_rows.append(dval)
+        M2_rows.append(m2n)
+        d_left, m2_left = dval, m2n
+    Dn = jnp.stack(D_rows, axis=0)
+    M2n = jnp.stack(M2_rows, axis=0)
+    bytes_ = jnp.stack(B_rows, axis=0) if emit_dirs else None
+    return Dn, M1n, M2n, bytes_
+
+
+def _init_bands(eth: int, sat: int, block_r: int):
+    band = 2 * eth + 1
     sat8 = jnp.int8(sat)
-    big = jnp.int8(sat + 40)
     d_col = jax.lax.broadcasted_iota(jnp.int32, (band, 1), 0)
     j0 = d_col - eth
-
     D0 = jnp.where(j0 < 0, sat, jnp.minimum(jnp.where(j0 == 0, 0, 1 + j0),
                                             sat)).astype(jnp.int8)
     D0 = jnp.broadcast_to(D0, (band, block_r))
     M10 = jnp.full((band, block_r), sat8)
     M20 = jnp.broadcast_to(jnp.where(j0 > 0, D0[:, :1], sat8), (band, block_r))
+    return d_col, sat8, D0, M10, M20
+
+
+def _kernel(s1_ref, s2_ref, out_ref, dirs_ref, *, eth: int, n: int, sat: int):
+    band = 2 * eth + 1
+    block_r = s1_ref.shape[1]
+    d_col, sat8, D0, M10, M20 = _init_bands(eth, sat, block_r)
 
     def row(i, carry):
         Dp, M1p, M2p = carry
         chars = s2_ref[pl.ds(i - 1, band), :]
         s1c = s1_ref[i - 1, :]
-        match = chars == s1c[None, :]
-        j = i + d_col - eth                                  # (band, 1)
+        Dn, M1n, M2n, bytes_ = _row_step(Dp, M1p, M2p, chars, s1c, d_col, i,
+                                         eth=eth, sat8=sat8, block_r=block_r,
+                                         emit_dirs=True)
+        dirs_ref[pl.ds((i - 1) * band, band), :] = bytes_
+        return (Dn, M1n, M2n)
 
-        shift = lambda a: jnp.concatenate(
-            [a[1:], jnp.full((1, block_r), big, jnp.int8)], axis=0)
-        m1_ext = shift(M1p) + 1                               # raw
-        m1_open = shift(Dp) + 2                               # raw
-        M1n = jnp.minimum(jnp.minimum(m1_ext, m1_open), sat8).astype(jnp.int8)
-        dM1 = (m1_open < m1_ext).astype(jnp.uint8)
-        M1n = jnp.where(j >= 0, M1n, sat8).astype(jnp.int8)
+    D, _, _ = jax.lax.fori_loop(1, n + 1, row, (D0, M10, M20))
+    out_ref[0, :] = D[eth, :].astype(jnp.int32)
+    out_ref[1, :] = jnp.min(D, axis=0).astype(jnp.int32)
 
-        d_left = jnp.full((block_r,), big, jnp.int8)
-        m2_left = jnp.full((block_r,), big, jnp.int8)
-        D_rows, M2_rows, B_rows = [], [], []
-        for dd in range(band):
-            jj = j[dd, 0]
-            m2_ext = m2_left + 1
-            m2_open = d_left + 2
-            m2n = jnp.minimum(jnp.minimum(m2_ext, m2_open), sat8)
-            dm2 = (m2_open < m2_ext).astype(jnp.uint8)
-            m2n = jnp.where(jj <= 0, sat8, m2n).astype(jnp.int8)
-            sub_raw = Dp[dd] + 1
-            m1n = M1n[dd]
-            dmin = jnp.minimum(jnp.minimum(sub_raw, m1n), m2n)
-            dval = jnp.where(match[dd], Dp[dd], jnp.minimum(dmin, sat8))
-            ddir = jnp.where(
-                match[dd], jnp.uint8(0),
-                jnp.where(dmin == sub_raw, jnp.uint8(1),
-                          jnp.where(dmin == m1n, jnp.uint8(2), jnp.uint8(3))))
-            dval = jnp.where(jj == 0, m1n, dval)
-            ddir = jnp.where(jj == 0, jnp.uint8(2), ddir)
-            dval = jnp.where(jj < 0, sat8, dval).astype(jnp.int8)
-            byte = (ddir | (dM1[dd] << 2) | (dm2 << 3)).astype(jnp.uint8)
-            byte = jnp.where(jj < 0, jnp.uint8(0), byte)
-            D_rows.append(dval)
-            M2_rows.append(m2n)
-            B_rows.append(byte)
-            d_left, m2_left = dval, m2n
-        Dn = jnp.stack(D_rows, axis=0)
-        M2n = jnp.stack(M2_rows, axis=0)
-        dirs_ref[pl.ds((i - 1) * band, band), :] = jnp.stack(B_rows, axis=0)
+
+def _kernel_dist(s1_ref, s2_ref, out_ref, *, eth: int, n: int, sat: int):
+    band = 2 * eth + 1
+    block_r = s1_ref.shape[1]
+    d_col, sat8, D0, M10, M20 = _init_bands(eth, sat, block_r)
+
+    def row(i, carry):
+        Dp, M1p, M2p = carry
+        chars = s2_ref[pl.ds(i - 1, band), :]
+        s1c = s1_ref[i - 1, :]
+        Dn, M1n, M2n, _ = _row_step(Dp, M1p, M2p, chars, s1c, d_col, i,
+                                    eth=eth, sat8=sat8, block_r=block_r,
+                                    emit_dirs=False)
         return (Dn, M1n, M2n)
 
     D, _, _ = jax.lax.fori_loop(1, n + 1, row, (D0, M10, M20))
@@ -112,5 +161,29 @@ def affine_wf_pallas(s1T: jnp.ndarray, s2T: jnp.ndarray, *, eth: int = 6,
             jax.ShapeDtypeStruct((2, R), jnp.int32),
             jax.ShapeDtypeStruct((n * band, R), jnp.uint8),
         ],
+        interpret=interpret,
+    )(s1T, s2T)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eth", "sat", "block_r", "interpret"))
+def affine_wf_dist_pallas(s1T: jnp.ndarray, s2T: jnp.ndarray, *, eth: int = 6,
+                          sat: int = 32, block_r: int = 256,
+                          interpret: bool = True):
+    """Distance-only variant: s1T (n, R), s2T (n+2*eth, R) int8 ->
+    (2, R) int32 [dist_end; dist_min].  No direction plane is produced."""
+    n, R = s1T.shape
+    assert s2T.shape == (n + 2 * eth, R)
+    assert R % block_r == 0
+    grid = (R // block_r,)
+    return pl.pallas_call(
+        functools.partial(_kernel_dist, eth=eth, n=n, sat=sat),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, block_r), lambda r: (0, r)),
+            pl.BlockSpec((n + 2 * eth, block_r), lambda r: (0, r)),
+        ],
+        out_specs=pl.BlockSpec((2, block_r), lambda r: (0, r)),
+        out_shape=jax.ShapeDtypeStruct((2, R), jnp.int32),
         interpret=interpret,
     )(s1T, s2T)

@@ -14,7 +14,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .affine_wf import affine_wf_pallas
+from .affine_wf import affine_wf_dist_pallas, affine_wf_pallas
 from .linear_wf import linear_wf_pallas
 from .minimizer import minimizer_pallas
 
@@ -63,6 +63,22 @@ def affine_wf(s1: jnp.ndarray, s2_window: jnp.ndarray, *, eth: int = 6,
                                     block_r=block_r, interpret=not on_tpu())
     dirs = dirsT[:, :R].T.reshape(R, n, band)
     return dists[0, :R], dists[1, :R], dirs
+
+
+@functools.partial(jax.jit, static_argnames=("eth", "sat", "block_r"))
+def affine_wf_dist(s1: jnp.ndarray, s2_window: jnp.ndarray, *, eth: int = 6,
+                   sat: int = 32, block_r: int = 256):
+    """Distance-only banded affine WF via the Pallas kernel (no direction
+    planes — the compacted pipeline's survivor pass).
+
+    s1 (R, n), s2_window (R, n+2*eth) uint8 ->
+    (dist_end (R,), dist_min (R,)) int32.
+    """
+    s1T, R = _pad_r(s1.astype(jnp.int8).T, block_r)
+    s2T, _ = _pad_r(s2_window.astype(jnp.int8).T, block_r)
+    out = affine_wf_dist_pallas(s1T, s2T, eth=eth, sat=sat, block_r=block_r,
+                                interpret=not on_tpu())
+    return out[0, :R], out[1, :R]
 
 
 @functools.partial(jax.jit, static_argnames=("k", "w", "block_r"))

@@ -1,0 +1,71 @@
+"""Minimal deterministic stand-in for ``hypothesis``.
+
+Loaded by ``tests/conftest.py`` only when the real package is not
+installed (some CI/container images lack it; ``pip install -r
+requirements-dev.txt`` gets the real thing).  Implements just the subset
+this suite uses — ``@given`` / ``@settings`` with ``st.integers`` and
+``st.lists`` — by drawing ``max_examples`` pseudo-random examples from a
+per-test seeded RNG, so runs are reproducible but carry none of
+hypothesis' shrinking or database machinery.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+import random
+
+__version__ = "0.0.0-stub"
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+
+class strategies:  # noqa: N801 — mirrors the real module-as-namespace use
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int | None = None) -> _Strategy:
+        hi = (min_size + 16) if max_size is None else max_size
+
+        def draw(rng):
+            return [elements._draw(rng) for _ in range(rng.randint(min_size,
+                                                                   hi))]
+        return _Strategy(draw)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Records max_examples on the decorated function (order-agnostic
+    w.r.t. @given: the runner checks both the wrapper and the inner fn)."""
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            n = getattr(run, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            key = f"{fn.__module__}.{fn.__qualname__}".encode()
+            rng = random.Random(int(hashlib.sha256(key).hexdigest()[:12], 16))
+            for _ in range(n):
+                drawn = [s._draw(rng) for s in strats]
+                fn(*args, *drawn, **kwargs)
+        # hide the wrapped signature, else pytest mistakes the strategy
+        # parameters for fixtures
+        run.__dict__.pop("__wrapped__", None)
+        run.__signature__ = inspect.Signature()
+        return run
+    return deco
