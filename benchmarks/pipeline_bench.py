@@ -1,10 +1,17 @@
 """End-to-end mapping pipeline wall time on CPU: padded reference vs the
-candidate-compacted engine (jnp and Pallas backends), plus full-system
-iteration counts feeding Eq. 6 (the full-system-simulator analog).
+candidate-compacted engine (jnp and Pallas backends; synchronous vs async
+double-buffered streaming), plus full-system iteration counts feeding
+Eq. 6 (the full-system-simulator analog).
 
 ``bench_pipeline`` is the machine-readable entry (``benchmarks/run.py
---pipeline-json`` writes its output to BENCH_pipeline.json); ``rows`` keeps
-the CSV harness fast with a smaller read batch.
+--pipeline-json`` writes its output to BENCH_pipeline.json); ``rows``
+keeps the CSV harness fast with a smaller read batch.
+
+``python -m benchmarks.pipeline_bench --chunk-sweep`` sweeps chunk sizes:
+for each, the fully synchronous engine (stream=False) reports per-stage
+wall time (host prep / transfer / per-stage compute / fetch) and the
+streamed engine reports its reads/s next to it, so the double-buffering
+win is measured, not asserted.
 """
 import time
 
@@ -28,24 +35,36 @@ def _make_world(genome: int):
     return ref, build_index(ref)
 
 
-def bench_pipeline(R: int = 1024, genome: int = 30_000,
-                   include_pallas: bool = True, world=None) -> dict:
-    """Compare the execution engines at batch size R.  Returns a dict with
+def bench_pipeline(R: int = 4096, genome: int = 30_000,
+                   chunk_reads: int | None = 1024,
+                   include_pallas: bool = True, include_padded: bool = True,
+                   world=None) -> dict:
+    """Compare the execution engines at batch size R (``chunk_reads``-sized
+    streaming chunks for the compacted engines).  Returns a dict with
     per-engine wall time / per-read time, the measured candidate-pruning
-    ratio, and the affine instance counts (padded vs compacted)."""
+    ratio, the affine instance counts (padded vs compacted), and the
+    streamed-vs-synchronous speedup of the Pallas engine."""
     ref, idx = world or _make_world(genome)
     rs = sample_reads(ref, R, seed=2)
+    if chunk_reads and chunk_reads >= R:
+        chunk_reads = None  # single chunk: stream/sync distinction is moot
 
-    engines = {
-        "padded_jnp": MapperConfig(engine="padded", wf_backend="jnp"),
-        "compacted_jnp": MapperConfig(engine="compacted", wf_backend="jnp"),
-    }
+    engines = {}
+    if include_padded:
+        engines["padded_jnp"] = MapperConfig(engine="padded",
+                                             wf_backend="jnp")
+    engines["compacted_jnp"] = MapperConfig(
+        engine="compacted", wf_backend="jnp", chunk_reads=chunk_reads)
     if include_pallas:
-        engines["compacted_pallas"] = MapperConfig(engine="compacted",
-                                                   wf_backend="pallas")
+        engines["compacted_pallas_sync"] = MapperConfig(
+            engine="compacted", wf_backend="pallas", chunk_reads=chunk_reads,
+            stream=False)
+        engines["compacted_pallas"] = MapperConfig(
+            engine="compacted", wf_backend="pallas", chunk_reads=chunk_reads)
 
-    out = {"R": R, "genome": genome, "engines": {}}
-    baseline = None
+    out = {"R": R, "genome": genome, "chunk_reads": chunk_reads,
+           "engines": {}}
+    baseline = base_dt = sync_dt = None
     for name, cfg in engines.items():
         try:
             res, dt = _timed_map(idx, rs.reads, cfg)
@@ -66,15 +85,52 @@ def bench_pipeline(R: int = 1024, genome: int = 30_000,
             entry["matches_padded"] = bool(
                 (res.position == baseline.position).all()
                 and (res.distance == baseline.distance).all())
+        if name == "compacted_pallas_sync":
+            sync_dt = dt
+        elif name == "compacted_pallas" and sync_dt is not None:
+            entry["speedup_vs_sync"] = round(sync_dt / dt, 2)
         if res.stats:
-            entry.update(res.stats)
+            st = dict(res.stats)
+            st.pop("stream", None)
+            entry.update(st)
         out["engines"][name] = entry
+    return out
+
+
+def chunk_sweep(R: int = 4096, genome: int = 30_000,
+                sizes=(512, 1024, 2048), wf_backend: str = "pallas",
+                world=None) -> list[dict]:
+    """reads/s across chunk sizes, streamed vs synchronous, with the sync
+    run's per-stage wall-time breakdown."""
+    ref, idx = world or _make_world(genome)
+    rs = sample_reads(ref, R, seed=2)
+    usable = [s for s in sizes if s < R]
+    if len(usable) < len(sizes):
+        print(f"chunk-sweep: dropping sizes >= R={R} "
+              f"({sorted(set(sizes) - set(usable))}): a single-chunk run "
+              f"has nothing to double-buffer")
+    out = []
+    for chunk in usable:
+        row = {"chunk_reads": chunk}
+        for stream in (False, True):
+            cfg = MapperConfig(engine="compacted", wf_backend=wf_backend,
+                               chunk_reads=chunk, stream=stream)
+            res, dt = _timed_map(idx, rs.reads, cfg)
+            key = "stream" if stream else "sync"
+            row[f"{key}_reads_per_s"] = round(R / dt, 1)
+            row[f"{key}_wall_s"] = round(dt, 4)
+            if not stream:
+                row["stage_times_s"] = res.stats["stage_times_s"]
+        row["stream_speedup"] = round(row["sync_wall_s"]
+                                      / row["stream_wall_s"], 2)
+        out.append(row)
     return out
 
 
 def rows():
     world = _make_world(30_000)
-    bench = bench_pipeline(R=128, include_pallas=False, world=world)
+    bench = bench_pipeline(R=128, chunk_reads=None, include_pallas=False,
+                           world=world)
     pad = bench["engines"]["padded_jnp"]
     cmp_ = bench["engines"]["compacted_jnp"]
 
@@ -98,3 +154,34 @@ def rows():
         ("fullsys_eq6_dpmem_s", round(t_dp, 4),
          f"K_L={k_l:.0f} K_A={k_a:.0f} J_L={j_l:.3g} J_A={j_a:.3g}"),
     ]
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--chunk-sweep", action="store_true",
+                    help="sweep chunk sizes: streamed vs sync reads/s + "
+                         "per-stage wall times")
+    ap.add_argument("--reads", type=int, default=4096)
+    ap.add_argument("--genome", type=int, default=30_000)
+    ap.add_argument("--sizes", type=int, nargs="+", default=[512, 1024, 2048])
+    ap.add_argument("--wf-backend", default="pallas",
+                    choices=("jnp", "pallas"))
+    args = ap.parse_args()
+    if not args.chunk_sweep:
+        ap.error("use benchmarks/run.py for the CSV/JSON harness; this "
+                 "entry point only serves --chunk-sweep")
+    for row in chunk_sweep(R=args.reads, genome=args.genome,
+                           sizes=tuple(args.sizes),
+                           wf_backend=args.wf_backend):
+        st = row.pop("stage_times_s")
+        breakdown = " ".join(f"{k}={v:.3f}" for k, v in st.items())
+        print(f"chunk={row['chunk_reads']:>5}: "
+              f"sync={row['sync_reads_per_s']:>8.1f} r/s "
+              f"stream={row['stream_reads_per_s']:>8.1f} r/s "
+              f"speedup={row['stream_speedup']:.2f}x\n"
+              f"             sync stages [s]: {breakdown}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,19 +4,28 @@ Default mode prints ``name,value,derived`` CSV (value is us_per_call for
 timed rows, the modelled/papers' metric otherwise).
 
 ``--pipeline-json [PATH]`` instead runs the end-to-end engine comparison
-(padded reference vs candidate-compacted, jnp vs Pallas backends) at
-R=1024 and writes the result to PATH (default BENCH_pipeline.json), so the
-perf trajectory is tracked across PRs.
+(padded reference vs candidate-compacted, jnp vs Pallas backends,
+synchronous vs streamed chunk execution) at ``--reads`` / ``--chunk-reads``
+and writes the result to PATH (default BENCH_pipeline.json), so the perf
+trajectory is tracked across PRs.  ``--check-against BASELINE.json`` then
+compares the fresh run to a committed baseline and exits non-zero when
+the streamed Pallas engine's reads/s regressed more than ``--tolerance``
+(the CI perf-trend gate).
 """
 import argparse
 import json
 import sys
 import time
 
+REGRESSION_ENGINE = "compacted_pallas"
+REGRESSION_METRIC = "reads_per_s"
 
-def emit_pipeline_json(path: str, reads: int) -> None:
+
+def emit_pipeline_json(path: str, reads: int, chunk_reads: int | None,
+                       include_padded: bool) -> dict:
     from benchmarks.pipeline_bench import bench_pipeline
-    bench = bench_pipeline(R=reads)
+    bench = bench_pipeline(R=reads, chunk_reads=chunk_reads,
+                           include_padded=include_padded)
     with open(path, "w") as f:
         json.dump(bench, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -30,10 +39,40 @@ def emit_pipeline_json(path: str, reads: int) -> None:
                          f"/{e['padded_affine_instances']}padded"
                          f" survivors={e['survivors']}"
                          f" pruning={e['pruning_ratio']:.3f}")
+            if "speedup_vs_sync" in e:
+                extra += f" stream_speedup={e['speedup_vs_sync']}x"
             print(f"{name}: {e['wall_s']:.3f}s "
                   f"{e['per_read_us']:.1f}us/read "
                   f"speedup={e.get('speedup_vs_padded', 1.0)}x{extra}")
     print(f"wrote {path}")
+    return bench
+
+
+def check_regression(fresh: dict, baseline_path: str,
+                     tolerance: float) -> int:
+    """Non-zero when the streamed Pallas engine regressed > tolerance
+    vs the committed baseline (the CI perf-trend gate)."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    try:
+        b = base["engines"][REGRESSION_ENGINE][REGRESSION_METRIC]
+    except KeyError:
+        print(f"perf-trend: baseline {baseline_path} lacks "
+              f"{REGRESSION_ENGINE}.{REGRESSION_METRIC}; skipping check")
+        return 0
+    e = fresh["engines"].get(REGRESSION_ENGINE, {})
+    if "error" in e or REGRESSION_METRIC not in e:
+        print(f"perf-trend: FAIL — fresh run has no "
+              f"{REGRESSION_ENGINE}.{REGRESSION_METRIC}: "
+              f"{e.get('error', 'missing')}")
+        return 1
+    f_ = e[REGRESSION_METRIC]
+    floor = (1.0 - tolerance) * b
+    verdict = "OK" if f_ >= floor else "FAIL"
+    print(f"perf-trend: {verdict} — {REGRESSION_ENGINE}.{REGRESSION_METRIC} "
+          f"fresh={f_:.1f} baseline={b:.1f} floor={floor:.1f} "
+          f"(tolerance {tolerance:.0%})")
+    return 0 if f_ >= floor else 1
 
 
 def run_csv() -> None:
@@ -69,11 +108,28 @@ def main() -> None:
                     default=None, metavar="PATH",
                     help="write the end-to-end engine comparison JSON "
                          "instead of the CSV sweep")
-    ap.add_argument("--reads", type=int, default=1024,
-                    help="batch size for --pipeline-json (default 1024)")
+    ap.add_argument("--reads", type=int, default=4096,
+                    help="batch size for --pipeline-json (default 4096)")
+    ap.add_argument("--chunk-reads", type=int, default=1024,
+                    help="streaming chunk size (0 = unchunked; default 1024)")
+    ap.add_argument("--no-padded", action="store_true",
+                    help="skip the slow padded-jnp reference (CI perf job)")
+    ap.add_argument("--check-against", metavar="BASELINE", default=None,
+                    help="compare the fresh --pipeline-json run to this "
+                         "baseline JSON; exit 1 on >tolerance regression")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed reads/s regression fraction (default .15)")
     args = ap.parse_args()
+    if args.check_against and not args.pipeline_json:
+        ap.error("--check-against requires --pipeline-json (the gate "
+                 "compares a fresh pipeline run)")
     if args.pipeline_json:
-        emit_pipeline_json(args.pipeline_json, args.reads)
+        bench = emit_pipeline_json(args.pipeline_json, args.reads,
+                                   args.chunk_reads or None,
+                                   include_padded=not args.no_padded)
+        if args.check_against:
+            raise SystemExit(check_regression(bench, args.check_against,
+                                              args.tolerance))
     else:
         run_csv()
 

@@ -9,7 +9,9 @@ On a TPU mesh this is:
   all_to_all           : one collective replaces the paper's 1556 GB of
                          CPU<->memory PL traffic
   stage B (index owner): local lookup -> banded linear WF over <=max_pls PLs
-                         -> min-extract -> banded affine WF on the winner
+                         -> min-extract -> filter -> banded affine WF on the
+                         compacted survivors only (static capacity from
+                         ``stage_b_affine_capacity``, overflow dropped)
   all_to_all (return)  : (read_id, distance, position) echoes to the owner
   stage C (read owner) : scatter-min per read  (main-RISC-V reduce)
 
@@ -24,6 +26,7 @@ segment duplication.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 
 import jax
@@ -31,12 +34,52 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import wf_backend as wfb
+from .compaction import bucket_capacity, compact_indices, scatter_to
 from .filtering import gather_windows
 from .index import GenomeIndex
 from .minimizers import hash32, unique_read_minimizers
 from .pipeline import MapperConfig
 
 AXIS = "shards"
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions: the top-level API landed after
+    0.4.x; older releases carry it in jax.experimental with ``check_rep``
+    instead of ``check_vma`` (both disabled — scan carries are created
+    fresh inside the body)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
+def stage_b_affine_capacity(n_entries: int, cfg: MapperConfig) -> int:
+    """Static survivor capacity for stage B's affine pass.
+
+    Stage B is inside one jit (no host sync between the filter and the
+    affine stage), so the survivor-bucket capacity must be *negotiated*
+    up front rather than measured per batch: each of the ``n_entries``
+    bucket slots contributes at most one affine candidate (its best of
+    ``max_pls`` PLs), and a slot only survives when it is occupied, its
+    minimizer is found, and its best linear distance clears the filter
+    threshold.  ``cfg.stage_b_survivor_frac`` is the provisioned fraction
+    of that bound (drop-on-overflow beyond it — the Reads-FIFO semantics);
+    a threshold that cannot reject anything (``> eth``) disables the
+    filter, so provisioning falls back to full capacity.
+    """
+    frac = 1.0 if cfg.filter_threshold > cfg.eth else \
+        max(min(cfg.stage_b_survivor_frac, 1.0), 0.0)
+    want = int(np.ceil(n_entries * frac))
+    cap = bucket_capacity(want, align=cfg.aff_block_r, cap_max=n_entries)
+    # neither the lane-align floor nor the pow-2 rounding may outgrow the
+    # entry count: a "compacted" pass larger than its input would be a
+    # pessimization.  A non-pow2/non-aligned cap is safe here — stage B
+    # compiles once per program and the kernel ops pad to the lane block
+    # internally.
+    return min(cap, n_entries)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,8 +157,20 @@ def _bucket_by_dst(dst, payload, n_shards: int, cap: int):
     return out, dropped
 
 
-def _stage_b(local, uniq, offsets, positions, segments, cfg: MapperConfig):
-    """Index-owner compute: lookup -> linear WF -> min -> affine WF."""
+def _stage_b(local, uniq, offsets, positions, segments, cfg: MapperConfig,
+             aff_cap: int):
+    """Index-owner compute: lookup -> linear WF -> min -> filter ->
+    compacted affine WF.
+
+    The affine stage runs only on the filter survivors: the ``passed``
+    mask is compacted into a static ``aff_cap``-slot bucket
+    (``stage_b_affine_capacity``) and the distance-only affine WF executes
+    on those ``aff_cap`` instances instead of every bucket entry.
+    Survivors beyond ``aff_cap`` are *dropped* (reported unmapped), the
+    same bounded-latency/accuracy trade as the Reads-FIFO overflow.
+    Returns per-shard (aff (S, cap), pos (S, cap), n_survivors,
+    n_affine_dropped).
+    """
     S, cap = local["kmer"].shape
     kmers = local["kmer"].reshape(-1)
     minipos = local["minipos"].reshape(-1)
@@ -142,33 +197,46 @@ def _stage_b(local, uniq, offsets, positions, segments, cfg: MapperConfig):
     best_pl = jnp.argmin(lin_end, axis=-1)
     best_lin = jnp.take_along_axis(lin_end, best_pl[:, None], 1)[:, 0]
     passed = best_lin <= cfg.filter_threshold
+    n_surv = jnp.sum(passed)
 
-    # distance-only affine: stage B never tracebacks, so no (E, n, band)
-    # direction planes are materialized
+    # distance-only affine on the compacted survivors: stage B never
+    # tracebacks, so no (E, n, band) direction planes are materialized and
+    # only aff_cap of the E bucket entries execute
+    slots, slot_ok = compact_indices(passed, aff_cap)
     sel_win = jnp.take_along_axis(windows, best_pl[:, None, None], 1)[:, 0]
-    aff_end, _ = wfb.affine_wf_dist(reads, sel_win, eth=cfg.eth,
-                                    sat=cfg.sat_affine,
-                                    backend=cfg.wf_backend,
-                                    block_r=cfg.aff_block_r)
-    aff_end = jnp.where(passed, aff_end, cfg.sat_affine).astype(jnp.int32)
+    aff_c, _ = wfb.affine_wf_dist(reads[slots], sel_win[slots], eth=cfg.eth,
+                                  sat=cfg.sat_affine,
+                                  backend=cfg.wf_backend,
+                                  block_r=cfg.aff_block_r)
+    sat = jnp.int32(cfg.sat_affine)
+    aff_c = jnp.where(slot_ok, aff_c, sat).astype(jnp.int32)
+    aff_end = scatter_to(E, slots, slot_ok, aff_c, sat)
+    kept = scatter_to(E, slots, slot_ok, slot_ok, False)
     sel_occ = jnp.take_along_axis(occ, best_pl[:, None], 1)[:, 0]
     pos = positions[sel_occ] - minipos
-    pos = jnp.where(passed, pos, -1)
-    return (aff_end.reshape(S, cap), pos.reshape(S, cap))
+    pos = jnp.where(kept, pos, -1)
+    return (aff_end.reshape(S, cap), pos.reshape(S, cap), n_surv,
+            n_surv - jnp.sum(slot_ok))
 
 
 def make_distributed_mapper(mesh, cfg: MapperConfig, n_shards: int,
                             send_cap: int):
     """Build the jitted shard_map mapping step.
 
-    Call signature of the returned fn:
+    Returns ``(fn, stage_b_affine_cap)`` — the negotiated per-shard
+    survivor capacity is surfaced so callers report exactly what the
+    compiled program executes.  Call signature of ``fn``:
       fn(uniq (S,U), offsets (S,U+1), positions (S,O), segments (S,O,L),
          reads (R_global, rl), read_dst_meta...) ->
-         (position (R_global,), distance (R_global,), dropped (S,))
+         (position (R_global,), distance (R_global,), dropped (S,),
+          stage_b_survivors (S,), stage_b_affine_dropped (S,))
     """
     from jax.sharding import PartitionSpec as P
 
     M = cfg.max_minis
+    # survivor capacity is negotiated once per program: every shard's
+    # stage B sees n_shards*send_cap bucket entries after the exchange
+    aff_cap = stage_b_affine_capacity(n_shards * send_cap, cfg)
 
     def step(uniq, offsets, positions, segments, reads):
         # local shapes: uniq (1, U) ... reads (R_local, rl)
@@ -200,7 +268,8 @@ def make_distributed_mapper(mesh, cfg: MapperConfig, n_shards: int,
                 for k, v in buckets.items()}
 
         # ---- stage B on the index owner
-        aff, pos = _stage_b(recv, uniq, offsets, positions, segments, cfg)
+        aff, pos, n_surv, aff_drop = _stage_b(recv, uniq, offsets, positions,
+                                              segments, cfg, aff_cap)
         aff = jnp.where(recv["valid"], aff, cfg.sat_affine)
 
         # ---- return trip
@@ -222,22 +291,32 @@ def make_distributed_mapper(mesh, cfg: MapperConfig, n_shards: int,
         posr = posr.at[flat_rid].min(bigpos)
         position = jnp.where((best[:R] < cfg.sat_affine) & (posr[:R] < 2 ** 30),
                              posr[:R], -1)
-        return position, best[:R], dropped[None]
+        return (position, best[:R], dropped[None], n_surv[None],
+                aff_drop[None])
 
     pspec = P(AXIS)
-    fn = jax.shard_map(
-        step, mesh=mesh,
-        in_specs=(pspec, pspec, pspec, pspec, pspec),
-        out_specs=(pspec, pspec, pspec),
-        check_vma=False,  # scan carries are created fresh inside the body
-    )
-    return jax.jit(fn)
+    fn = _shard_map(step, mesh,
+                    in_specs=(pspec, pspec, pspec, pspec, pspec),
+                    out_specs=(pspec,) * 5)
+    return jax.jit(fn), aff_cap
+
+
+# one compiled program per (mesh, cfg, shards, send_cap): repeated serving
+# batches hit the jit cache instead of re-tracing the shard_map step
+_cached_mapper = functools.lru_cache(maxsize=8)(make_distributed_mapper)
 
 
 def distributed_map_reads(mesh, sidx: ShardedIndex, reads: np.ndarray,
                           cfg: MapperConfig | None = None,
-                          send_cap: int | None = None):
-    """Host wrapper: returns (positions, distances, dropped_per_shard)."""
+                          send_cap: int | None = None,
+                          with_stats: bool = False):
+    """Host wrapper: returns (positions, distances, dropped_per_shard).
+
+    With ``with_stats=True`` a fourth element reports stage-B instance
+    accounting: bucket entries vs filter survivors vs the static affine
+    capacity actually executed, plus the drop counters of both
+    fixed-capacity buffers (send FIFO and survivor bucket).
+    """
     cfg = cfg or MapperConfig(read_len=sidx.read_len, k=sidx.k, w=sidx.w,
                               eth=sidx.eth)
     S = sidx.n_shards
@@ -245,7 +324,29 @@ def distributed_map_reads(mesh, sidx: ShardedIndex, reads: np.ndarray,
     assert R % S == 0, "pad reads to a multiple of the shard count"
     if send_cap is None:
         send_cap = max(2 * (R // S) * cfg.max_minis // S, 8)
-    fn = make_distributed_mapper(mesh, cfg, S, send_cap)
+    fn, aff_cap = _cached_mapper(mesh, cfg, S, send_cap)
     uq, of, po, sg = sidx.device_arrays()
-    pos, dist, dropped = fn(uq, of, po, sg, jnp.asarray(reads))
-    return np.asarray(pos), np.asarray(dist), np.asarray(dropped)
+    pos, dist, dropped, n_surv, aff_drop = fn(uq, of, po, sg,
+                                              jnp.asarray(reads))
+    pos, dist = np.asarray(pos), np.asarray(dist)
+    dropped = np.asarray(dropped)
+    n_aff_drop = int(np.asarray(aff_drop).sum())
+    if not with_stats:
+        if n_aff_drop:  # bounded-latency drop, but never a *silent* one
+            import warnings
+            warnings.warn(
+                f"stage B dropped {n_aff_drop} filter survivors on "
+                f"affine-capacity overflow (capacity {aff_cap}/shard); "
+                f"raise stage_b_survivor_frac or send_cap, or pass "
+                f"with_stats=True to track this", stacklevel=2)
+        return pos, dist, dropped
+    stats = dict(
+        stage_b_entries=S * S * send_cap,
+        stage_b_survivors=int(np.asarray(n_surv).sum()),
+        stage_b_affine_capacity=aff_cap,
+        stage_b_affine_instances=S * aff_cap,
+        stage_b_padded_affine_instances=S * S * send_cap,
+        stage_b_affine_dropped=n_aff_drop,
+        send_dropped=int(dropped.sum()),
+    )
+    return pos, dist, dropped, stats

@@ -24,7 +24,13 @@ dirs-emitting affine pass + traceback run solely on the one winner per
 read.  Capacities are chosen host-side from the measured counts, so jit
 recompiles are bounded by the number of distinct bucket sizes.  Large read
 batches stream through in ``chunk_reads``-sized chunks instead of
-materializing one giant window tensor.
+materializing one giant window tensor; with ``stream=True`` (default) the
+chunks run on the async double-buffered engine of ``repro.core.streaming``
+— chunk i+1's transfer+seeding and chunk i-1's result fetch overlap chunk
+i's WF compute — while ``stream=False`` is the fully synchronous debug
+path that records per-stage wall times in ``stats["stage_times_s"]``.
+Both paths execute the same jitted stages with the same capacities and
+are bit-identical.
 
 Both engines run their WF inner loops on the backend selected by
 ``MapperConfig.wf_backend``: the pure-jnp reference or the Pallas kernels
@@ -36,6 +42,8 @@ stages with an all_to_all seeding exchange over the device mesh.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import time
 from functools import partial
 
 import jax
@@ -43,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import affine_wf
+from . import streaming
 from . import wf_backend as wfb
 from .compaction import bucket_capacity, compact_indices, scatter_to
 from .filtering import gather_windows, linear_wf_filter
@@ -67,6 +76,11 @@ class MapperConfig:
     lin_block_r: int = 512        # linear kernel lanes; linear bucket align
     aff_block_r: int = 256        # affine kernel lanes; affine bucket align
     chunk_reads: int | None = None  # stream reads in chunks of this size
+    stream: bool = True           # double-buffered chunk overlap (compacted
+    #                               engine); False = fully synchronous debug
+    #                               path with per-stage wall times in stats
+    stage_b_survivor_frac: float = 0.5  # distributed stage-B: static affine
+    #                               capacity as a fraction of bucket entries
 
     @property
     def seed_params(self) -> SeedParams:
@@ -152,9 +166,8 @@ def map_reads_jax(uniq_kmers, offsets, positions, segments, reads,
 # Compacted execution engine
 # --------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cfg", "cap"))
-def _linear_stage(segments, reads, occ_idx, occ_valid, mini_pos,
-                  cfg: MapperConfig, cap: int):
+def _linear_stage_impl(segments, reads, occ_idx, occ_valid, mini_pos,
+                       cfg: MapperConfig, cap: int):
     """(3)+(4): compact valid candidates -> linear WF on ``cap`` instances
     -> scatter distances back -> per-(read, minimizer) min + filter."""
     R = reads.shape[0]
@@ -184,9 +197,8 @@ def _linear_stage(segments, reads, occ_idx, occ_valid, mini_pos,
     return lin_end, best_pl, pass_filter, jnp.sum(occ_valid, axis=(1, 2))
 
 
-@partial(jax.jit, static_argnames=("cfg", "cap"))
-def _affine_stage(segments, positions, reads, occ_idx, mini_pos, best_pl,
-                  pass_filter, cfg: MapperConfig, cap: int):
+def _affine_stage_impl(segments, positions, reads, occ_idx, mini_pos, best_pl,
+                       pass_filter, cfg: MapperConfig, cap: int):
     """(5)+(7): distance-only affine WF on the compacted filter survivors,
     then the per-read winner reduce (identical tie-breaking to the padded
     engine: min distance, ties -> leftmost position)."""
@@ -224,6 +236,32 @@ def _affine_stage(segments, positions, reads, occ_idx, mini_pos, best_pl,
     return best_aff, mapped, position, best_m
 
 
+_linear_stage = partial(jax.jit, static_argnames=("cfg", "cap"))(
+    _linear_stage_impl)
+_affine_stage = partial(jax.jit, static_argnames=("cfg", "cap"))(
+    _affine_stage_impl)
+
+
+@functools.lru_cache(maxsize=2)
+def _stage_jits(donate: bool):
+    """Jitted (linear, affine) stages, optionally donating the one buffer
+    each consumes exactly once (occ_valid / pass_filter) so streamed chunks
+    reuse device allocations instead of growing the arena.  Donation is
+    requested only on backends that implement it
+    (``streaming.donatable_argnums``); everywhere else the module-level
+    non-donating pair is returned so all paths share one executable cache.
+    """
+    lin_don = streaming.donatable_argnums(3) if donate else ()
+    aff_don = streaming.donatable_argnums(6) if donate else ()
+    if not lin_don and not aff_don:
+        return _linear_stage, _affine_stage
+    lin = jax.jit(_linear_stage_impl, static_argnames=("cfg", "cap"),
+                  donate_argnums=lin_don)
+    aff = jax.jit(_affine_stage_impl, static_argnames=("cfg", "cap"),
+                  donate_argnums=aff_don)
+    return lin, aff
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def _traceback_stage(segments, reads, occ_idx, mini_pos, best_pl, best_m,
                      mapped, cfg: MapperConfig):
@@ -247,55 +285,107 @@ def _traceback_stage(segments, reads, occ_idx, mini_pos, best_pl, best_m,
     return ops, op_count
 
 
-def _map_chunk_compacted(dev, reads: jnp.ndarray, cfg: MapperConfig,
-                         n_real: int):
-    """One chunk through the staged engine.  Host code between the jit
-    stages measures candidate/survivor counts and picks static bucket
-    capacities (``bucket_capacity``), so each jit sees a fixed shape.
+class _ChunkPipeline:
+    """Phase-split per-chunk execution for the streaming engine.
 
-    ``n_real`` is the unpadded read count: executed-instance stats count
-    the whole (shape-static) chunk, but candidate/survivor accounting and
-    the padded-equivalent baselines exclude the zero-padding reads so the
+    Host code between the jit stages measures candidate/survivor counts and
+    picks static bucket capacities (``bucket_capacity``), so each jit sees a
+    fixed shape.  The phases map onto ``streaming.stream_map``'s schedule:
+
+      phase1: host pad -> H2D transfer -> seeding dispatch
+      phase2: capacity-count syncs -> linear/affine/traceback dispatch
+      fetch:  device->host copies + padding trim (fetch thread)
+
+    When a ``times`` dict is passed (the ``stream=False`` sync path), every
+    phase blocks at its stage boundaries and records per-stage wall
+    seconds; without it each stage is a non-blocking async enqueue.
+    Candidate/survivor accounting and the padded-equivalent baselines
+    exclude the zero-padding reads of a partial last chunk, so the
     reported pruning reflects the actual workload.
     """
-    uniq_kmers, offsets, positions, segments = dev
-    R = reads.shape[0]
-    M, P = cfg.max_minis, cfg.max_pls
 
-    seeds = seed_reads(uniq_kmers, offsets, reads, cfg.seed_params)
-    occ_idx, occ_valid = seeds["occ_idx"], seeds["occ_valid"]
-    mini_pos = seeds["mini_pos"]
+    def __init__(self, dev, cfg: MapperConfig):
+        self.dev = dev
+        self.cfg = cfg
+        self.lin_jit, self.aff_jit = _stage_jits(cfg.stream)
 
-    n_valid = int(jnp.sum(occ_valid))
-    lin_cap = bucket_capacity(n_valid, align=cfg.lin_block_r,
-                              cap_max=R * M * P)
-    lin_end, best_pl, pass_filter, n_cand = _linear_stage(
-        segments, reads, occ_idx, occ_valid, mini_pos, cfg, lin_cap)
+    def phase1(self, item, times=None):
+        sub, chunk = item
+        n_real = len(sub)
+        t0 = time.perf_counter()
+        if n_real < chunk:  # keep the chunk shape static; trimmed in fetch
+            sub = np.concatenate(
+                [sub, np.zeros((chunk - n_real, sub.shape[1]), sub.dtype)])
+        t0 = streaming.timed(times, "host_prep", t0)
+        reads = jnp.asarray(sub)
+        if times is not None:
+            reads.block_until_ready()
+        t0 = streaming.timed(times, "h2d", t0)
+        seeds = seed_reads(self.dev[0], self.dev[1], reads,
+                           self.cfg.seed_params)
+        if times is not None:
+            jax.block_until_ready(seeds)
+        streaming.timed(times, "seed", t0)
+        return reads, seeds, n_real
 
-    n_surv = int(jnp.sum(pass_filter))
-    aff_cap = bucket_capacity(n_surv, align=cfg.aff_block_r, cap_max=R * M)
-    best_aff, mapped, position, best_m = _affine_stage(
-        segments, positions, reads, occ_idx, mini_pos, best_pl, pass_filter,
-        cfg, aff_cap)
+    def phase2(self, state, times=None):
+        reads, seeds, n_real = state
+        cfg, (_, _, positions, segments) = self.cfg, self.dev
+        R = reads.shape[0]
+        M, P = cfg.max_minis, cfg.max_pls
+        occ_idx, occ_valid = seeds["occ_idx"], seeds["occ_valid"]
+        mini_pos = seeds["mini_pos"]
 
-    ops, op_count = _traceback_stage(segments, reads, occ_idx, mini_pos,
-                                     best_pl, best_m, mapped, cfg)
+        # count syncs happen before the stage call so the donated buffers
+        # (occ_valid / pass_filter) are never read after being consumed
+        t0 = time.perf_counter()
+        n_valid = int(jnp.sum(occ_valid))
+        n_valid_real = (n_valid if n_real == R else
+                        int(jnp.sum(occ_valid[:n_real])))
+        lin_cap = bucket_capacity(n_valid, align=cfg.lin_block_r,
+                                  cap_max=R * M * P)
+        lin_end, best_pl, pass_filter, n_cand = self.lin_jit(
+            segments, reads, occ_idx, occ_valid, mini_pos, cfg, lin_cap)
+        if times is not None:
+            pass_filter.block_until_ready()
+        t0 = streaming.timed(times, "linear", t0)
 
-    if n_real == R:
-        n_valid_real, n_surv_real = n_valid, n_surv
-    else:
-        n_valid_real = int(jnp.sum(occ_valid[:n_real]))
-        n_surv_real = int(jnp.sum(pass_filter[:n_real]))
-    stats = dict(candidates_valid=n_valid_real,
-                 linear_instances=lin_cap,
-                 padded_linear_instances=n_real * M * P,
-                 survivors=n_surv_real,
-                 affine_dist_instances=aff_cap,
-                 padded_affine_instances=n_real * M,
-                 affine_dirs_instances=n_real)
-    out = dict(position=position, distance=best_aff, mapped=mapped, ops=ops,
-               op_count=op_count, linear_dist=lin_end, n_candidates=n_cand)
-    return out, stats
+        n_surv = int(jnp.sum(pass_filter))
+        n_surv_real = (n_surv if n_real == R else
+                       int(jnp.sum(pass_filter[:n_real])))
+        aff_cap = bucket_capacity(n_surv, align=cfg.aff_block_r,
+                                  cap_max=R * M)
+        best_aff, mapped, position, best_m = self.aff_jit(
+            segments, positions, reads, occ_idx, mini_pos, best_pl,
+            pass_filter, cfg, aff_cap)
+        if times is not None:
+            position.block_until_ready()
+        t0 = streaming.timed(times, "affine", t0)
+
+        ops, op_count = _traceback_stage(segments, reads, occ_idx, mini_pos,
+                                         best_pl, best_m, mapped, cfg)
+        if times is not None:
+            ops.block_until_ready()
+        streaming.timed(times, "traceback", t0)
+
+        stats = dict(candidates_valid=n_valid_real,
+                     linear_instances=lin_cap,
+                     padded_linear_instances=n_real * M * P,
+                     survivors=n_surv_real,
+                     affine_dist_instances=aff_cap,
+                     padded_affine_instances=n_real * M,
+                     affine_dirs_instances=n_real)
+        out = dict(position=position, distance=best_aff, mapped=mapped,
+                   ops=ops, op_count=op_count, linear_dist=lin_end,
+                   n_candidates=n_cand)
+        return out, stats, n_real
+
+    def fetch(self, state, times=None):
+        out, stats, n_real = state
+        t0 = time.perf_counter()
+        host = {k: np.asarray(v)[:n_real] for k, v in out.items()}
+        streaming.timed(times, "d2h", t0)
+        return host, stats
 
 
 def _merge_stats(parts: list[dict]) -> dict:
@@ -312,8 +402,11 @@ def map_reads(index: GenomeIndex, reads: np.ndarray,
 
     ``cfg.engine`` selects the padded reference or the candidate-compacted
     engine (default); both produce identical positions/distances.  The
-    compacted engine streams ``cfg.chunk_reads``-sized read chunks and
-    reports its instance accounting in ``MappingResult.stats``.
+    compacted engine streams ``cfg.chunk_reads``-sized read chunks —
+    double-buffered when ``cfg.stream`` (chunk i+1 prep/transfer and chunk
+    i-1 fetch overlap chunk i's compute), strictly synchronous with
+    per-stage wall times otherwise — and reports its instance accounting
+    in ``MappingResult.stats``.
     """
     cfg = cfg or MapperConfig(read_len=index.read_len, k=index.k, w=index.w,
                               eth=index.eth)
@@ -326,20 +419,24 @@ def map_reads(index: GenomeIndex, reads: np.ndarray,
     elif cfg.engine == "compacted":
         R = len(reads)
         chunk = cfg.chunk_reads or max(R, 1)
-        parts, stat_parts = [], []
-        for c0 in range(0, R, chunk):
-            sub = np.asarray(reads[c0 : c0 + chunk])
-            pad = chunk - len(sub)
-            if pad:  # keep the chunk shape static; trim the outputs below
-                sub = np.concatenate(
-                    [sub, np.zeros((pad, sub.shape[1]), sub.dtype)])
-            out, st = _map_chunk_compacted(dev, jnp.asarray(sub), cfg,
-                                           chunk - pad)
-            if pad:
-                out = {k: v[: chunk - pad] for k, v in out.items()}
-            parts.append(out)
-            stat_parts.append(st)
-        stats = _merge_stats(stat_parts)
+        reads_np = np.asarray(reads)
+        items = [(reads_np[c0 : c0 + chunk], chunk)
+                 for c0 in range(0, R, chunk)]
+        pipe = _ChunkPipeline(dev, cfg)
+        if cfg.stream:
+            times = None
+            fetched = streaming.stream_map(items, pipe.phase1, pipe.phase2,
+                                           pipe.fetch)
+        else:
+            times = {}
+            fetched = streaming.sync_map(items, pipe.phase1, pipe.phase2,
+                                         pipe.fetch, times=times)
+        parts = [out for out, _ in fetched]
+        stats = _merge_stats([st for _, st in fetched])
+        stats["stream"] = cfg.stream
+        if times is not None:
+            stats["stage_times_s"] = {k: round(v, 4)
+                                      for k, v in times.items()}
     else:
         raise ValueError(f"unknown engine {cfg.engine!r}")
 

@@ -1,0 +1,151 @@
+"""Request batching for the streaming mapper (the serving front-end).
+
+A mapping service receives read batches of arbitrary size — per-client
+FASTQ slices, not the engine's static chunk shape.  Feeding each request
+straight to ``map_reads`` would trigger one jit bucket per distinct batch
+size and waste lanes on tiny batches.  ``ReadBatcher`` is the Reads-FIFO
+analog at the request layer: it coalesces pending requests into
+**power-of-two bucket shapes** between ``bucket_min`` and ``bucket_max``
+(the streaming engine's chunk size), so
+
+  * recompiles are bounded by ``log2(bucket_max / bucket_min) + 1``
+    distinct shapes, regardless of request-size distribution;
+  * full ``bucket_max`` buckets flow through the double-buffered streaming
+    engine back-to-back (one multi-chunk ``map_reads`` call);
+  * the residue pays at most 2x padding on the *last* bucket only.
+
+``MappingService`` wraps the batcher + ``map_reads`` with per-request
+result reassembly and padding/throughput accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .compaction import bucket_capacity
+from .index import GenomeIndex
+from .pipeline import MapperConfig, MappingResult, map_reads
+
+
+@dataclasses.dataclass(frozen=True)
+class BatcherConfig:
+    bucket_min: int = 64     # smallest jit'd batch shape (pow2)
+    bucket_max: int = 1024   # largest; == the streaming chunk size (pow2)
+
+    def __post_init__(self):
+        for v in (self.bucket_min, self.bucket_max):
+            assert v >= 1 and (v & (v - 1)) == 0, "bucket sizes must be pow2"
+        assert self.bucket_min <= self.bucket_max
+
+
+def pow2_buckets(n: int, *, lo: int, hi: int) -> list[int]:
+    """Greedy cover of ``n`` reads by pow-2 bucket sizes in ``[lo, hi]``:
+    full ``hi`` buckets first, one rounded-up bucket for the residue."""
+    out = [hi] * (n // hi)
+    rest = n % hi
+    if rest:
+        out.append(bucket_capacity(rest, align=lo, cap_max=hi))
+    return out
+
+
+class ReadBatcher:
+    """Coalesce variable-sized incoming read batches into pow-2 buckets.
+
+    ``submit`` enqueues a request and returns its id; ``drain`` hands back
+    everything pending as one concatenated read block plus the bucket
+    cover and per-request spans, and resets the queue.
+    """
+
+    def __init__(self, read_len: int, cfg: BatcherConfig = BatcherConfig()):
+        self.read_len = read_len
+        self.cfg = cfg
+        self._pending: list[tuple[int, np.ndarray]] = []
+        self._next_id = 0
+        self.stats = dict(requests=0, reads=0, padded_reads=0,
+                          bucket_hist={})
+
+    @property
+    def pending_reads(self) -> int:
+        return sum(len(r) for _, r in self._pending)
+
+    def submit(self, reads: np.ndarray) -> int:
+        reads = np.asarray(reads)
+        assert reads.ndim == 2 and reads.shape[1] == self.read_len, \
+            f"expected (n, {self.read_len}) reads, got {reads.shape}"
+        # empty requests are rejected up front: an all-empty flush would
+        # otherwise drain the queue without ever resolving their ids
+        assert len(reads) >= 1, "empty read batch"
+        rid = self._next_id
+        self._next_id += 1
+        self._pending.append((rid, reads))
+        self.stats["requests"] += 1
+        self.stats["reads"] += len(reads)
+        return rid
+
+    def drain(self):
+        """-> (reads (N, rl), buckets [sizes], spans {rid: (lo, hi)})."""
+        if not self._pending:
+            return (np.zeros((0, self.read_len), np.uint8), [], {})
+        spans, off = {}, 0
+        for rid, r in self._pending:
+            spans[rid] = (off, off + len(r))
+            off += len(r)
+        reads = np.concatenate([r for _, r in self._pending])
+        self._pending = []
+        buckets = pow2_buckets(len(reads), lo=self.cfg.bucket_min,
+                               hi=self.cfg.bucket_max)
+        self.stats["padded_reads"] += sum(buckets) - len(reads)
+        for b in buckets:
+            hist = self.stats["bucket_hist"]
+            hist[b] = hist.get(b, 0) + 1
+        return reads, buckets, spans
+
+
+class MappingService:
+    """Single-device mapping service: batcher + streaming engine.
+
+    ``submit`` queues a request; ``flush`` drains the batcher, streams the
+    coalesced buckets through ``map_reads`` (full buckets as one
+    multi-chunk streamed call, the residue bucket as its own pow-2 shape)
+    and returns ``{request_id: MappingResult}``.
+    """
+
+    def __init__(self, index: GenomeIndex, cfg: MapperConfig | None = None,
+                 batcher: BatcherConfig = BatcherConfig()):
+        self.index = index
+        self.cfg = cfg or MapperConfig(read_len=index.read_len, k=index.k,
+                                       w=index.w, eth=index.eth)
+        self.batcher = ReadBatcher(self.cfg.read_len, batcher)
+
+    def submit(self, reads: np.ndarray) -> int:
+        return self.batcher.submit(reads)
+
+    def flush(self) -> dict[int, MappingResult]:
+        reads, buckets, spans = self.batcher.drain()
+        if not buckets:
+            return {}
+        hi = self.batcher.cfg.bucket_max
+        n_full = sum(1 for b in buckets if b == hi)
+        parts = []
+        if n_full:  # full buckets: one streamed multi-chunk call
+            cfg = dataclasses.replace(self.cfg, chunk_reads=hi)
+            parts.append(map_reads(self.index, reads[: n_full * hi], cfg))
+        rest = reads[n_full * hi :]
+        if len(rest):  # residue: its own pow-2 chunk shape (padded inside)
+            cfg = dataclasses.replace(self.cfg, chunk_reads=buckets[-1])
+            parts.append(map_reads(self.index, rest, cfg))
+
+        def cat(field):
+            arrs = [getattr(p, field) for p in parts]
+            return arrs[0] if len(arrs) == 1 else np.concatenate(arrs)
+
+        fields = {f: cat(f) for f in ("position", "distance", "mapped",
+                                      "ops", "op_count", "linear_dist",
+                                      "n_candidates")}
+        out = {}
+        for rid, (lo, hi_) in spans.items():
+            out[rid] = MappingResult(
+                **{f: v[lo:hi_] for f, v in fields.items()},
+                stats=None)
+        return out

@@ -1,0 +1,105 @@
+"""Async double-buffered chunk streaming (throughput mode, paper Sec. V-C).
+
+DART-PIM's controller hierarchy keeps every crossbar busy by refilling the
+Reads-FIFOs while earlier batches compute: read routing, FIFO fill and WF
+execution overlap instead of taking turns.  On the JAX side the same
+overlap falls out of async dispatch — every jit call is a non-blocking
+enqueue — *if* the host never stalls the queue.  The chunk loop here keeps
+three chunks in flight:
+
+  chunk i+1   host pad/encode + H2D transfer + seeding dispatch (phase 1)
+  chunk i     capacity-count sync + WF stage dispatch         (phase 2)
+  chunk i-1   device->host result fetch, on a fetch thread    (phase 3)
+
+``stream_map`` runs that schedule.  The only host-blocking points are the
+bucket-capacity count syncs of phase 2 and the D2H copies of phase 3; both
+now overlap with the neighbouring chunks' device work instead of
+serializing the pipeline.
+
+``sync_map`` is the fully synchronous debugging path (``stream=False``):
+it blocks at every stage boundary and records per-stage wall times, which
+is what makes the double-buffering win *measurable* (see
+``benchmarks/pipeline_bench.py --chunk-sweep``) — and what makes a failure
+attributable to one stage instead of an async soup.
+
+Both paths call the exact same jitted stages with the same static bucket
+capacities, so their outputs are bit-identical (asserted in
+``tests/test_streaming.py``).
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+
+__all__ = ["stream_map", "sync_map", "donatable_argnums", "timed"]
+
+
+def donatable_argnums(*argnums: int) -> tuple[int, ...]:
+    """``argnums`` where buffer donation is implemented, else ``()``.
+
+    The streaming engine donates single-consumer chunk buffers into the WF
+    stages (``jax.jit(..., donate_argnums=...)``) so each in-flight chunk
+    reuses the previous chunk's device allocations instead of growing the
+    arena.  The CPU backend does not implement donation and warns on every
+    call, so donation is requested only where it exists.
+    """
+    return argnums if jax.default_backend() in ("tpu", "gpu") else ()
+
+
+def timed(times: dict | None, key: str, t0: float) -> float:
+    """Accumulate ``now - t0`` into ``times[key]``; returns a fresh t0.
+
+    No-op (beyond the clock read) when ``times`` is None, so the phase
+    functions can share one code path between the streamed and the
+    synchronous engines.
+    """
+    t1 = time.perf_counter()
+    if times is not None:
+        times[key] = times.get(key, 0.0) + (t1 - t0)
+    return t1
+
+
+def stream_map(items: list, phase1, phase2, fetch) -> list:
+    """Double-buffered streaming execution over ``items`` (one per chunk).
+
+    phase1(item)   -> state   : host prep + H2D + first async dispatch
+    phase2(state)  -> outs    : count syncs + remaining stage dispatch
+    fetch(outs)    -> result  : blocking device->host copy (fetch thread)
+
+    phase1 of chunk i+1 is issued *before* phase2 of chunk i blocks on its
+    capacity counts, so the next chunk's transfer+seeding are already in
+    the device queue during the sync; fetches run on a worker thread so
+    D2H copies of chunk i-1 overlap chunk i's compute.  Results come back
+    in submission order.
+    """
+    n = len(items)
+    if n == 0:
+        return []
+    futs = [None] * n
+    with ThreadPoolExecutor(max_workers=1,
+                            thread_name_prefix="stream-fetch") as pool:
+        state = phase1(items[0])
+        for i in range(n):
+            nxt = phase1(items[i + 1]) if i + 1 < n else None
+            outs = phase2(state)
+            futs[i] = pool.submit(fetch, outs)
+            state = nxt
+        return [f.result() for f in futs]
+
+
+def sync_map(items: list, phase1, phase2, fetch,
+             times: dict | None = None) -> list:
+    """Fully synchronous chunk execution (the ``stream=False`` debug path).
+
+    Runs one chunk end-to-end at a time.  When the phase functions are
+    handed a ``times`` dict they block at each stage boundary and record
+    per-stage wall seconds into it (host_prep / h2d / seed / linear /
+    affine / traceback / d2h).
+    """
+    out = []
+    for item in items:
+        out.append(fetch(phase2(phase1(item, times=times), times=times),
+                         times=times))
+    return out

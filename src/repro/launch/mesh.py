@@ -6,20 +6,31 @@ jax device state (the dry-run must set XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+try:  # jax >= 0.5; older releases have implicitly-auto mesh axes only
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_genomics_mesh(n_shards: int | None = None):
     """Flat shard mesh for the distributed read mapper (one axis)."""
     n = n_shards or len(jax.devices())
-    return jax.make_mesh((n,), ("shards",), axis_types=(AxisType.Auto,))
+    return _make_mesh((n,), ("shards",))
 
 
 def batch_axes(mesh) -> tuple:

@@ -1,10 +1,18 @@
 """Genomics mapping service launcher (the paper's system kind).
 
     PYTHONPATH=src python -m repro.launch.serve --shards 8 --reads 256
+    PYTHONPATH=src python -m repro.launch.serve --service --batches 16
 
-One process per host on a real pod (mesh from the TPU environment); on CPU
-it runs over virtual devices.  Wraps the distributed mapper with request
-batching, capacity accounting (Reads-FIFO analog) and throughput stats.
+Two modes:
+
+  * distributed (default) — the mesh mapper: one process per host on a real
+    pod (mesh from the TPU environment); on CPU it runs over virtual
+    devices.  Stage B now runs affine WF only on compacted filter
+    survivors (``--stats`` prints the instance accounting).
+  * ``--service`` — the single-device serving path: variable-sized request
+    batches are coalesced by the pow-2 ``ReadBatcher`` into the streaming
+    engine's static chunk shapes (``repro.core.serving``), exercising the
+    async double-buffered ``map_reads`` engine end to end.
 """
 from __future__ import annotations
 
@@ -14,22 +22,52 @@ import sys
 import time
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--shards", type=int, default=None)
-    ap.add_argument("--genome", type=int, default=50_000)
-    ap.add_argument("--reads", type=int, default=128)
-    ap.add_argument("--batches", type=int, default=4)
-    ap.add_argument("--send-cap", type=int, default=None)
-    args, _ = ap.parse_known_args()
-    if args.shards and "XLA_FLAGS" not in os.environ:
-        os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={args.shards}")
+def run_service(args) -> int:
+    import numpy as np
 
+    from repro.core.index import build_index
+    from repro.core.pipeline import MapperConfig
+    from repro.core.serving import BatcherConfig, MappingService
+    from repro.data.genome import make_reference, sample_reads
+
+    ref = make_reference(args.genome, seed=0, repeat_frac=0.02)
+    idx = build_index(ref)
+    cfg = MapperConfig(read_len=idx.read_len, k=idx.k, w=idx.w, eth=idx.eth,
+                       wf_backend=args.wf_backend, stream=not args.no_stream)
+    svc = MappingService(idx, cfg,
+                         BatcherConfig(bucket_min=args.bucket_min,
+                                       bucket_max=args.bucket_max))
+    rng = np.random.default_rng(7)
+    print(f"service: genome {len(ref)} bases, buckets "
+          f"[{args.bucket_min}..{args.bucket_max}], "
+          f"stream={cfg.stream}, wf_backend={cfg.wf_backend}")
+    total = correct = 0
+    t0 = time.perf_counter()
+    truth = {}
+    for b in range(args.batches):
+        # a burst of variable-sized client requests, then one flush
+        for _ in range(int(rng.integers(1, 5))):
+            n = int(rng.integers(1, args.reads + 1))
+            rs = sample_reads(ref, n, seed=int(rng.integers(1 << 30)))
+            truth[svc.submit(rs.reads)] = rs.true_pos
+        for rid, res in svc.flush().items():
+            total += len(res.position)
+            correct += int((np.abs(res.position - truth.pop(rid)) <= 6).sum())
+    dt = time.perf_counter() - t0
+    st = svc.batcher.stats
+    waste = st["padded_reads"] / max(st["padded_reads"] + st["reads"], 1)
+    print(f"{total} reads / {st['requests']} requests in {dt:.1f}s "
+          f"({total/dt:.0f} reads/s), accuracy {correct/max(total,1):.4f}")
+    print(f"bucket hist {st['bucket_hist']}, lane padding waste {waste:.3f}")
+    return 0
+
+
+def run_distributed(args) -> int:
     import numpy as np
 
     from repro.core.distributed import distributed_map_reads, shard_index
     from repro.core.index import build_index
+    from repro.core.pipeline import MapperConfig
     from repro.data.genome import make_reference, sample_reads
     from repro.launch.mesh import make_genomics_mesh
 
@@ -38,21 +76,54 @@ def main():
     ref = make_reference(args.genome, seed=0, repeat_frac=0.02)
     idx = build_index(ref)
     sidx = shard_index(idx, n_shards)
+    cfg = MapperConfig(read_len=idx.read_len, k=idx.k, w=idx.w, eth=idx.eth,
+                       wf_backend=args.wf_backend)
     print(f"serving: {n_shards} shards, {len(idx.uniq_kmers)} minimizers, "
           f"{len(ref)} bases")
-    total = correct = dropped = 0
+    total = correct = dropped = surv = aff_inst = aff_drop = 0
     t0 = time.perf_counter()
     for b in range(args.batches):
         rs = sample_reads(ref, args.reads, seed=1000 + b)
-        pos, dist, drop = distributed_map_reads(
-            mesh, sidx, rs.reads, send_cap=args.send_cap)
+        pos, dist, drop, stats = distributed_map_reads(
+            mesh, sidx, rs.reads, cfg=cfg, send_cap=args.send_cap,
+            with_stats=True)
         total += len(pos)
         correct += int((np.abs(pos - rs.true_pos) <= 6).sum())
         dropped += int(drop.sum())
+        surv += stats["stage_b_survivors"]
+        aff_inst += stats["stage_b_affine_instances"]
+        aff_drop += stats["stage_b_affine_dropped"]
     dt = time.perf_counter() - t0
     print(f"{total} reads in {dt:.1f}s ({total/dt:.0f} reads/s), "
           f"accuracy {correct/total:.4f}, dropped {dropped}")
+    print(f"stage B: {surv} survivors -> {aff_inst} affine instances "
+          f"(compacted), {aff_drop} dropped on overflow")
     return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--service", action="store_true",
+                    help="single-device batcher+streaming service mode")
+    ap.add_argument("--shards", type=int, default=None)
+    ap.add_argument("--genome", type=int, default=50_000)
+    ap.add_argument("--reads", type=int, default=128,
+                    help="reads per batch (distributed) / max request size "
+                         "(service)")
+    ap.add_argument("--batches", type=int, default=4)
+    ap.add_argument("--send-cap", type=int, default=None)
+    ap.add_argument("--bucket-min", type=int, default=64)
+    ap.add_argument("--bucket-max", type=int, default=1024)
+    ap.add_argument("--wf-backend", default="jnp",
+                    choices=("jnp", "pallas"))
+    ap.add_argument("--no-stream", action="store_true",
+                    help="service mode only: synchronous debug path "
+                         "(per-stage timings)")
+    args, _ = ap.parse_known_args()
+    if args.shards and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.shards}")
+    return run_service(args) if args.service else run_distributed(args)
 
 
 if __name__ == "__main__":

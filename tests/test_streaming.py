@@ -1,0 +1,128 @@
+"""Streaming engine + serving batcher: the async double-buffered chunk
+path must be bit-identical to the synchronous path and to the unchunked
+run; the pow-2 request batcher must reassemble per-request results
+exactly."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import MapperConfig, map_reads
+from repro.core.serving import (BatcherConfig, MappingService, ReadBatcher,
+                                pow2_buckets)
+
+FIELDS = ("position", "distance", "mapped", "ops", "op_count",
+          "linear_dist", "n_candidates")
+
+
+@pytest.fixture(scope="module")
+def world():
+    from repro.core.index import build_index
+    from repro.data.genome import make_reference, sample_reads
+    ref = make_reference(8_000, seed=11, repeat_frac=0.03)
+    idx = build_index(ref)
+    rs = sample_reads(ref, 40, seed=13)
+    junk = np.random.default_rng(15).integers(0, 4, (8, 150)).astype(np.uint8)
+    return idx, np.concatenate([rs.reads, junk])
+
+
+def _assert_same(a, b):
+    for f in FIELDS:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f)
+
+
+def test_streamed_chunks_bit_identical_to_unchunked(world):
+    idx, reads = world
+    base = map_reads(idx, reads, MapperConfig(engine="compacted"))
+    # 14 does not divide 48: exercises the padded partial last chunk
+    streamed = map_reads(idx, reads, MapperConfig(engine="compacted",
+                                                  chunk_reads=14))
+    _assert_same(base, streamed)
+    assert streamed.stats["n_chunks"] == 4
+    assert streamed.stats["stream"] is True
+    # padding reads are excluded from the workload accounting
+    assert streamed.stats["candidates_valid"] == base.stats["candidates_valid"]
+    assert streamed.stats["survivors"] == base.stats["survivors"]
+
+
+def test_stream_true_false_bit_identical(world):
+    idx, reads = world
+    a = map_reads(idx, reads, MapperConfig(engine="compacted",
+                                           chunk_reads=16, stream=True))
+    b = map_reads(idx, reads, MapperConfig(engine="compacted",
+                                           chunk_reads=16, stream=False))
+    _assert_same(a, b)
+    assert a.stats["stream"] is True and b.stats["stream"] is False
+    # identical capacities -> identical executed-instance accounting
+    for k in ("linear_instances", "affine_dist_instances", "survivors"):
+        assert a.stats[k] == b.stats[k]
+
+
+def test_sync_path_records_stage_times(world):
+    idx, reads = world
+    res = map_reads(idx, reads, MapperConfig(engine="compacted",
+                                             chunk_reads=24, stream=False))
+    times = res.stats["stage_times_s"]
+    for key in ("host_prep", "h2d", "seed", "linear", "affine",
+                "traceback", "d2h"):
+        assert key in times and times[key] >= 0.0
+    assert "stage_times_s" not in (map_reads(
+        idx, reads[:16], MapperConfig(engine="compacted")).stats or {})
+
+
+def test_streamed_pallas_matches_padded(world):
+    idx, reads = world
+    a = map_reads(idx, reads, MapperConfig(engine="padded"))
+    b = map_reads(idx, reads, MapperConfig(engine="compacted",
+                                           wf_backend="pallas",
+                                           chunk_reads=16,
+                                           lin_block_r=128, aff_block_r=64))
+    _assert_same(a, b)
+
+
+# ------------------------------------------------------------- batcher
+
+def test_pow2_buckets_cover_and_shapes():
+    for n in (1, 7, 64, 65, 129, 1000, 2048, 2900):
+        buckets = pow2_buckets(n, lo=64, hi=1024)
+        assert sum(buckets) >= n
+        assert sum(buckets) - n < 1024          # residue pays < one bucket
+        for b in buckets:
+            assert 64 <= b <= 1024 and (b & (b - 1)) == 0
+    assert pow2_buckets(0, lo=64, hi=1024) == []
+
+
+def test_read_batcher_spans_and_accounting():
+    bat = ReadBatcher(150, BatcherConfig(bucket_min=16, bucket_max=64))
+    rng = np.random.default_rng(3)
+    sizes = [5, 40, 23]
+    rids = [bat.submit(rng.integers(0, 4, (n, 150)).astype(np.uint8))
+            for n in sizes]
+    assert bat.pending_reads == sum(sizes)
+    reads, buckets, spans = bat.drain()
+    assert len(reads) == sum(sizes)
+    assert [spans[r][1] - spans[r][0] for r in rids] == sizes
+    assert sum(buckets) >= len(reads)
+    assert bat.pending_reads == 0 and bat.drain()[1] == []
+    assert bat.stats["padded_reads"] == sum(buckets) - sum(sizes)
+
+
+def test_mapping_service_matches_direct_map(world):
+    idx, reads = world
+    svc = MappingService(idx, MapperConfig(engine="compacted"),
+                         BatcherConfig(bucket_min=8, bucket_max=32))
+    requests = [reads[:10], reads[10:37], reads[37:]]
+    rids = [svc.submit(r) for r in requests]
+    results = svc.flush()
+    assert set(results) == set(rids)
+    for rid, req in zip(rids, requests):
+        direct = map_reads(idx, req, MapperConfig(engine="compacted"))
+        got = results[rid]
+        np.testing.assert_array_equal(got.position, direct.position)
+        np.testing.assert_array_equal(got.distance, direct.distance)
+        np.testing.assert_array_equal(got.mapped, direct.mapped)
+        np.testing.assert_array_equal(got.ops, direct.ops)
+    # pow-2 coalescing kept the jit shapes bounded
+    assert all(b in (8, 16, 32) for b in svc.batcher.stats["bucket_hist"])
+    assert svc.flush() == {}
