@@ -7,18 +7,19 @@ distributed mapper's send-buffer capacity (the Reads-FIFO stand-in).
 import numpy as np
 
 from repro.core.index import build_index
-from repro.core.pipeline import map_reads
+from repro.core.mapper import Mapper
 from repro.data.genome import make_reference, sample_reads
 
 
 def rows():
     ref = make_reference(30_000, seed=0, repeat_frac=0.03)
     idx = build_index(ref)
+    mapper = Mapper(idx)
     out = []
     for sub in (0.0, 0.002, 0.01):
         rs = sample_reads(ref, 96, sub_rate=sub, ins_rate=sub / 4,
                           del_rate=sub / 4, seed=11)
-        res = map_reads(idx, rs.reads)
+        res = mapper.map(rs.reads)
         exact = float((res.position == rs.true_pos).mean())
         close = float((np.abs(res.position - rs.true_pos) <= 6).mean())
         out.append((f"accuracy_sub{sub}", round(close, 4),
@@ -28,7 +29,7 @@ def rows():
     for cap in (4, 32):
         idx_c = build_index(ref, max_pls_per_minimizer=cap)
         rs = sample_reads(ref, 96, seed=11)
-        res = map_reads(idx_c, rs.reads)
+        res = Mapper(idx_c).map(rs.reads)
         close = float((np.abs(res.position - rs.true_pos) <= 6).mean())
         out.append((f"accuracy_plcap{cap}", round(close, 4),
                     "capacity/accuracy trade (paper Fig. 8)"))
@@ -36,7 +37,7 @@ def rows():
     # filter elimination rates: linear WF (paper's mechanism) vs base-count
     # (the cited baseline; paper: ~68% eliminated)
     rs = sample_reads(ref, 96, seed=11)
-    res = map_reads(idx, rs.reads)
+    res = mapper.map(rs.reads)
     sat = 7
     valid = res.linear_dist < 10 ** 9
     n_valid = int((res.linear_dist <= sat).sum())  # all seeded candidates

@@ -1,7 +1,10 @@
-"""Quickstart: index a genome, map reads, print alignments.
+"""Quickstart: index a genome, open a Mapper session, map reads, print
+alignments.
 
-    python examples/quickstart.py   (PYTHONPATH handled below)
+    python examples/quickstart.py [--genome 50000 --reads 32]
+    (PYTHONPATH handled below)
 """
+import argparse
 import os
 import sys
 
@@ -11,7 +14,7 @@ import numpy as np
 
 from repro.core.affine_wf import OP_CHARS
 from repro.core.index import build_index
-from repro.core.pipeline import map_reads
+from repro.core.mapper import Mapper
 from repro.data.genome import make_reference, sample_reads
 
 
@@ -34,8 +37,13 @@ def cigar(ops, counts):
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--genome", type=int, default=50_000)
+    ap.add_argument("--reads", type=int, default=32)
+    args = ap.parse_args()
+
     print("== DART-PIM on JAX: quickstart ==")
-    ref = make_reference(50_000, seed=0, repeat_frac=0.02)
+    ref = make_reference(args.genome, seed=0, repeat_frac=0.02)
     idx = build_index(ref)
     print(f"reference: {len(ref)} bases; index: {len(idx.uniq_kmers)} "
           f"minimizers, {len(idx.positions)} occurrences, "
@@ -43,12 +51,23 @@ def main():
     sb = idx.storage_bytes()
     print(f"storage blow-up (paper ~17x on HG38): {sb['blowup']:.1f}x")
 
-    rs = sample_reads(ref, 32, seed=1)
-    res = map_reads(idx, rs.reads)
+    # the Mapper session owns device placement + the plan cache; inspect
+    # the execution plan before running anything
+    mapper = Mapper(idx)
+    plan = mapper.plan(args.reads)
+    print(f"\nplan: engine={plan.engine} chunks={plan.chunk_sizes} "
+          f"(quantum {plan.chunk}), linear/affine instance ceilings "
+          f"{plan.lin_cap_max}/{plan.aff_cap_max}")
+
+    rs = sample_reads(ref, args.reads, seed=1)
+    res = mapper.run(plan, rs.reads)
     acc = (np.abs(res.position - rs.true_pos) <= 6).mean()
-    print(f"\nmapped {res.mapped.sum()}/32 reads; "
-          f"accuracy(+-band) = {acc:.3f}\n")
-    for i in range(5):
+    print(f"mapped {res.mapped.sum()}/{args.reads} reads; "
+          f"accuracy(+-band) = {acc:.3f}")
+    print(f"stats: {res.stats.candidates} candidates -> "
+          f"{res.stats.survivors} survivors -> "
+          f"{res.stats.affine_instances} affine instances\n")
+    for i in range(min(5, args.reads)):
         print(f"read {i}: true={rs.true_pos[i]:>6} "
               f"mapped={res.position[i]:>6} dist={res.distance[i]} "
               f"cigar={cigar(res.ops[i], res.op_count[i])}")

@@ -1,5 +1,12 @@
-"""DART-PIM core: the paper's contribution as composable JAX modules."""
+"""DART-PIM core: the paper's contribution as composable JAX modules.
+
+The public mapping API is the ``Mapper`` session (``repro.core.mapper``);
+everything else is the stage library it orchestrates.
+"""
 from . import (affine_wf, costmodel, distributed, encoding, filtering, index,
-               linear_wf, minimizers, pipeline, seeding)  # noqa: F401
+               linear_wf, mapper, minimizers, pipeline, seeding,
+               serving)  # noqa: F401
 from .index import GenomeIndex, build_index  # noqa: F401
+from .mapper import Mapper, MapperStats, MappingPlan  # noqa: F401
 from .pipeline import MapperConfig, MappingResult, map_reads  # noqa: F401
+from .serving import BatcherConfig, MappingService  # noqa: F401

@@ -22,6 +22,11 @@ paper does (measured in benchmarks/accuracy.py).
 The index is sharded by minimizer hash (``shard_index``) — DART-PIM's
 "crossbar per minimizer" data organization, with the same deliberate
 segment duplication.
+
+The public front-end for this path is ``repro.core.mapper.Mapper`` with
+``topology="mesh"`` (``distributed_map_reads`` below is its deprecation
+shim); ``make_distributed_mapper`` stays the compiled-program builder the
+session's plan cache draws from.
 """
 from __future__ import annotations
 
@@ -306,47 +311,51 @@ def make_distributed_mapper(mesh, cfg: MapperConfig, n_shards: int,
 _cached_mapper = functools.lru_cache(maxsize=8)(make_distributed_mapper)
 
 
+_LEGACY_STATS_KEYS = (
+    "stage_b_entries", "stage_b_survivors", "stage_b_affine_capacity",
+    "stage_b_affine_instances", "stage_b_padded_affine_instances",
+    "stage_b_affine_dropped", "send_dropped")
+
+
 def distributed_map_reads(mesh, sidx: ShardedIndex, reads: np.ndarray,
                           cfg: MapperConfig | None = None,
                           send_cap: int | None = None,
                           with_stats: bool = False):
-    """Host wrapper: returns (positions, distances, dropped_per_shard).
+    """Host wrapper: returns (positions, distances, dropped_per_shard),
+    plus a stage-B stats dict when ``with_stats=True``.
 
-    With ``with_stats=True`` a fourth element reports stage-B instance
-    accounting: bucket entries vs filter survivors vs the static affine
-    capacity actually executed, plus the drop counters of both
-    fixed-capacity buffers (send FIFO and survivor bucket).
+    .. deprecated::
+        Use :class:`repro.core.mapper.Mapper` with ``topology="mesh"`` —
+        ``Mapper(sidx, cfg, topology="mesh", mesh=mesh).map(reads)``
+        returns the same positions/distances bit-identically, as a
+        ``MappingResult`` whose ``stats`` (a unified ``MapperStats``)
+        always carries the stage-B accounting.  See the README's
+        migration table.
     """
-    cfg = cfg or MapperConfig(read_len=sidx.read_len, k=sidx.k, w=sidx.w,
-                              eth=sidx.eth)
-    S = sidx.n_shards
-    R = len(reads)
+    import warnings
+
+    warnings.warn(
+        "distributed_map_reads is deprecated; use repro.core.mapper.Mapper "
+        'with topology="mesh" — Mapper(sidx, cfg, topology="mesh", '
+        "mesh=mesh).map(reads) is the bit-identical replacement",
+        DeprecationWarning, stacklevel=2)
+    from .mapper import Mapper
+
+    R, S = len(reads), sidx.n_shards
     assert R % S == 0, "pad reads to a multiple of the shard count"
-    if send_cap is None:
-        send_cap = max(2 * (R // S) * cfg.max_minis // S, 8)
-    fn, aff_cap = _cached_mapper(mesh, cfg, S, send_cap)
-    uq, of, po, sg = sidx.device_arrays()
-    pos, dist, dropped, n_surv, aff_drop = fn(uq, of, po, sg,
-                                              jnp.asarray(reads))
-    pos, dist = np.asarray(pos), np.asarray(dist)
-    dropped = np.asarray(dropped)
-    n_aff_drop = int(np.asarray(aff_drop).sum())
+    mapper = Mapper(sidx, cfg, topology="mesh", mesh=mesh,
+                    send_cap=send_cap)
+    res = mapper.map(reads)
+    st = res.stats
+    dropped = st["send_dropped_per_shard"]
     if not with_stats:
-        if n_aff_drop:  # bounded-latency drop, but never a *silent* one
-            import warnings
+        if st.dropped_affine:  # bounded-latency drop, never a *silent* one
             warnings.warn(
-                f"stage B dropped {n_aff_drop} filter survivors on "
-                f"affine-capacity overflow (capacity {aff_cap}/shard); "
-                f"raise stage_b_survivor_frac or send_cap, or pass "
+                f"stage B dropped {st.dropped_affine} filter survivors on "
+                f"affine-capacity overflow (capacity "
+                f"{st['stage_b_affine_capacity']}/shard); raise "
+                f"stage_b_survivor_frac or send_cap, or pass "
                 f"with_stats=True to track this", stacklevel=2)
-        return pos, dist, dropped
-    stats = dict(
-        stage_b_entries=S * S * send_cap,
-        stage_b_survivors=int(np.asarray(n_surv).sum()),
-        stage_b_affine_capacity=aff_cap,
-        stage_b_affine_instances=S * aff_cap,
-        stage_b_padded_affine_instances=S * S * send_cap,
-        stage_b_affine_dropped=n_aff_drop,
-        send_dropped=int(dropped.sum()),
-    )
-    return pos, dist, dropped, stats
+        return res.position, res.distance, dropped
+    return (res.position, res.distance, dropped,
+            {k: st[k] for k in _LEGACY_STATS_KEYS})

@@ -1,0 +1,424 @@
+"""Unified ``Mapper`` session API — one planner/executor front-end.
+
+DART-PIM's controller hierarchy (paper Sec. V, Fig. 6) is a *single*
+planned dataflow from indexing to the final reduce: the main controller
+owns data placement, batch routing, and stage dispatch, and the crossbar
+controllers merely execute what was planned.  The repo's execution paths
+mirror that split here:
+
+  ``Mapper(index, cfg)``   — the session object.  It owns the device
+      placement of the (possibly sharded) index, a **plan cache** of
+      pre-built per-bucket/per-chunk executables, and the running
+      plan-cache hit/miss counters.
+  ``Mapper.plan(spec)``    — the planning layer: returns a ``MappingPlan``
+      describing exactly what a ``run`` would execute (chunk sizes, lane
+      capacities, shard routing, send/survivor capacities) *before* any
+      compute is dispatched.
+  ``Mapper.run(plan, r)``  — the executor: runs reads through the plan's
+      cached executable.
+  ``Mapper.map(reads)``    — plan + run in one call.
+  ``Mapper.map_async(r)``  — same, as a ``concurrent.futures.Future``
+      (submissions execute in order on a session worker thread, each one
+      driving the async double-buffered streaming engine internally).
+  ``Mapper.serve()``       — a ``MappingService`` request batcher wired to
+      this session.
+
+``topology=`` selects the back-end behind the same result schema:
+
+  ``"single"`` — the single-shard pipeline of ``repro.core.pipeline``
+      (padded or candidate-compacted engine, streamed chunks).
+  ``"mesh"``   — the distributed all_to_all mapper of
+      ``repro.core.distributed`` over a flat device mesh.  Reads are
+      zero-padded up to a shard multiple and results trimmed back, so
+      arbitrary batch sizes work; stage B never tracebacks, so the
+      traceback fields of ``MappingResult`` are ``None`` on this path.
+
+Every run reports a unified ``MapperStats`` (replacing the old divergent
+``stats`` dict vs ``with_stats=True`` tuple shapes).  ``MapperStats`` is
+dict-compatible (``stats["survivors"]``) for the legacy per-path keys and
+additionally exposes the unified fields as attributes, including the
+session's plan-cache hit counters — the observable for "no recompiles
+after warm-up" assertions.
+
+The old free functions ``pipeline.map_reads`` and
+``distributed.distributed_map_reads`` remain as thin deprecation shims
+that forward here and stay bit-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import Future, ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import streaming
+from .distributed import (AXIS, ShardedIndex, _cached_mapper, shard_index,
+                          stage_b_affine_capacity)
+from .index import GenomeIndex
+from .pipeline import (MapperConfig, MappingResult, _ChunkPipeline,
+                       _merge_stats, map_reads_jax)
+
+TOPOLOGIES = ("single", "mesh")
+
+__all__ = ["Mapper", "MapperStats", "MappingPlan", "TOPOLOGIES"]
+
+
+@dataclasses.dataclass
+class MapperStats:
+    """Unified per-run statistics schema shared by every topology.
+
+    The named fields are the topology-independent accounting (what was
+    seeded, what survived the filter, what the affine stage actually
+    executed, what fixed-capacity buffers dropped) plus the session's
+    cumulative plan-cache counters at the time of the run.  ``extra``
+    carries the legacy per-path keys (``candidates_valid`` /
+    ``stage_times_s`` on the single-shard path, ``stage_b_*`` /
+    ``send_dropped`` on the mesh path) and backs the dict-style access
+    (``stats["survivors"]``, ``dict(stats)``) the pre-``Mapper`` API
+    exposed.
+    """
+    topology: str
+    engine: str
+    reads: int                     # real reads mapped (padding excluded)
+    candidates: int                # seeded candidates / stage-B entries
+    survivors: int                 # filter survivors admitted to affine
+    affine_instances: int          # affine WF instances actually executed
+    padded_affine_instances: int   # what the padded reference would run
+    dropped_send: int = 0          # mesh: send-FIFO overflow drops
+    dropped_affine: int = 0        # mesh: survivor-capacity overflow drops
+    plan_cache_hits: int = 0       # session cumulative, sampled at run time
+    plan_cache_misses: int = 0
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    # -- dict-compatibility with the legacy stats shapes ------------------
+    def __getitem__(self, key):
+        return self.extra[key]
+
+    def __contains__(self, key):
+        return key in self.extra
+
+    def get(self, key, default=None):
+        return self.extra.get(key, default)
+
+    def keys(self):
+        return self.extra.keys()
+
+    def as_dict(self) -> dict:
+        return dict(self.extra)
+
+
+@dataclasses.dataclass(frozen=True)
+class MappingPlan:
+    """What a ``Mapper.run`` will execute, decided before any dispatch.
+
+    Single topology: ``chunk`` is the static chunk quantum (the jit shape
+    every chunk is padded to), ``chunk_sizes`` the real per-chunk read
+    counts, and ``lin_cap_max``/``aff_cap_max`` the ceilings the measured
+    per-chunk bucket capacities are clamped to (the capacities themselves
+    are data-dependent and picked host-side between the jitted stages).
+
+    Mesh topology: ``padded_reads`` is the global batch shape (reads are
+    zero-padded up to a multiple of ``n_shards``), ``send_cap`` the
+    per-destination send-FIFO capacity of the all_to_all exchange, and
+    ``stage_b_affine_cap`` the negotiated per-shard survivor capacity the
+    compiled stage B executes.
+    """
+    topology: str
+    engine: str
+    n_reads: int                   # batch size the plan was sized for
+    chunk: int                     # single: chunk quantum; mesh: padded R
+    chunk_sizes: tuple             # single: per-chunk real read counts
+    lin_cap_max: int = 0
+    aff_cap_max: int = 0
+    n_shards: int = 1
+    send_cap: int = 0
+    stage_b_affine_cap: int = 0
+    padded_reads: int = 0
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.chunk_sizes)
+
+    @property
+    def key(self) -> tuple:
+        """Plan-cache key: plans sharing a key share one executable (and
+        therefore its compiled programs — equal keys cannot recompile)."""
+        if self.topology == "mesh":
+            return ("mesh", self.padded_reads, self.send_cap)
+        if self.engine == "padded":
+            return ("single", "padded", self.n_reads)
+        return ("single", "compacted", self.chunk)
+
+
+def make_mesh_compat(shape, axes):
+    """``jax.make_mesh`` across jax versions: >= 0.5 takes explicit Auto
+    axis types; older releases have implicitly-auto axes only.  The single
+    home of this shim — ``launch.mesh`` builds its meshes through it."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:  # jax < 0.5
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def _flat_mesh(n_shards: int | None):
+    """Default flat shard mesh (``launch.mesh.make_genomics_mesh`` without
+    the core->launch dependency)."""
+    n = n_shards or len(jax.devices())
+    return make_mesh_compat((n,), (AXIS,))
+
+
+class Mapper:
+    """Read-mapping session: placed index + plan cache + executor.
+
+    Parameters
+    ----------
+    index : GenomeIndex | ShardedIndex
+        The reference index.  ``topology="mesh"`` accepts either — a
+        ``GenomeIndex`` is sharded across the mesh on construction.
+    cfg : MapperConfig, optional
+        Defaults to ``MapperConfig.from_index(index)``.
+    topology : "single" | "mesh"
+        Back-end selection; see the module docstring.
+    mesh : jax mesh, optional
+        Mesh topology only.  Defaults to a flat mesh over ``n_shards``
+        devices (all local devices when ``n_shards`` is None).
+    n_shards, send_cap : int, optional
+        Mesh topology only: shard count for the default mesh, and a fixed
+        send-FIFO capacity (default: scaled from each plan's batch size).
+    """
+
+    def __init__(self, index, cfg: MapperConfig | None = None, *,
+                 topology: str = "single", mesh=None,
+                 n_shards: int | None = None, send_cap: int | None = None):
+        if topology not in TOPOLOGIES:
+            raise ValueError(f"unknown topology {topology!r}; "
+                             f"expected one of {TOPOLOGIES}")
+        self.cfg = cfg or MapperConfig.from_index(index)
+        self.topology = topology
+        self.send_cap = send_cap
+        self._plan_cache: dict[tuple, object] = {}
+        self.plan_cache_hits = 0
+        self.plan_cache_misses = 0
+        self._pool: ThreadPoolExecutor | None = None
+
+        if topology == "single":
+            if isinstance(index, ShardedIndex):
+                raise ValueError('topology="single" needs a GenomeIndex, '
+                                 "not a ShardedIndex")
+            self.index = index
+            self.sharded_index = None
+            self.mesh = None
+            self._dev = (jnp.asarray(index.uniq_kmers),
+                         jnp.asarray(index.offsets),
+                         jnp.asarray(index.positions),
+                         jnp.asarray(index.segments))
+        else:
+            self.mesh = mesh if mesh is not None else _flat_mesh(n_shards)
+            S = int(self.mesh.devices.size)
+            if isinstance(index, ShardedIndex):
+                if index.n_shards != S:
+                    raise ValueError(
+                        f"ShardedIndex has {index.n_shards} shards but the "
+                        f"mesh has {S} devices")
+                sidx = index
+                self.index = None
+            else:
+                sidx = shard_index(index, S)
+                self.index = index
+            self.sharded_index = sidx
+            self._dev = sidx.device_arrays()
+
+    # ------------------------------------------------------------- planning
+
+    def plan(self, reads_spec, *, chunk: int | None = None,
+             send_cap: int | None = None) -> MappingPlan:
+        """Build the execution plan for a batch (no compute dispatched).
+
+        ``reads_spec`` is a read count or a reads array.  ``chunk``
+        overrides ``cfg.chunk_reads`` for this plan (single topology);
+        ``send_cap`` overrides the session / derived send capacity (mesh).
+        Inspect the returned ``MappingPlan`` for the chosen chunking,
+        capacities and shard routing; pass it to :meth:`run` to execute.
+        """
+        n = (int(reads_spec) if isinstance(reads_spec, (int, np.integer))
+             else len(reads_spec))
+        cfg = self.cfg
+        if self.topology == "mesh":
+            S = self.sharded_index.n_shards
+            padded = max(-(-n // S) * S, S)
+            sc = send_cap or self.send_cap or \
+                max(2 * (padded // S) * cfg.max_minis // S, 8)
+            return MappingPlan(
+                topology="mesh", engine=cfg.engine, n_reads=n,
+                chunk=padded, chunk_sizes=(n,), n_shards=S, send_cap=sc,
+                stage_b_affine_cap=stage_b_affine_capacity(S * sc, cfg),
+                padded_reads=padded)
+        if cfg.engine == "padded":
+            return MappingPlan(topology="single", engine="padded", n_reads=n,
+                               chunk=max(n, 1), chunk_sizes=(n,))
+        c = chunk or cfg.chunk_reads or max(n, 1)
+        sizes = tuple(min(c, n - i) for i in range(0, n, c))
+        return MappingPlan(topology="single", engine="compacted", n_reads=n,
+                           chunk=c, chunk_sizes=sizes,
+                           lin_cap_max=c * cfg.max_minis * cfg.max_pls,
+                           aff_cap_max=c * cfg.max_minis)
+
+    def _executable(self, plan: MappingPlan):
+        """Plan-cache lookup (counting hits/misses), building on miss.
+
+        Cache entries are the per-plan executables: the chunk pipeline of
+        the compacted engine, the jitted padded reference, or the
+        compiled ``shard_map`` program + negotiated survivor capacity of
+        the mesh mapper.  Repeated same-key plans therefore reuse the
+        exact compiled programs — a cache hit cannot recompile.
+        """
+        entry = self._plan_cache.get(plan.key)
+        if entry is not None:
+            self.plan_cache_hits += 1
+            return entry
+        self.plan_cache_misses += 1
+        if plan.topology == "mesh":
+            entry = _cached_mapper(self.mesh, self.cfg, plan.n_shards,
+                                   plan.send_cap)
+        elif plan.engine == "padded":
+            entry = map_reads_jax
+        else:
+            entry = _ChunkPipeline(self._dev, self.cfg)
+        self._plan_cache[plan.key] = entry
+        return entry
+
+    # ------------------------------------------------------------ execution
+
+    def map(self, reads: np.ndarray) -> MappingResult:
+        """Plan + run one read batch; the single public mapping call."""
+        reads = np.asarray(reads)
+        return self.run(self.plan(len(reads)), reads)
+
+    def map_async(self, reads: np.ndarray) -> Future:
+        """Submit a batch to the session worker thread; returns a Future
+        of the ``MappingResult``.  Submissions execute in order, each one
+        driving the double-buffered streaming engine internally, so the
+        caller overlaps its own work (e.g. preparing the next batch) with
+        the full mapping pipeline of this one."""
+        reads = np.asarray(reads)
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="mapper-session")
+        return self._pool.submit(self.map, reads)
+
+    def serve(self, batcher=None):
+        """A ``MappingService`` request batcher wired to this session."""
+        from .serving import BatcherConfig, MappingService
+        return MappingService(self,
+                              batcher=batcher or BatcherConfig())
+
+    def close(self):
+        """Shut down the ``map_async`` worker (no-op if never used)."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    def run(self, plan: MappingPlan, reads: np.ndarray) -> MappingResult:
+        """Execute ``reads`` through ``plan``'s cached executable.
+
+        ``len(reads)`` may be smaller than the plan's batch size (the
+        serving path reuses one bucket-sized plan for a shorter residue):
+        reads are padded to the plan's static shape and results trimmed.
+        """
+        reads = np.asarray(reads)
+        n = len(reads)
+        entry = self._executable(plan)
+        if plan.topology == "mesh":
+            return self._run_mesh(plan, entry, reads, n)
+        if plan.engine == "padded":
+            out = entry(*self._dev, jnp.asarray(reads), self.cfg)
+            return MappingResult(
+                position=np.asarray(out["position"]),
+                distance=np.asarray(out["distance"]),
+                mapped=np.asarray(out["mapped"]),
+                ops=np.asarray(out["ops"]),
+                op_count=np.asarray(out["op_count"]),
+                linear_dist=np.asarray(out["linear_dist"]),
+                n_candidates=np.asarray(out["n_candidates"]), stats=None)
+        return self._run_chunks(plan, entry, reads, n)
+
+    def _run_chunks(self, plan: MappingPlan, pipe: _ChunkPipeline,
+                    reads: np.ndarray, n: int) -> MappingResult:
+        cfg = self.cfg
+        items = [(reads[c0 : c0 + plan.chunk], plan.chunk)
+                 for c0 in range(0, n, plan.chunk)]
+        if cfg.stream:
+            times = None
+            fetched = streaming.stream_map(items, pipe.phase1, pipe.phase2,
+                                           pipe.fetch)
+        else:
+            times = {}
+            fetched = streaming.sync_map(items, pipe.phase1, pipe.phase2,
+                                         pipe.fetch, times=times)
+        parts = [out for out, _ in fetched]
+        raw = _merge_stats([st for _, st in fetched])
+        raw["stream"] = cfg.stream
+        if times is not None:
+            raw["stage_times_s"] = {k: round(v, 4) for k, v in times.items()}
+        cat = (lambda k: np.asarray(parts[0][k]) if len(parts) == 1 else
+               np.concatenate([np.asarray(p[k]) for p in parts]))
+        stats = MapperStats(
+            topology="single", engine="compacted", reads=n,
+            candidates=raw["candidates_valid"], survivors=raw["survivors"],
+            affine_instances=raw["affine_dist_instances"],
+            padded_affine_instances=raw["padded_affine_instances"],
+            plan_cache_hits=self.plan_cache_hits,
+            plan_cache_misses=self.plan_cache_misses, extra=raw)
+        return MappingResult(position=cat("position"),
+                             distance=cat("distance"), mapped=cat("mapped"),
+                             ops=cat("ops"), op_count=cat("op_count"),
+                             linear_dist=cat("linear_dist"),
+                             n_candidates=cat("n_candidates"), stats=stats)
+
+    def _run_mesh(self, plan: MappingPlan, entry, reads: np.ndarray,
+                  n: int) -> MappingResult:
+        if n > plan.padded_reads:
+            raise ValueError(f"{n} reads exceed the plan's padded batch "
+                             f"shape {plan.padded_reads}; re-plan")
+        if n < plan.padded_reads:
+            pad = np.zeros((plan.padded_reads - n, reads.shape[1]),
+                           reads.dtype)
+            reads = np.concatenate([reads, pad])
+        fn, aff_cap = entry
+        pos, dist, dropped, n_surv, aff_drop = fn(*self._dev,
+                                                  jnp.asarray(reads))
+        pos = np.asarray(pos)[:n]
+        dist = np.asarray(dist)[:n]
+        dropped = np.asarray(dropped)
+        S = plan.n_shards
+        surv = int(np.asarray(n_surv).sum())
+        n_aff_drop = int(np.asarray(aff_drop).sum())
+        entries = S * S * plan.send_cap
+        raw = dict(stage_b_entries=entries, stage_b_survivors=surv,
+                   stage_b_affine_capacity=aff_cap,
+                   stage_b_affine_instances=S * aff_cap,
+                   stage_b_padded_affine_instances=entries,
+                   stage_b_affine_dropped=n_aff_drop,
+                   send_dropped=int(dropped.sum()),
+                   send_dropped_per_shard=dropped,
+                   padded_reads=plan.padded_reads)
+        stats = MapperStats(
+            topology="mesh", engine=self.cfg.engine, reads=n,
+            candidates=entries, survivors=surv,
+            affine_instances=S * aff_cap, padded_affine_instances=entries,
+            dropped_send=int(dropped.sum()), dropped_affine=n_aff_drop,
+            plan_cache_hits=self.plan_cache_hits,
+            plan_cache_misses=self.plan_cache_misses, extra=raw)
+        return MappingResult(position=pos, distance=dist, mapped=pos >= 0,
+                             stats=stats)

@@ -38,12 +38,18 @@ of ``repro.kernels`` (interpret mode on CPU, compiled on TPU).
 
 The distributed version in ``repro.core.distributed`` wraps the same
 stages with an all_to_all seeding exchange over the device mesh.
+
+Callers should not drive these stages directly: the public front-end is
+the ``Mapper`` session of ``repro.core.mapper``, which owns device
+placement, the plan cache, and topology selection (``map_reads`` below is
+its deprecation shim).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import time
+import warnings
 from functools import partial
 
 import jax
@@ -82,6 +88,42 @@ class MapperConfig:
     stage_b_survivor_frac: float = 0.5  # distributed stage-B: static affine
     #                               capacity as a fraction of bucket entries
 
+    ENGINES = ("compacted", "padded")
+    WF_BACKENDS = ("jnp", "pallas")
+
+    def __post_init__(self):
+        """Reject invalid configurations at construction time, with errors
+        that name the field — instead of failing deep inside jit tracing
+        (or worse, silently misaligning kernel lanes)."""
+        if self.engine not in self.ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r}; expected one "
+                             f"of {self.ENGINES}")
+        if self.wf_backend not in self.WF_BACKENDS:
+            raise ValueError(f"unknown wf_backend {self.wf_backend!r}; "
+                             f"expected one of {self.WF_BACKENDS}")
+        for name in ("lin_block_r", "aff_block_r"):
+            v = getattr(self, name)
+            if not (isinstance(v, int) and v >= 1 and (v & (v - 1)) == 0):
+                raise ValueError(
+                    f"{name}={v!r} must be a positive power of two: it is "
+                    f"the Pallas kernel lane block and the bucket-capacity "
+                    f"alignment (see repro.core.compaction)")
+        if self.chunk_reads is not None and self.chunk_reads < 1:
+            raise ValueError(f"chunk_reads={self.chunk_reads!r} must be "
+                             f">= 1 (or None for unchunked)")
+
+    @classmethod
+    def from_index(cls, index, **overrides) -> "MapperConfig":
+        """Config matching an index's geometry (``read_len``/``k``/``w``/
+        ``eth``), with ``overrides`` applied on top.  Accepts a
+        ``GenomeIndex`` or a ``distributed.ShardedIndex`` — the single
+        place where index geometry flows into a config, so launchers
+        cannot drift out of sync by hand-copying fields."""
+        base = dict(read_len=index.read_len, k=index.k, w=index.w,
+                    eth=index.eth)
+        base.update(overrides)
+        return cls(**base)
+
     @property
     def seed_params(self) -> SeedParams:
         return SeedParams(k=self.k, w=self.w, max_minis=self.max_minis,
@@ -90,14 +132,22 @@ class MapperConfig:
 
 @dataclasses.dataclass
 class MappingResult:
+    """Unified mapping output across every execution path.
+
+    The traceback/accounting fields are ``None`` on paths that do not
+    produce them (the mesh topology's stage B computes distances and
+    positions only — see ``repro.core.mapper``).  ``stats`` is a
+    ``mapper.MapperStats`` on the compacted/mesh paths (dict-compatible
+    for the legacy keys) and ``None`` on the padded reference engine.
+    """
     position: np.ndarray   # (R,) int32 best mapping position (-1 if unmapped)
     distance: np.ndarray   # (R,) int32 affine WF distance
     mapped: np.ndarray     # (R,) bool
-    ops: np.ndarray        # (R, max_ops) traceback op codes (END-aligned)
-    op_count: np.ndarray   # (R,) int32
-    linear_dist: np.ndarray  # (R, M, P) all candidate linear distances
-    n_candidates: np.ndarray  # (R,) number of valid PLs seeded
-    stats: dict | None = None  # compacted engine: instance-count accounting
+    ops: np.ndarray | None = None   # (R, max_ops) traceback ops (END-aligned)
+    op_count: np.ndarray | None = None  # (R,) int32
+    linear_dist: np.ndarray | None = None  # (R, M, P) candidate linear dists
+    n_candidates: np.ndarray | None = None  # (R,) valid PLs seeded
+    stats: object | None = None  # MapperStats (compacted/mesh) | None
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -400,53 +450,20 @@ def map_reads(index: GenomeIndex, reads: np.ndarray,
               cfg: MapperConfig | None = None) -> MappingResult:
     """Host-friendly wrapper: numpy index + reads -> MappingResult.
 
-    ``cfg.engine`` selects the padded reference or the candidate-compacted
-    engine (default); both produce identical positions/distances.  The
-    compacted engine streams ``cfg.chunk_reads``-sized read chunks —
-    double-buffered when ``cfg.stream`` (chunk i+1 prep/transfer and chunk
-    i-1 fetch overlap chunk i's compute), strictly synchronous with
-    per-stage wall times otherwise — and reports its instance accounting
-    in ``MappingResult.stats``.
+    .. deprecated::
+        Use :class:`repro.core.mapper.Mapper` —
+        ``Mapper(index, cfg).map(reads)`` is the bit-identical replacement
+        and keeps the index placed on device across calls (this shim
+        builds a fresh one-shot session each time).  See the README's
+        migration table.
     """
-    cfg = cfg or MapperConfig(read_len=index.read_len, k=index.k, w=index.w,
-                              eth=index.eth)
-    dev = (jnp.asarray(index.uniq_kmers), jnp.asarray(index.offsets),
-           jnp.asarray(index.positions), jnp.asarray(index.segments))
-
-    if cfg.engine == "padded":
-        out = map_reads_jax(*dev, jnp.asarray(reads), cfg)
-        parts, stats = [out], None
-    elif cfg.engine == "compacted":
-        R = len(reads)
-        chunk = cfg.chunk_reads or max(R, 1)
-        reads_np = np.asarray(reads)
-        items = [(reads_np[c0 : c0 + chunk], chunk)
-                 for c0 in range(0, R, chunk)]
-        pipe = _ChunkPipeline(dev, cfg)
-        if cfg.stream:
-            times = None
-            fetched = streaming.stream_map(items, pipe.phase1, pipe.phase2,
-                                           pipe.fetch)
-        else:
-            times = {}
-            fetched = streaming.sync_map(items, pipe.phase1, pipe.phase2,
-                                         pipe.fetch, times=times)
-        parts = [out for out, _ in fetched]
-        stats = _merge_stats([st for _, st in fetched])
-        stats["stream"] = cfg.stream
-        if times is not None:
-            stats["stage_times_s"] = {k: round(v, 4)
-                                      for k, v in times.items()}
-    else:
-        raise ValueError(f"unknown engine {cfg.engine!r}")
-
-    cat = (lambda k: np.asarray(parts[0][k]) if len(parts) == 1 else
-           np.concatenate([np.asarray(p[k]) for p in parts]))
-    return MappingResult(position=cat("position"), distance=cat("distance"),
-                         mapped=cat("mapped"), ops=cat("ops"),
-                         op_count=cat("op_count"),
-                         linear_dist=cat("linear_dist"),
-                         n_candidates=cat("n_candidates"), stats=stats)
+    warnings.warn(
+        "map_reads is deprecated; use repro.core.mapper.Mapper — "
+        "Mapper(index, cfg).map(reads) is the bit-identical replacement "
+        "(and reuses device placement across calls)",
+        DeprecationWarning, stacklevel=2)
+    from .mapper import Mapper
+    return Mapper(index, cfg).map(reads)
 
 
 def oracle_map(ref: np.ndarray, reads: np.ndarray, eth: int = 6,

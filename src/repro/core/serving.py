@@ -1,8 +1,8 @@
-"""Request batching for the streaming mapper (the serving front-end).
+"""Request batching for the mapping service (the serving front-end).
 
 A mapping service receives read batches of arbitrary size — per-client
 FASTQ slices, not the engine's static chunk shape.  Feeding each request
-straight to ``map_reads`` would trigger one jit bucket per distinct batch
+straight to the mapper would trigger one jit bucket per distinct batch
 size and waste lanes on tiny batches.  ``ReadBatcher`` is the Reads-FIFO
 analog at the request layer: it coalesces pending requests into
 **power-of-two bucket shapes** between ``bucket_min`` and ``bucket_max``
@@ -11,11 +11,20 @@ analog at the request layer: it coalesces pending requests into
   * recompiles are bounded by ``log2(bucket_max / bucket_min) + 1``
     distinct shapes, regardless of request-size distribution;
   * full ``bucket_max`` buckets flow through the double-buffered streaming
-    engine back-to-back (one multi-chunk ``map_reads`` call);
+    engine back-to-back (one multi-chunk streamed run);
   * the residue pays at most 2x padding on the *last* bucket only.
 
-``MappingService`` wraps the batcher + ``map_reads`` with per-request
-result reassembly and padding/throughput accounting.
+``MappingService`` wraps the batcher + a ``repro.core.mapper.Mapper``
+session with per-request result reassembly and padding/throughput
+accounting.  The session's topology decides where buckets execute:
+
+  * ``topology="single"`` — full buckets run as one streamed multi-chunk
+    plan, the residue as its own pow-2 chunk shape;
+  * ``topology="mesh"``   — every bucket is routed onto the distributed
+    all_to_all mapper; same-size buckets share one plan-cache entry, so
+    repeated buckets hit the compiled shard_map program with **zero**
+    recompiles after warm-up (observable via the plan-cache counters in
+    ``MapperStats`` / ``Mapper.plan_cache_hits``).
 """
 from __future__ import annotations
 
@@ -24,8 +33,8 @@ import dataclasses
 import numpy as np
 
 from .compaction import bucket_capacity
-from .index import GenomeIndex
-from .pipeline import MapperConfig, MappingResult, map_reads
+from .mapper import Mapper, MapperStats
+from .pipeline import MapperConfig, MappingResult
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,50 +111,85 @@ class ReadBatcher:
         return reads, buckets, spans
 
 
-class MappingService:
-    """Single-device mapping service: batcher + streaming engine.
+_RESULT_FIELDS = ("position", "distance", "mapped", "ops", "op_count",
+                  "linear_dist", "n_candidates")
 
-    ``submit`` queues a request; ``flush`` drains the batcher, streams the
-    coalesced buckets through ``map_reads`` (full buckets as one
-    multi-chunk streamed call, the residue bucket as its own pow-2 shape)
-    and returns ``{request_id: MappingResult}``.
+_TOTAL_FIELDS = ("reads", "candidates", "survivors", "affine_instances",
+                 "padded_affine_instances", "dropped_send", "dropped_affine")
+
+
+class MappingService:
+    """Mapping service: request batcher + a ``Mapper`` session.
+
+    Construct from an existing session (``MappingService(mapper)`` /
+    ``mapper.serve()``) or from an index + config, which builds a
+    single-topology session internally (the pre-``Mapper`` signature).
+
+    ``submit`` queues a request; ``flush`` drains the batcher, routes the
+    coalesced buckets through the session (see the module docstring for
+    the per-topology routing) and returns ``{request_id: MappingResult}``.
+    ``totals`` accumulates the unified ``MapperStats`` accounting across
+    flushes — survivors, executed affine instances, drop counters — and
+    ``mapper.plan_cache_hits``/``misses`` expose the warm-up behaviour.
     """
 
-    def __init__(self, index: GenomeIndex, cfg: MapperConfig | None = None,
+    def __init__(self, index_or_mapper, cfg: MapperConfig | None = None,
                  batcher: BatcherConfig = BatcherConfig()):
-        self.index = index
-        self.cfg = cfg or MapperConfig(read_len=index.read_len, k=index.k,
-                                       w=index.w, eth=index.eth)
+        if isinstance(index_or_mapper, Mapper):
+            assert cfg is None, "pass cfg via the Mapper session"
+            self.mapper = index_or_mapper
+        else:
+            self.mapper = Mapper(index_or_mapper, cfg)
+        self.index = self.mapper.index
+        self.cfg = self.mapper.cfg
         self.batcher = ReadBatcher(self.cfg.read_len, batcher)
+        self.totals = {k: 0 for k in _TOTAL_FIELDS}
 
     def submit(self, reads: np.ndarray) -> int:
         return self.batcher.submit(reads)
+
+    def _accumulate(self, parts: list[MappingResult]) -> None:
+        for p in parts:
+            if isinstance(p.stats, MapperStats):
+                for k in self.totals:
+                    self.totals[k] += getattr(p.stats, k)
 
     def flush(self) -> dict[int, MappingResult]:
         reads, buckets, spans = self.batcher.drain()
         if not buckets:
             return {}
-        hi = self.batcher.cfg.bucket_max
-        n_full = sum(1 for b in buckets if b == hi)
         parts = []
-        if n_full:  # full buckets: one streamed multi-chunk call
-            cfg = dataclasses.replace(self.cfg, chunk_reads=hi)
-            parts.append(map_reads(self.index, reads[: n_full * hi], cfg))
-        rest = reads[n_full * hi :]
-        if len(rest):  # residue: its own pow-2 chunk shape (padded inside)
-            cfg = dataclasses.replace(self.cfg, chunk_reads=buckets[-1])
-            parts.append(map_reads(self.index, rest, cfg))
+        if self.mapper.topology == "mesh":
+            # every bucket is one distributed batch; same-size buckets
+            # share a plan key -> the compiled shard_map program
+            off = 0
+            for b in buckets:
+                block = reads[off : off + b]  # last block may be short
+                off += b
+                parts.append(self.mapper.run(self.mapper.plan(b), block))
+        else:
+            hi = self.batcher.cfg.bucket_max
+            n_full = sum(1 for b in buckets if b == hi)
+            if n_full:  # full buckets: one streamed multi-chunk plan
+                plan = self.mapper.plan(n_full * hi, chunk=hi)
+                parts.append(self.mapper.run(plan, reads[: n_full * hi]))
+            rest = reads[n_full * hi :]
+            if len(rest):  # residue: its own pow-2 chunk shape
+                plan = self.mapper.plan(len(rest), chunk=buckets[-1])
+                parts.append(self.mapper.run(plan, rest))
+        self._accumulate(parts)
 
         def cat(field):
             arrs = [getattr(p, field) for p in parts]
+            if any(a is None for a in arrs):  # mesh: no traceback fields
+                return None
             return arrs[0] if len(arrs) == 1 else np.concatenate(arrs)
 
-        fields = {f: cat(f) for f in ("position", "distance", "mapped",
-                                      "ops", "op_count", "linear_dist",
-                                      "n_candidates")}
+        fields = {f: cat(f) for f in _RESULT_FIELDS}
         out = {}
         for rid, (lo, hi_) in spans.items():
             out[rid] = MappingResult(
-                **{f: v[lo:hi_] for f, v in fields.items()},
+                **{f: (v[lo:hi_] if v is not None else None)
+                   for f, v in fields.items()},
                 stats=None)
         return out

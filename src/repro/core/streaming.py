@@ -25,6 +25,11 @@ attributable to one stage instead of an async soup.
 Both paths call the exact same jitted stages with the same static bucket
 capacities, so their outputs are bit-identical (asserted in
 ``tests/test_streaming.py``).
+
+The driver is the ``Mapper`` session of ``repro.core.mapper``: its
+compacted-engine plans execute ``pipeline._ChunkPipeline`` phases through
+``stream_map``/``sync_map``, and ``Mapper.map_async`` stacks a
+caller-facing future on top of this chunk-level overlap.
 """
 from __future__ import annotations
 

@@ -8,16 +8,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-try:  # jax >= 0.5; older releases have implicitly-auto mesh axes only
-    from jax.sharding import AxisType
-except ImportError:
-    AxisType = None
-
-
-def _make_mesh(shape, axes):
-    if AxisType is None:
-        return jax.make_mesh(shape, axes)
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+# single home of the jax-version mesh-construction shim
+from repro.core.mapper import make_mesh_compat as _make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):

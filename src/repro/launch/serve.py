@@ -2,17 +2,24 @@
 
     PYTHONPATH=src python -m repro.launch.serve --shards 8 --reads 256
     PYTHONPATH=src python -m repro.launch.serve --service --batches 16
+    PYTHONPATH=src python -m repro.launch.serve --service --topology mesh \
+        --shards 4 --batches 16
 
-Two modes:
+Both modes drive the unified ``repro.core.mapper.Mapper`` session API:
 
-  * distributed (default) — the mesh mapper: one process per host on a real
-    pod (mesh from the TPU environment); on CPU it runs over virtual
-    devices.  Stage B now runs affine WF only on compacted filter
-    survivors (``--stats`` prints the instance accounting).
-  * ``--service`` — the single-device serving path: variable-sized request
-    batches are coalesced by the pow-2 ``ReadBatcher`` into the streaming
-    engine's static chunk shapes (``repro.core.serving``), exercising the
-    async double-buffered ``map_reads`` engine end to end.
+  * distributed (default) — ``Mapper(topology="mesh")`` batch loop: one
+    process per host on a real pod (mesh from the TPU environment); on
+    CPU it runs over virtual devices.  Stage B runs affine WF only on
+    compacted filter survivors; the unified ``MapperStats`` reports the
+    instance accounting.
+  * ``--service`` — the request-batching path: variable-sized request
+    batches are coalesced by the pow-2 ``ReadBatcher`` into static bucket
+    shapes (``repro.core.serving``).  ``--topology single`` (default)
+    streams buckets through the async double-buffered engine;
+    ``--topology mesh`` routes every bucket onto the distributed mapper,
+    where repeated same-size buckets hit the session plan cache (the
+    compiled shard_map program) with zero recompiles after warm-up —
+    watch the plan-cache counters in the closing stats lines.
 """
 from __future__ import annotations
 
@@ -22,25 +29,39 @@ import sys
 import time
 
 
+def _print_mapper_stats(mapper, totals: dict) -> None:
+    """Closing stats lines shared by both modes: the unified MapperStats
+    stage-B/filter accounting and the session plan-cache counters."""
+    print(f"stage B/filter (unified MapperStats): {totals['survivors']} "
+          f"survivors -> {totals['affine_instances']} affine instances "
+          f"(of {totals['padded_affine_instances']} padded), dropped "
+          f"send={totals['dropped_send']} affine={totals['dropped_affine']}")
+    print(f"plan cache: {mapper.plan_cache_hits} hits / "
+          f"{mapper.plan_cache_misses} misses "
+          f"(same-size batches reuse compiled executables after warm-up)")
+
+
 def run_service(args) -> int:
     import numpy as np
 
     from repro.core.index import build_index
+    from repro.core.mapper import Mapper
     from repro.core.pipeline import MapperConfig
-    from repro.core.serving import BatcherConfig, MappingService
+    from repro.core.serving import BatcherConfig
     from repro.data.genome import make_reference, sample_reads
 
     ref = make_reference(args.genome, seed=0, repeat_frac=0.02)
     idx = build_index(ref)
-    cfg = MapperConfig(read_len=idx.read_len, k=idx.k, w=idx.w, eth=idx.eth,
-                       wf_backend=args.wf_backend, stream=not args.no_stream)
-    svc = MappingService(idx, cfg,
-                         BatcherConfig(bucket_min=args.bucket_min,
-                                       bucket_max=args.bucket_max))
+    cfg = MapperConfig.from_index(idx, wf_backend=args.wf_backend,
+                                  stream=not args.no_stream)
+    mapper = Mapper(idx, cfg, topology=args.topology, n_shards=args.shards)
+    svc = mapper.serve(BatcherConfig(bucket_min=args.bucket_min,
+                                     bucket_max=args.bucket_max))
     rng = np.random.default_rng(7)
     print(f"service: genome {len(ref)} bases, buckets "
           f"[{args.bucket_min}..{args.bucket_max}], "
-          f"stream={cfg.stream}, wf_backend={cfg.wf_backend}")
+          f"topology={mapper.topology}, stream={cfg.stream}, "
+          f"wf_backend={cfg.wf_backend}")
     total = correct = 0
     t0 = time.perf_counter()
     truth = {}
@@ -59,14 +80,15 @@ def run_service(args) -> int:
     print(f"{total} reads / {st['requests']} requests in {dt:.1f}s "
           f"({total/dt:.0f} reads/s), accuracy {correct/max(total,1):.4f}")
     print(f"bucket hist {st['bucket_hist']}, lane padding waste {waste:.3f}")
+    _print_mapper_stats(mapper, svc.totals)
     return 0
 
 
 def run_distributed(args) -> int:
     import numpy as np
 
-    from repro.core.distributed import distributed_map_reads, shard_index
     from repro.core.index import build_index
+    from repro.core.mapper import Mapper
     from repro.core.pipeline import MapperConfig
     from repro.data.genome import make_reference, sample_reads
     from repro.launch.mesh import make_genomics_mesh
@@ -75,36 +97,39 @@ def run_distributed(args) -> int:
     n_shards = mesh.devices.size
     ref = make_reference(args.genome, seed=0, repeat_frac=0.02)
     idx = build_index(ref)
-    sidx = shard_index(idx, n_shards)
-    cfg = MapperConfig(read_len=idx.read_len, k=idx.k, w=idx.w, eth=idx.eth,
-                       wf_backend=args.wf_backend)
+    cfg = MapperConfig.from_index(idx, wf_backend=args.wf_backend)
+    mapper = Mapper(idx, cfg, topology="mesh", mesh=mesh,
+                    send_cap=args.send_cap)
     print(f"serving: {n_shards} shards, {len(idx.uniq_kmers)} minimizers, "
           f"{len(ref)} bases")
-    total = correct = dropped = surv = aff_inst = aff_drop = 0
+    totals = dict(survivors=0, affine_instances=0,
+                  padded_affine_instances=0, dropped_send=0,
+                  dropped_affine=0)
+    total = correct = 0
     t0 = time.perf_counter()
     for b in range(args.batches):
         rs = sample_reads(ref, args.reads, seed=1000 + b)
-        pos, dist, drop, stats = distributed_map_reads(
-            mesh, sidx, rs.reads, cfg=cfg, send_cap=args.send_cap,
-            with_stats=True)
-        total += len(pos)
-        correct += int((np.abs(pos - rs.true_pos) <= 6).sum())
-        dropped += int(drop.sum())
-        surv += stats["stage_b_survivors"]
-        aff_inst += stats["stage_b_affine_instances"]
-        aff_drop += stats["stage_b_affine_dropped"]
+        res = mapper.map(rs.reads)
+        total += len(res.position)
+        correct += int((np.abs(res.position - rs.true_pos) <= 6).sum())
+        for k in totals:
+            totals[k] += getattr(res.stats, k)
     dt = time.perf_counter() - t0
     print(f"{total} reads in {dt:.1f}s ({total/dt:.0f} reads/s), "
-          f"accuracy {correct/total:.4f}, dropped {dropped}")
-    print(f"stage B: {surv} survivors -> {aff_inst} affine instances "
-          f"(compacted), {aff_drop} dropped on overflow")
+          f"accuracy {correct/total:.4f}, dropped {totals['dropped_send']}")
+    _print_mapper_stats(mapper, totals)
     return 0
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--service", action="store_true",
-                    help="single-device batcher+streaming service mode")
+                    help="request batcher + Mapper session service mode")
+    ap.add_argument("--topology", default="single",
+                    choices=("single", "mesh"),
+                    help="service mode only: execute buckets on the "
+                         "single-shard streaming engine or route them onto "
+                         "the distributed mesh mapper")
     ap.add_argument("--shards", type=int, default=None)
     ap.add_argument("--genome", type=int, default=50_000)
     ap.add_argument("--reads", type=int, default=128,

@@ -59,6 +59,29 @@ assert st3["stage_b_affine_dropped"] > 0, st3
 m3 = pos3 >= 0
 assert m3.any()
 assert (np.abs(pos3[m3] - rs.true_pos[m3]) <= 6).mean() > 0.9
+
+# unified session API, mesh topology: bit-identical to the free function
+from repro.core.mapper import Mapper
+mapper = Mapper(sidx, cfg, topology="mesh", mesh=mesh)
+mres = mapper.map(rs.reads)
+assert (mres.position == pos).all() and (mres.distance == dist).all()
+assert mres.stats["stage_b_survivors"] == stats["stage_b_survivors"]
+
+# MappingService routed onto the mesh: repeated same-size buckets are
+# pure plan-cache hits (no new executables after warm-up)
+from repro.core.serving import BatcherConfig, MappingService
+svc = MappingService(mapper, batcher=BatcherConfig(bucket_min=16,
+                                                   bucket_max=32))
+for _ in range(2):
+    rids = [svc.submit(rs.reads[:40]), svc.submit(rs.reads[40:])]
+    out = svc.flush()
+    for rid, (lo, hi) in zip(rids, ((0, 40), (40, 64))):
+        assert (np.abs(out[rid].position - res.position[lo:hi]) <= 0).all()
+warm = mapper.plan_cache_misses
+rids = [svc.submit(rs.reads[:40]), svc.submit(rs.reads[40:])]
+svc.flush()
+assert mapper.plan_cache_misses == warm, "same-size buckets recompiled"
+assert mapper.plan_cache_hits > 0
 print("DISTRIBUTED_MAPPER_OK")
 """
 

@@ -1,0 +1,284 @@
+"""Unified ``Mapper`` session API: parity with the deprecated free
+functions (which must warn), the plan/run layer and its cache counters,
+mesh topology in-process (1-shard mesh), and ``MappingService`` request
+reassembly (out-of-order drains, partial buckets, bucket-spanning
+requests)."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.mapper import Mapper, MapperStats, MappingPlan
+from repro.core.pipeline import MapperConfig, map_reads
+from repro.core.serving import BatcherConfig, MappingService
+
+FIELDS = ("position", "distance", "mapped", "ops", "op_count",
+          "linear_dist", "n_candidates")
+
+
+@pytest.fixture(scope="module")
+def world():
+    from repro.core.index import build_index
+    from repro.data.genome import make_reference, sample_reads
+    ref = make_reference(8_000, seed=11, repeat_frac=0.03)
+    idx = build_index(ref)
+    rs = sample_reads(ref, 40, seed=13)
+    junk = np.random.default_rng(15).integers(0, 4, (8, 150)).astype(np.uint8)
+    return idx, np.concatenate([rs.reads, junk])
+
+
+@pytest.fixture(scope="module")
+def mesh1(world):
+    """In-process 1-shard mesh + sharded index (no subprocess needed)."""
+    from repro.core.distributed import shard_index
+    from repro.core.mapper import _flat_mesh
+    idx, _ = world
+    return _flat_mesh(1), shard_index(idx, 1)
+
+
+def _assert_same(a, b, fields=FIELDS):
+    for f in fields:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f)
+
+
+# ------------------------------------------------------------------ parity
+
+def test_map_matches_deprecated_map_reads(world):
+    idx, reads = world
+    res = Mapper(idx).map(reads)
+    with pytest.warns(DeprecationWarning, match="Mapper"):
+        old = map_reads(idx, reads)
+    _assert_same(res, old)
+    # unified stats carry the legacy accounting keys
+    assert res.stats["survivors"] == old.stats["survivors"]
+    assert res.stats.survivors == res.stats["survivors"]
+
+
+def test_map_matches_padded_reference(world):
+    idx, reads = world
+    a = Mapper(idx, MapperConfig.from_index(idx, engine="padded")).map(reads)
+    b = Mapper(idx, MapperConfig.from_index(idx, chunk_reads=14)).map(reads)
+    _assert_same(a, b)
+    assert a.stats is None  # padded reference: no instance accounting
+    assert b.stats.extra["n_chunks"] == 4
+
+
+def test_map_async_matches_map(world):
+    idx, reads = world
+    with Mapper(idx) as mapper:
+        sync = mapper.map(reads)
+        futs = [mapper.map_async(reads[:16]), mapper.map_async(reads)]
+        _assert_same(futs[1].result(), sync)
+        np.testing.assert_array_equal(futs[0].result().position,
+                                      sync.position[:16])
+
+
+# ---------------------------------------------------------------- planning
+
+def test_plan_is_inspectable_before_execution(world):
+    idx, reads = world
+    mapper = Mapper(idx)
+    plan = mapper.plan(reads, chunk=14)
+    assert isinstance(plan, MappingPlan)
+    assert plan.chunk_sizes == (14, 14, 14, 6)
+    assert plan.lin_cap_max == 14 * mapper.cfg.max_minis * mapper.cfg.max_pls
+    assert mapper.plan_cache_misses == 0  # planning dispatches nothing
+    res = mapper.run(plan, reads)
+    assert res.stats.extra["n_chunks"] == 4
+
+
+def test_plan_cache_hits_on_repeat(world):
+    idx, reads = world
+    mapper = Mapper(idx)
+    mapper.map(reads)
+    assert (mapper.plan_cache_hits, mapper.plan_cache_misses) == (0, 1)
+    res = mapper.map(reads)
+    assert (mapper.plan_cache_hits, mapper.plan_cache_misses) == (1, 1)
+    # the stats snapshot carries the session counters
+    assert res.stats.plan_cache_hits == 1
+    # a different chunking is a different plan key
+    mapper.run(mapper.plan(reads, chunk=16), reads)
+    assert mapper.plan_cache_misses == 2
+
+
+def test_unknown_topology_rejected(world):
+    idx, _ = world
+    with pytest.raises(ValueError, match="topology"):
+        Mapper(idx, topology="ring")
+
+
+# ---------------------------------------------------------------- validation
+
+def test_mapper_config_rejects_bad_values_at_construction():
+    with pytest.raises(ValueError, match="engine"):
+        MapperConfig(engine="nope")
+    with pytest.raises(ValueError, match="wf_backend"):
+        MapperConfig(wf_backend="cuda")
+    with pytest.raises(ValueError, match="lin_block_r"):
+        MapperConfig(lin_block_r=3)
+    with pytest.raises(ValueError, match="aff_block_r"):
+        MapperConfig(aff_block_r=0)
+    with pytest.raises(ValueError, match="chunk_reads"):
+        MapperConfig(chunk_reads=0)
+
+
+def test_mapper_config_from_index(world):
+    idx, _ = world
+    cfg = MapperConfig.from_index(idx)
+    assert (cfg.read_len, cfg.k, cfg.w, cfg.eth) == \
+        (idx.read_len, idx.k, idx.w, idx.eth)
+    cfg2 = MapperConfig.from_index(idx, wf_backend="pallas", eth=4)
+    assert cfg2.wf_backend == "pallas" and cfg2.eth == 4
+    # works for sharded indexes too (same geometry fields)
+    from repro.core.distributed import shard_index
+    assert MapperConfig.from_index(shard_index(idx, 2)) == cfg
+
+
+# ------------------------------------------------------------ mesh topology
+
+def test_mesh_topology_matches_deprecated_distributed(world, mesh1):
+    from repro.core.distributed import distributed_map_reads
+    idx, reads = world
+    mesh, sidx = mesh1
+    res = Mapper(sidx, topology="mesh", mesh=mesh).map(reads)
+    with pytest.warns(DeprecationWarning, match="mesh"):
+        pos, dist, dropped, st = distributed_map_reads(
+            mesh, sidx, reads, with_stats=True)
+    np.testing.assert_array_equal(res.position, pos)
+    np.testing.assert_array_equal(res.distance, dist)
+    assert res.ops is None and res.linear_dist is None
+    assert isinstance(res.stats, MapperStats)
+    for k in st:
+        assert res.stats[k] == st[k], k
+    assert res.stats.dropped_send == int(np.asarray(dropped).sum())
+
+
+def test_mesh_topology_matches_single_shard(world, mesh1):
+    idx, reads = world
+    mesh, sidx = mesh1
+    single = Mapper(idx).map(reads)
+    meshed = Mapper(idx, topology="mesh", mesh=mesh).map(reads)
+    np.testing.assert_array_equal(meshed.position, single.position)
+    np.testing.assert_array_equal(meshed.distance, single.distance)
+
+
+def test_mesh_pads_to_shard_multiple(world, mesh1):
+    idx, reads = world
+    mesh, sidx = mesh1
+    mapper = Mapper(sidx, topology="mesh", mesh=mesh)
+    plan = mapper.plan(64)
+    assert plan.padded_reads == 64
+    sub = mapper.run(plan, reads[:37])  # short batch through a 64-plan
+    full = mapper.map(reads[:37])
+    assert len(sub.position) == 37
+    np.testing.assert_array_equal(sub.position, full.position)
+
+
+def test_mesh_rejects_mismatched_shards(world, mesh1):
+    from repro.core.distributed import shard_index
+    idx, _ = world
+    mesh, _ = mesh1
+    with pytest.raises(ValueError, match="shards"):
+        Mapper(shard_index(idx, 2), topology="mesh", mesh=mesh)
+
+
+# ------------------------------------------------- service reassembly
+
+def test_service_out_of_order_drains(world):
+    """Interleaved submit/flush cycles: every id resolves exactly once, in
+    the flush that drained it, with results matching a direct map."""
+    idx, reads = world
+    mapper = Mapper(idx)
+    svc = MappingService(mapper,
+                         batcher=BatcherConfig(bucket_min=8, bucket_max=32))
+    r0 = svc.submit(reads[:7])
+    out0 = svc.flush()
+    assert set(out0) == {r0}
+    r1 = svc.submit(reads[7:20])
+    r2 = svc.submit(reads[20:25])
+    out1 = svc.flush()
+    assert set(out1) == {r1, r2}
+    direct = mapper.map(reads[7:20])
+    np.testing.assert_array_equal(out1[r1].position, direct.position)
+    np.testing.assert_array_equal(out1[r1].ops, direct.ops)
+    np.testing.assert_array_equal(out0[r0].position,
+                                  mapper.map(reads[:7]).position)
+    assert svc.flush() == {}
+
+
+def test_service_partial_final_bucket(world):
+    """A drain that only part-fills its last pow-2 bucket still returns
+    exact per-request results (padding trimmed)."""
+    idx, reads = world
+    svc = MappingService(Mapper(idx),
+                         batcher=BatcherConfig(bucket_min=8, bucket_max=32))
+    sizes = [9, 3]  # 12 reads -> one padded 16-bucket
+    rids = [svc.submit(reads[:9]), svc.submit(reads[9:12])]
+    out = svc.flush()
+    assert svc.batcher.stats["padded_reads"] == 4
+    lo = 0
+    for rid, n in zip(rids, sizes):
+        direct = Mapper(idx).map(reads[lo : lo + n])
+        np.testing.assert_array_equal(out[rid].position, direct.position)
+        np.testing.assert_array_equal(out[rid].distance, direct.distance)
+        assert len(out[rid].position) == n
+        lo += n
+
+
+def test_service_request_split_across_buckets(world):
+    """One request larger than bucket_max spans two pow-2 buckets and is
+    reassembled to a single per-request MappingResult."""
+    idx, reads = world
+    svc = MappingService(Mapper(idx),
+                         batcher=BatcherConfig(bucket_min=8, bucket_max=16))
+    rid = svc.submit(reads[:24])  # -> buckets [16, 8]
+    out = svc.flush()
+    assert sorted(svc.batcher.stats["bucket_hist"]) == [8, 16]
+    direct = Mapper(idx).map(reads[:24])
+    _assert_same(out[rid], direct)
+
+
+def test_service_totals_accumulate(world):
+    idx, reads = world
+    svc = MappingService(Mapper(idx),
+                         batcher=BatcherConfig(bucket_min=8, bucket_max=32))
+    svc.submit(reads[:20])
+    svc.flush()
+    assert svc.totals["reads"] == 20
+    assert 0 < svc.totals["survivors"] <= svc.totals["candidates"]
+    svc.submit(reads[20:])
+    svc.flush()
+    assert svc.totals["reads"] == len(reads)
+
+
+def test_service_on_mesh_reassembles_and_caches_plans(world, mesh1):
+    """The ISSUE acceptance path: MappingService routed through
+    Mapper(topology="mesh") — per-request results match the single-shard
+    mapper, and repeated same-size buckets are pure plan-cache hits
+    (zero new executables => zero recompiles after warm-up)."""
+    idx, reads = world
+    mesh, sidx = mesh1
+    mapper = Mapper(sidx, topology="mesh", mesh=mesh)
+    svc = MappingService(mapper,
+                         batcher=BatcherConfig(bucket_min=8, bucket_max=16))
+    single = Mapper(idx)
+
+    def roundtrip():
+        rids = [svc.submit(reads[:24]), svc.submit(reads[24:31])]
+        out = svc.flush()
+        spans = [(0, 24), (24, 31)]
+        for rid, (lo, hi) in zip(rids, spans):
+            ref = single.map(reads[lo:hi])
+            np.testing.assert_array_equal(out[rid].position, ref.position)
+            np.testing.assert_array_equal(out[rid].distance, ref.distance)
+            assert out[rid].ops is None  # mesh path: no traceback
+
+    roundtrip()  # warm-up: compiles one executable per bucket size
+    warm_misses = mapper.plan_cache_misses
+    hits0 = mapper.plan_cache_hits
+    for _ in range(3):
+        roundtrip()
+    assert mapper.plan_cache_misses == warm_misses  # no recompiles
+    assert mapper.plan_cache_hits > hits0
+    assert svc.totals["reads"] == 4 * 31
