@@ -96,7 +96,66 @@ def bench_pipeline(R: int = 4096, genome: int = 30_000,
             st.pop("stream", None)
             entry.update(st)
         out["engines"][name] = entry
+    # the real-data boundary: same mapping work fed through FASTQ/SAM
+    out["fastq_path"] = bench_fastq_path(R=min(R, 2048), genome=genome,
+                                         chunk_reads=chunk_reads,
+                                         world=(ref, idx))
     return out
+
+
+def bench_fastq_path(R: int = 2048, genome: int = 30_000,
+                     chunk_reads: int | None = 1024,
+                     world=None) -> dict:
+    """FASTQ-path reads/s next to the in-memory path: the same dual-strand
+    mapping work, once fed from arrays and once through the full
+    write-FASTQ -> stream-parse -> map -> SAM-emit loop, so
+    BENCH_pipeline.json records the I/O boundary's overhead."""
+    import os
+    import tempfile
+
+    from repro.data.genome import write_fasta, write_fastq
+    from repro.io.fasta import ReferenceMap, load_reference
+    from repro.io.fastq import FastqStream
+    from repro.io.sam import emit_alignments, sam_header, write_sam
+
+    ref, idx = world or _make_world(genome)
+    rs = sample_reads(ref, R, seed=2, both_strands=True)
+    chunk = min(chunk_reads or R, R)
+    cfg = MapperConfig.from_index(idx, wf_backend="jnp", chunk_reads=chunk,
+                                  both_strands=True)
+    mapper = Mapper(idx, cfg)
+    mapper.map(rs.reads)  # compile both strands' chunk shapes
+    t0 = time.perf_counter()
+    res = mapper.map(rs.reads)
+    mem_dt = time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as d:
+        fa, fq = os.path.join(d, "ref.fa"), os.path.join(d, "reads.fq")
+        sam = os.path.join(d, "out.sam")
+        write_fasta(fa, ref)
+        write_fastq(fq, rs)
+        t0 = time.perf_counter()
+        _, contigs = load_reference(fa, spacer=cfg.read_len + 2 * cfg.eth)
+        refmap = ReferenceMap(contigs)
+        stream = FastqStream(fq, chunk_reads=chunk)
+        n = 0
+        with open(sam, "w") as out:
+            write_sam(out, sam_header(contigs), ())
+            for c in stream:
+                r = mapper.map(c.reads)
+                for rec in emit_alignments(r, c.names, c.reads, c.quals,
+                                           refmap, seqs=c.seqs):
+                    out.write(rec + "\n")
+                n += len(c)
+        io_dt = time.perf_counter() - t0
+    return {
+        "R": R, "chunk_reads": chunk,
+        "in_memory_reads_per_s": round(R / mem_dt, 1),
+        "fastq_sam_reads_per_s": round(n / io_dt, 1),
+        "io_overhead_frac": round(max(io_dt - mem_dt, 0.0) / io_dt, 4),
+        "mapped_frac": round(float(res.mapped.mean()), 4),
+        "reverse_best_frac": round(res.stats.reverse_best / R, 4),
+    }
 
 
 def chunk_sweep(R: int = 4096, genome: int = 30_000,

@@ -44,6 +44,12 @@ def emit_pipeline_json(path: str, reads: int, chunk_reads: int | None,
             print(f"{name}: {e['wall_s']:.3f}s "
                   f"{e['per_read_us']:.1f}us/read "
                   f"speedup={e.get('speedup_vs_padded', 1.0)}x{extra}")
+    fp = bench.get("fastq_path")
+    if fp:
+        print(f"fastq_path (dual-strand): "
+              f"{fp['fastq_sam_reads_per_s']:.1f} reads/s through "
+              f"FASTQ->SAM vs {fp['in_memory_reads_per_s']:.1f} in-memory "
+              f"(I/O overhead {fp['io_overhead_frac']:.1%})")
     print(f"wrote {path}")
     return bench
 

@@ -12,28 +12,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core.affine_wf import OP_CHARS
 from repro.core.index import build_index
 from repro.core.mapper import Mapper
 from repro.data.genome import make_reference, sample_reads
-
-
-def cigar(ops, counts):
-    """Compact =/X/I/D run-length string from traceback op codes."""
-    s, prev, run = [], None, 0
-    for o in ops:
-        if o == 4:
-            continue
-        c = OP_CHARS[int(o)]
-        if c == prev:
-            run += 1
-        else:
-            if prev is not None:
-                s.append(f"{run}{prev}")
-            prev, run = c, 1
-    if prev is not None:
-        s.append(f"{run}{prev}")
-    return "".join(s)
+from repro.io.cigar import cigar_from_ops
 
 
 def main():
@@ -70,7 +52,7 @@ def main():
     for i in range(min(5, args.reads)):
         print(f"read {i}: true={rs.true_pos[i]:>6} "
               f"mapped={res.position[i]:>6} dist={res.distance[i]} "
-              f"cigar={cigar(res.ops[i], res.op_count[i])}")
+              f"cigar={cigar_from_ops(res.ops[i], res.op_count[i])}")
 
 
 if __name__ == "__main__":

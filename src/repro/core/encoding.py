@@ -27,9 +27,25 @@ def encode_str(s: str) -> np.ndarray:
     return np.where(out == 255, 0, out).astype(np.uint8)
 
 
+# codes -> text: ACGT for 0..3, N for the sentinel and anything above
+_DECODE_CHARS = np.frombuffer(b"ACGTN", dtype=np.uint8)
+
+
 def decode_to_str(codes) -> str:
+    codes = np.minimum(np.asarray(codes), NUM_BASES).astype(np.uint8)
+    return _DECODE_CHARS[codes].tobytes().decode("ascii")
+
+
+def revcomp(codes: np.ndarray) -> np.ndarray:
+    """Reverse complement along the last axis (A<->T, C<->G).
+
+    Works on single sequences or batches ``(..., L)``.  Sentinel bases
+    (code >= 4, the "N" stand-in) are their own complement so reference
+    windows keep their never-matching property under strand flips.
+    """
     codes = np.asarray(codes)
-    return "".join(BASES[int(c)] for c in codes)
+    comp = np.where(codes < NUM_BASES, (NUM_BASES - 1) - codes, codes)
+    return np.ascontiguousarray(comp[..., ::-1]).astype(codes.dtype)
 
 
 def pack_2bit(codes: np.ndarray) -> np.ndarray:

@@ -33,6 +33,14 @@ mirror that split here:
       arbitrary batch sizes work; stage B never tracebacks, so the
       traceback fields of ``MappingResult`` are ``None`` on this path.
 
+``MapperConfig.both_strands`` makes strand a planning dimension on both
+topologies: plans are sized for the forward + reverse-complement
+encodings of every read (2n), the engine executes them as one stacked
+batch, and the per-read winner — lower affine distance, ties keep
+forward — is reduced host-side into ``MappingResult.strand`` /
+``MapperStats.reverse_best`` (see ``repro.io`` for the FASTQ/SAM
+boundary this feeds).
+
 Every run reports a unified ``MapperStats`` (replacing the old divergent
 ``stats`` dict vs ``with_stats=True`` tuple shapes).  ``MapperStats`` is
 dict-compatible (``stats["survivors"]``) for the legacy per-path keys and
@@ -56,6 +64,7 @@ import numpy as np
 from . import streaming
 from .distributed import (AXIS, ShardedIndex, _cached_mapper, shard_index,
                           stage_b_affine_capacity)
+from .encoding import revcomp
 from .index import GenomeIndex
 from .pipeline import (MapperConfig, MappingResult, _ChunkPipeline,
                        _merge_stats, map_reads_jax)
@@ -88,6 +97,8 @@ class MapperStats:
     padded_affine_instances: int   # what the padded reference would run
     dropped_send: int = 0          # mesh: send-FIFO overflow drops
     dropped_affine: int = 0        # mesh: survivor-capacity overflow drops
+    reverse_best: int = 0          # dual-strand runs: reads whose best
+    #                                alignment used the reverse complement
     plan_cache_hits: int = 0       # session cumulative, sampled at run time
     plan_cache_misses: int = 0
     extra: dict = dataclasses.field(default_factory=dict)
@@ -107,6 +118,18 @@ class MapperStats:
 
     def as_dict(self) -> dict:
         return dict(self.extra)
+
+
+def accumulate_stats(totals: dict, stats, fields=None) -> dict:
+    """Sum ``MapperStats`` fields into a running ``totals`` dict — the
+    one home for the per-batch accumulation loop used by the serving
+    layer and the launchers.  ``fields`` defaults to ``totals``'s own
+    keys; a non-``MapperStats`` stats (padded engine: None) is a no-op.
+    """
+    if isinstance(stats, MapperStats):
+        for k in (fields if fields is not None else tuple(totals)):
+            totals[k] = totals.get(k, 0) + getattr(stats, k)
+    return totals
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +159,9 @@ class MappingPlan:
     send_cap: int = 0
     stage_b_affine_cap: int = 0
     padded_reads: int = 0
+    both_strands: bool = False     # engine executes 2*n_reads encodings
+    #                                (forward + reverse complement); results
+    #                                are strand-reduced back to n_reads
 
     @property
     def n_chunks(self) -> int:
@@ -169,6 +195,36 @@ def _flat_mesh(n_shards: int | None):
     the core->launch dependency)."""
     n = n_shards or len(jax.devices())
     return make_mesh_compat((n,), (AXIS,))
+
+
+def _reduce_strands(res: MappingResult, n: int) -> MappingResult:
+    """Fold a stacked fwd-then-rc result of 2n reads to the per-read best.
+
+    The winner is the strand with the smaller affine-WF distance; ties
+    (including both-unmapped) keep the forward strand, so single-strand
+    workloads are bit-identical with or without ``both_strands``.  Every
+    per-read field (traceback ops included) follows the winner, and the
+    stats are re-expressed over the n real reads.
+    """
+    rev_wins = res.distance[n:] < res.distance[:n]
+
+    def pick(a):
+        if a is None:
+            return None
+        m = rev_wins.reshape((-1,) + (1,) * (a.ndim - 1))
+        return np.where(m, a[n:], a[:n])
+
+    mapped = pick(res.mapped)
+    stats = res.stats
+    if isinstance(stats, MapperStats):
+        stats = dataclasses.replace(
+            stats, reads=n, reverse_best=int(np.sum(rev_wins & mapped)),
+            extra={**stats.extra, "both_strands": True})
+    return MappingResult(
+        position=pick(res.position), distance=pick(res.distance),
+        mapped=mapped, strand=rev_wins.astype(np.int8), ops=pick(res.ops),
+        op_count=pick(res.op_count), linear_dist=pick(res.linear_dist),
+        n_candidates=pick(res.n_candidates), stats=stats)
 
 
 class Mapper:
@@ -247,25 +303,31 @@ class Mapper:
         n = (int(reads_spec) if isinstance(reads_spec, (int, np.integer))
              else len(reads_spec))
         cfg = self.cfg
+        # with both_strands the engine maps forward + reverse-complement
+        # encodings of every read: capacities/chunking are sized for the
+        # effective 2n batch, the strand reduce trims back to n
+        bs = cfg.both_strands
+        eff = 2 * n if bs else n
         if self.topology == "mesh":
             S = self.sharded_index.n_shards
-            padded = max(-(-n // S) * S, S)
+            padded = max(-(-eff // S) * S, S)
             sc = send_cap or self.send_cap or \
                 max(2 * (padded // S) * cfg.max_minis // S, 8)
             return MappingPlan(
                 topology="mesh", engine=cfg.engine, n_reads=n,
-                chunk=padded, chunk_sizes=(n,), n_shards=S, send_cap=sc,
+                chunk=padded, chunk_sizes=(eff,), n_shards=S, send_cap=sc,
                 stage_b_affine_cap=stage_b_affine_capacity(S * sc, cfg),
-                padded_reads=padded)
+                padded_reads=padded, both_strands=bs)
         if cfg.engine == "padded":
             return MappingPlan(topology="single", engine="padded", n_reads=n,
-                               chunk=max(n, 1), chunk_sizes=(n,))
-        c = chunk or cfg.chunk_reads or max(n, 1)
-        sizes = tuple(min(c, n - i) for i in range(0, n, c))
+                               chunk=max(eff, 1), chunk_sizes=(eff,),
+                               both_strands=bs)
+        c = chunk or cfg.chunk_reads or max(eff, 1)
+        sizes = tuple(min(c, eff - i) for i in range(0, eff, c))
         return MappingPlan(topology="single", engine="compacted", n_reads=n,
                            chunk=c, chunk_sizes=sizes,
                            lin_cap_max=c * cfg.max_minis * cfg.max_pls,
-                           aff_cap_max=c * cfg.max_minis)
+                           aff_cap_max=c * cfg.max_minis, both_strands=bs)
 
     def _executable(self, plan: MappingPlan):
         """Plan-cache lookup (counting hits/misses), building on miss.
@@ -335,8 +397,23 @@ class Mapper:
         ``len(reads)`` may be smaller than the plan's batch size (the
         serving path reuses one bucket-sized plan for a shorter residue):
         reads are padded to the plan's static shape and results trimmed.
+
+        On a ``both_strands`` plan the engine executes the forward and
+        reverse-complement encodings of every read (stacked fwd-then-rc,
+        sharing chunks/capacities/plan-cache entries with any other
+        batch) and the per-read winner is reduced host-side — lower
+        distance wins, ties prefer the forward strand.
         """
         reads = np.asarray(reads)
+        if plan.both_strands:
+            n_real = len(reads)
+            reads = np.concatenate([reads, revcomp(reads)])
+            res = self._run_strand(plan, reads)
+            return _reduce_strands(res, n_real)
+        return self._run_strand(plan, reads)
+
+    def _run_strand(self, plan: MappingPlan, reads: np.ndarray,
+                    ) -> MappingResult:
         n = len(reads)
         entry = self._executable(plan)
         if plan.topology == "mesh":

@@ -82,6 +82,9 @@ class MapperConfig:
     lin_block_r: int = 512        # linear kernel lanes; linear bucket align
     aff_block_r: int = 256        # affine kernel lanes; affine bucket align
     chunk_reads: int | None = None  # stream reads in chunks of this size
+    both_strands: bool = False    # map forward + reverse-complement encodings
+    #                               of every read; best (pos, dist, strand)
+    #                               wins (see repro.core.mapper)
     stream: bool = True           # double-buffered chunk overlap (compacted
     #                               engine); False = fully synchronous debug
     #                               path with per-stage wall times in stats
@@ -143,6 +146,8 @@ class MappingResult:
     position: np.ndarray   # (R,) int32 best mapping position (-1 if unmapped)
     distance: np.ndarray   # (R,) int32 affine WF distance
     mapped: np.ndarray     # (R,) bool
+    strand: np.ndarray | None = None  # (R,) int8 0=forward 1=reverse-
+    #                      complement winner; None on single-strand runs
     ops: np.ndarray | None = None   # (R, max_ops) traceback ops (END-aligned)
     op_count: np.ndarray | None = None  # (R,) int32
     linear_dist: np.ndarray | None = None  # (R, M, P) candidate linear dists

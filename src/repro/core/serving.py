@@ -33,7 +33,7 @@ import dataclasses
 import numpy as np
 
 from .compaction import bucket_capacity
-from .mapper import Mapper, MapperStats
+from .mapper import Mapper, MapperStats, accumulate_stats
 from .pipeline import MapperConfig, MappingResult
 
 
@@ -111,11 +111,12 @@ class ReadBatcher:
         return reads, buckets, spans
 
 
-_RESULT_FIELDS = ("position", "distance", "mapped", "ops", "op_count",
-                  "linear_dist", "n_candidates")
+_RESULT_FIELDS = ("position", "distance", "mapped", "strand", "ops",
+                  "op_count", "linear_dist", "n_candidates")
 
 _TOTAL_FIELDS = ("reads", "candidates", "survivors", "affine_instances",
-                 "padded_affine_instances", "dropped_send", "dropped_affine")
+                 "padded_affine_instances", "dropped_send", "dropped_affine",
+                 "reverse_best")
 
 
 class MappingService:
@@ -150,9 +151,7 @@ class MappingService:
 
     def _accumulate(self, parts: list[MappingResult]) -> None:
         for p in parts:
-            if isinstance(p.stats, MapperStats):
-                for k in self.totals:
-                    self.totals[k] += getattr(p.stats, k)
+            accumulate_stats(self.totals, p.stats)
 
     def flush(self) -> dict[int, MappingResult]:
         reads, buckets, spans = self.batcher.drain()

@@ -1,0 +1,28 @@
+"""Genomics I/O boundary: standard formats in, standard formats out.
+
+DART-PIM's headline evaluation is end-to-end on real data (HG38 +
+HiSeq-X reads); the comparability bar for any reproduction is therefore
+the standard-format boundary — FASTA references and FASTQ read sets in,
+SAM alignments out (Alser et al., arXiv:2008.00961; Diab et al.,
+arXiv:2208.01243 treat exactly this as the accelerator-framework
+contract).  This package is that boundary:
+
+  ``fasta``  — streaming multi-record FASTA parsing (N -> sentinel) and
+               the concatenated-reference + contig-table view the index
+               builder consumes.
+  ``fastq``  — streaming FASTQ parsing into fixed-shape, ``chunk_reads``
+               sized batches that feed the async streaming engine
+               without materializing the file.
+  ``cigar``  — END-aligned traceback ops -> CIGAR strings (and back).
+  ``sam``    — spec-valid SAM emission (header, FLAG strand bits, NM
+               tags) plus a dependency-free validator used by tests/CI.
+
+The end-to-end driver is ``repro.launch.map_fastq``.
+"""
+from .cigar import (cigar_from_ops, cigar_query_len, cigar_ref_len,
+                    parse_cigar)  # noqa: F401
+from .fasta import (Contig, ReferenceMap, load_reference,
+                    parse_fasta)  # noqa: F401
+from .fastq import FastqStream, ReadChunk, parse_fastq  # noqa: F401
+from .sam import (FLAG_REVERSE, FLAG_UNMAPPED, emit_alignments, sam_header,
+                  sam_record, validate_sam)  # noqa: F401

@@ -1,0 +1,138 @@
+"""Streaming multi-record FASTA parsing (reference ingestion).
+
+Real references are multi-contig and carry ambiguity codes; the mapping
+core works on one flat ``uint8`` array.  The bridge is deliberate:
+
+* every non-ACGT base (N and the rarer IUPAC codes) maps to the index's
+  ``SENTINEL`` (4), which never equals a read base — a candidate window
+  overlapping an N run pays one edit per N, so mapping *near* ambiguity
+  is allowed and mapping *onto* it is rejected by the linear-WF filter,
+  with no special casing downstream;
+* contigs are concatenated with a run of ``spacer`` sentinel bases
+  between them, so no read can align across a contig boundary (the
+  spacer is sized >= one full alignment window);
+* the ``Contig`` table remembers each contig's name/length/offset, and
+  ``ReferenceMap`` converts the mapper's global positions back to
+  SAM-style (contig, 1-based local) coordinates.
+
+Parsing streams the file line by line (no whole-file string), so a
+reference is held once as codes, never twice as text.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, TextIO
+
+import numpy as np
+
+from ..core.index import SENTINEL
+
+# non-ACGT -> SENTINEL (index.SENTINEL never matches a read base)
+_REF_LUT = np.full(256, SENTINEL, dtype=np.uint8)
+for _i, _c in enumerate("ACGT"):
+    _REF_LUT[ord(_c)] = _i
+    _REF_LUT[ord(_c.lower())] = _i
+
+
+def _open(path_or_handle, mode="r"):
+    if hasattr(path_or_handle, "read") or hasattr(path_or_handle, "write"):
+        return path_or_handle, False
+    return open(path_or_handle, mode), True
+
+
+def encode_ref_line(line: str) -> np.ndarray:
+    """ASCII reference bases -> uint8 codes, non-ACGT -> SENTINEL."""
+    return _REF_LUT[np.frombuffer(line.encode("ascii"), dtype=np.uint8)]
+
+
+@dataclasses.dataclass(frozen=True)
+class Contig:
+    """One reference sequence and where it landed in the flat array."""
+    name: str
+    length: int
+    offset: int       # start in the concatenated reference
+
+
+def parse_fasta(path_or_handle) -> Iterator[tuple[str, np.ndarray]]:
+    """Yield ``(name, codes)`` per record, streaming line by line.
+
+    ``name`` is the first whitespace-delimited token of the header (the
+    SAM ``SN`` convention); ``codes`` is uint8 with non-ACGT -> SENTINEL.
+    """
+    f, owned = _open(path_or_handle)
+    try:
+        name, parts = None, []
+        for raw in f:
+            line = raw.strip()
+            if not line:
+                continue
+            if line.startswith(">"):
+                if name is not None:
+                    yield name, (np.concatenate(parts) if parts else
+                                 np.zeros(0, np.uint8))
+                name, parts = line[1:].split()[0] if len(line) > 1 else "", []
+                if not name:
+                    raise ValueError("FASTA record with empty header name")
+            else:
+                if name is None:
+                    raise ValueError("FASTA sequence data before any "
+                                     "'>' header line")
+                parts.append(encode_ref_line(line))
+        if name is not None:
+            yield name, (np.concatenate(parts) if parts else
+                         np.zeros(0, np.uint8))
+    finally:
+        if owned:
+            f.close()
+
+
+class ReferenceMap:
+    """Global (concatenated) position <-> per-contig coordinates."""
+
+    def __init__(self, contigs: list[Contig]):
+        if not contigs:
+            raise ValueError("empty reference: no contigs")
+        self.contigs = contigs
+        self._starts = np.array([c.offset for c in contigs], dtype=np.int64)
+
+    def locate(self, pos: int) -> tuple[Contig, int]:
+        """Global position -> ``(contig, 0-based local position)``.
+
+        The mapper's band allows an alignment start a few bases off the
+        seeded position, so a global position inside a spacer is
+        attributed to the *nearest* contig edge — a start just before
+        contig ``i+1`` belongs to ``i+1``'s first base, not ``i``'s last
+        — and clamped into it.
+        """
+        i = int(np.searchsorted(self._starts, pos, side="right")) - 1
+        i = max(i, 0)
+        c = self.contigs[i]
+        if pos >= c.offset + c.length and i + 1 < len(self.contigs):
+            nxt = self.contigs[i + 1]
+            if nxt.offset - pos <= pos - (c.offset + c.length - 1):
+                c = nxt
+        return c, int(np.clip(pos - c.offset, 0, max(c.length - 1, 0)))
+
+
+def load_reference(path_or_handle, *, spacer: int,
+                   ) -> tuple[np.ndarray, list[Contig]]:
+    """Multi-record FASTA -> (flat uint8 reference, contig table).
+
+    Contigs are joined by ``spacer`` SENTINEL bases (size it >= one
+    alignment window, ``read_len + 2*eth``, so no read maps across a
+    boundary).  Empty records are rejected — an empty contig would be
+    indistinguishable from its spacer.
+    """
+    parts, contigs, off = [], [], 0
+    for name, codes in parse_fasta(path_or_handle):
+        if len(codes) == 0:
+            raise ValueError(f"FASTA contig {name!r} has no sequence")
+        if contigs:
+            parts.append(np.full(spacer, SENTINEL, dtype=np.uint8))
+            off += spacer
+        contigs.append(Contig(name=name, length=len(codes), offset=off))
+        parts.append(codes)
+        off += len(codes)
+    if not contigs:
+        raise ValueError("empty FASTA: no records")
+    return np.concatenate(parts), contigs

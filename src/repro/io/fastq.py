@@ -1,0 +1,157 @@
+"""Streaming FASTQ ingestion in engine-shaped batches.
+
+The mapping engine wants fixed ``(chunk, read_len)`` uint8 blocks (the
+static jit shapes of ``repro.core.pipeline``); a FASTQ file is a
+variable-length record stream.  ``FastqStream`` bridges them without
+ever materializing the file: records are parsed 4 lines at a time and
+accumulated into ``chunk_reads``-sized ``ReadChunk`` batches, so a
+389M-read HiSeq run and a 32-read smoke test walk the same code path.
+
+Length policy (the pipeline is fixed-``read_len``, like DART-PIM's
+crossbar rows): the first record sets ``read_len`` unless the caller
+pins it; longer reads are truncated to it, shorter reads are skipped.
+Both are counted (``n_truncated`` / ``n_skipped``) so silent data loss
+is impossible.  Read bases outside ACGT encode to A (the 2-bit k-mer
+alphabet has no N slot — same policy as ``core.encoding.encode_str``);
+qualities ride along as raw phred+33 bytes for SAM emission.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from ..core.encoding import encode_str
+
+DEFAULT_CHUNK_READS = 1024
+
+
+@dataclasses.dataclass
+class ReadChunk:
+    """One engine-shaped batch of FASTQ records."""
+    names: list[str]         # per-read QNAMEs (header token before space)
+    reads: np.ndarray        # (n, read_len) uint8 base codes
+    quals: np.ndarray        # (n, read_len) uint8 phred+33 ASCII
+    seqs: list[str] | None = None  # raw sequence text (read_len chars):
+    #                        codes rewrite N->A for seeding, SAM SEQ must
+    #                        not — pass this to sam.emit_alignments
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+
+def _encode_read(seq: str, read_len: int) -> np.ndarray:
+    # one home for the base-encoding policy (unknown -> A): core.encoding
+    return encode_str(seq)[:read_len]
+
+
+class FastqStream:
+    """Iterate a FASTQ file as ``ReadChunk`` batches.
+
+    Parameters
+    ----------
+    path : str | file-like
+        FASTQ source (4-line records).
+    read_len : int, optional
+        Fixed read length; inferred from the first record when None
+        (the first record is read eagerly at construction so callers can
+        size the index before iterating).
+    chunk_reads : int
+        Batch size; the last chunk may be shorter.  Match this to
+        ``MapperConfig.chunk_reads`` so each chunk feeds the streaming
+        engine as one unit.
+    """
+
+    def __init__(self, path_or_handle, read_len: int | None = None,
+                 chunk_reads: int = DEFAULT_CHUNK_READS):
+        if chunk_reads < 1:
+            raise ValueError(f"chunk_reads={chunk_reads!r} must be >= 1")
+        from .fasta import _open
+        self._f, self._owned = _open(path_or_handle)
+        self.chunk_reads = chunk_reads
+        self.n_reads = 0       # records emitted (post length policy)
+        self.n_skipped = 0     # records shorter than read_len
+        self.n_truncated = 0   # records longer than read_len
+        self._peeked = None
+        try:
+            first = self._next_record()
+            if first is None:
+                raise ValueError("empty FASTQ: no records")
+            self.read_len = (read_len if read_len is not None
+                             else len(first[1]))
+            if self.read_len < 1:
+                raise ValueError(f"read_len={self.read_len!r} must be >= 1")
+        except Exception:
+            if self._owned:  # don't leak the fd when the peek fails
+                self._f.close()
+            raise
+        self._peeked = first
+
+    def _next_record(self):
+        """Next raw ``(name, seq, qual)`` or None at EOF."""
+        if self._peeked is not None:
+            rec, self._peeked = self._peeked, None
+            return rec
+        head = self._f.readline()
+        while head is not None and head.strip() == "" and head != "":
+            head = self._f.readline()
+        if not head:
+            return None
+        head = head.strip()
+        if not head.startswith("@"):
+            raise ValueError(f"malformed FASTQ: expected '@' header, "
+                             f"got {head[:40]!r}")
+        seq = self._f.readline().strip()
+        plus = self._f.readline().strip()
+        qual = self._f.readline().strip()
+        if not plus.startswith("+"):
+            raise ValueError(f"malformed FASTQ record {head[:40]!r}: "
+                             f"missing '+' separator line")
+        if len(qual) != len(seq):
+            raise ValueError(f"malformed FASTQ record {head[:40]!r}: "
+                             f"{len(seq)} bases but {len(qual)} qualities")
+        return head[1:].split()[0] if len(head) > 1 else "*", seq, qual
+
+    def __iter__(self) -> Iterator[ReadChunk]:
+        rl = self.read_len
+        names, reads, quals, seqs = [], [], [], []
+        try:
+            while True:
+                rec = self._next_record()
+                if rec is None:
+                    break
+                name, seq, qual = rec
+                if len(seq) < rl:
+                    self.n_skipped += 1
+                    continue
+                if len(seq) > rl:
+                    self.n_truncated += 1
+                names.append(name)
+                reads.append(_encode_read(seq, rl))
+                quals.append(np.frombuffer(qual[:rl].encode("ascii"),
+                                           dtype=np.uint8))
+                seqs.append(seq[:rl])
+                if len(names) == self.chunk_reads:
+                    self.n_reads += len(names)
+                    yield ReadChunk(names, np.stack(reads),
+                                    np.stack(quals), seqs)
+                    names, reads, quals, seqs = [], [], [], []
+            if names:
+                self.n_reads += len(names)
+                yield ReadChunk(names, np.stack(reads), np.stack(quals),
+                                seqs)
+        finally:
+            # close the owned handle even on early break / parse error
+            # (generator finalization triggers this via GeneratorExit)
+            if self._owned:
+                self._f.close()
+
+
+def parse_fastq(path_or_handle, read_len: int | None = None,
+                chunk_reads: int = DEFAULT_CHUNK_READS,
+                ) -> Iterator[ReadChunk]:
+    """Functional spelling of ``FastqStream`` (counts live on the
+    stream object; use the class when you need them)."""
+    return iter(FastqStream(path_or_handle, read_len=read_len,
+                            chunk_reads=chunk_reads))

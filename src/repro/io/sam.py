@@ -1,0 +1,197 @@
+"""Spec-valid SAM emission + a dependency-free validator.
+
+Only what the mapper actually produces is emitted, precisely:
+
+* FLAG uses 0x4 (unmapped) and 0x10 (reverse strand) — single-end, so
+  no pairing bits;
+* POS is the 1-based, contig-local leftmost position (the mapper's
+  global concatenated position goes through ``fasta.ReferenceMap``);
+* CIGAR comes from the affine-WF traceback via ``cigar.cigar_from_ops``
+  (``"*"`` on the mesh topology, whose stage B never tracebacks, and on
+  the ``max_ops`` truncation path);
+* SEQ/QUAL are stored in *alignment* orientation per the SAM spec:
+  reverse-strand hits store the reverse-complemented read and reversed
+  qualities (exactly the orientation the engine aligned);
+* NM:i carries the affine-WF distance — the paper's alignment cost
+  (gap-open + gap-extend weighted), deliberately *not* the SAM spec's
+  literal mismatch+gap-base count, and computed over the full traceback
+  (including any edge deletions the CIGAR normalization trims).
+
+``validate_sam`` is the boundary's test oracle: a small, dependency-free
+checker (header shape, mandatory columns, FLAG/CIGAR/SEQ consistency)
+that CI runs against the ``map_fastq`` output of both topologies.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Iterator
+
+import numpy as np
+
+from ..core.encoding import decode_to_str, revcomp
+from .cigar import (cigar_from_ops, cigar_query_len, cigar_ref_len,
+                    parse_cigar, trim_edge_deletions, unparse_cigar)
+from .fasta import Contig, ReferenceMap
+
+FLAG_UNMAPPED = 0x4
+FLAG_REVERSE = 0x10
+MAPQ_UNAVAILABLE = 255   # the mapper computes no mapping-quality model
+
+
+def sam_header(contigs: list[Contig], *, program_id: str = "repro",
+               program_name: str = "repro.launch.map_fastq",
+               command_line: str | None = None) -> list[str]:
+    """@HD/@SQ/@PG header lines (unsorted single-end output)."""
+    lines = ["@HD\tVN:1.6\tSO:unsorted"]
+    lines += [f"@SQ\tSN:{c.name}\tLN:{c.length}" for c in contigs]
+    pg = f"@PG\tID:{program_id}\tPN:{program_name}"
+    if command_line:
+        pg += f"\tCL:{command_line}"
+    return lines + [pg]
+
+
+def sam_record(qname: str, flag: int, rname: str, pos: int, mapq: int,
+               cigar: str, seq: str, qual: str, *,
+               nm: int | None = None) -> str:
+    """One alignment line (RNEXT/PNEXT/TLEN are */0/0: single-end)."""
+    fields = [qname, str(flag), rname, str(pos), str(mapq), cigar,
+              "*", "0", "0", seq, qual]
+    if nm is not None:
+        fields.append(f"NM:i:{nm}")
+    return "\t".join(fields)
+
+
+def _qual_str(q: np.ndarray) -> str:
+    return q.tobytes().decode("ascii")
+
+
+# complement for raw sequence text; non-ACGT (N, IUPAC codes) self-map so
+# the emitted SEQ never invents bases the input didn't have
+_COMP_TABLE = str.maketrans("ACGTacgt", "TGCAtgca")
+
+
+def _revcomp_str(seq: str) -> str:
+    return seq.translate(_COMP_TABLE)[::-1]
+
+
+def emit_alignments(result, names: list[str], reads: np.ndarray,
+                    quals: np.ndarray, refmap: ReferenceMap, *,
+                    seqs: list[str] | None = None) -> Iterator[str]:
+    """MappingResult batch -> SAM record lines.
+
+    ``reads``/``quals`` are in *as-sequenced* orientation; reverse-strand
+    hits (``result.strand == 1``) are flipped here.  ``result.ops`` may
+    be None (mesh topology) — those records carry CIGAR ``"*"``.
+
+    Pass ``seqs`` (the raw FASTQ sequence text, e.g. ``ReadChunk.seqs``)
+    to emit SEQ verbatim — the engine's codes rewrite N to A for k-mer
+    seeding, and SAM output must not present those as real A bases.
+    """
+    strand = result.strand
+    for i, name in enumerate(names):
+        if not result.mapped[i]:
+            seq = seqs[i] if seqs is not None else decode_to_str(reads[i])
+            yield sam_record(name, FLAG_UNMAPPED, "*", 0, 0, "*",
+                             seq, _qual_str(quals[i]))
+            continue
+        rev = bool(strand[i]) if strand is not None else False
+        cig, shift = "*", 0
+        if result.ops is not None:
+            cig = cigar_from_ops(result.ops[i], int(result.op_count[i]))
+            if cig != "*":
+                trimmed, shift = trim_edge_deletions(parse_cigar(cig))
+                cig = unparse_cigar(trimmed)
+        # locate AFTER the edge-deletion shift: a leading-deletion
+        # alignment seeded just inside the inter-contig spacer belongs to
+        # the contig its first aligned base lands in, not its neighbour
+        contig, local = refmap.locate(int(result.position[i]) + shift)
+        if seqs is not None:
+            seq = _revcomp_str(seqs[i]) if rev else seqs[i]
+        else:
+            seq = decode_to_str(revcomp(reads[i]) if rev else reads[i])
+        qual = quals[i][::-1] if rev else quals[i]
+        yield sam_record(name, FLAG_REVERSE if rev else 0, contig.name,
+                         local + 1, MAPQ_UNAVAILABLE, cig, seq,
+                         _qual_str(qual), nm=int(result.distance[i]))
+
+
+def write_sam(handle, header_lines: Iterable[str],
+              records: Iterable[str]) -> int:
+    """Write header + records; returns the record count."""
+    for line in header_lines:
+        handle.write(line + "\n")
+    n = 0
+    for rec in records:
+        handle.write(rec + "\n")
+        n += 1
+    return n
+
+
+# --------------------------------------------------------------------------
+# Dependency-free validator (the tests/CI oracle for this boundary)
+# --------------------------------------------------------------------------
+
+def _check(cond: bool, msg: str) -> None:
+    """Explicit raise instead of ``assert``: the validator must keep
+    validating under ``python -O`` (asserts are stripped there)."""
+    if not cond:
+        raise AssertionError(msg)
+
+
+def validate_sam(text: str, *, expect_reads: int | None = None) -> dict:
+    """Check a SAM document's structural invariants; raise on violation.
+
+    Checks: @HD first with a VN; at least one @SQ with SN/LN; every
+    record has >= 11 tab-separated mandatory columns with well-typed
+    FLAG/POS/MAPQ; unmapped records (FLAG 0x4) carry */0/*; mapped
+    records name a known @SQ contig, sit inside [1, LN], and any
+    non-``*`` CIGAR consumes exactly ``len(SEQ)`` query bases; QUAL
+    length matches SEQ.  Returns summary counts.
+    """
+    lines = [ln for ln in text.split("\n") if ln != ""]
+    _check(bool(lines) and lines[0].startswith("@HD\t"),
+           "missing @HD header")
+    _check("VN:" in lines[0], "@HD lacks VN")
+    sq = {}
+    n_header = 0
+    for ln in lines:
+        if not ln.startswith("@"):
+            break
+        n_header += 1
+        if ln.startswith("@SQ"):
+            tags = dict(t.split(":", 1) for t in ln.split("\t")[1:])
+            _check("SN" in tags and "LN" in tags, f"bad @SQ line: {ln!r}")
+            sq[tags["SN"]] = int(tags["LN"])
+    _check(bool(sq), "no @SQ lines")
+    n = n_mapped = n_reverse = 0
+    for ln in lines[n_header:]:
+        _check(not ln.startswith("@"), "header line after records")
+        f = ln.split("\t")
+        _check(len(f) >= 11, f"record has {len(f)} < 11 columns: {ln!r}")
+        qname, flag, rname, pos, mapq, cig, _, _, _, seq, qual = f[:11]
+        flag, pos, mapq = int(flag), int(pos), int(mapq)
+        _check(bool(qname) and 0 <= mapq <= 255, f"bad QNAME/MAPQ: {ln!r}")
+        _check(len(qual) == len(seq), f"QUAL/SEQ length mismatch: {ln!r}")
+        n += 1
+        if flag & FLAG_UNMAPPED:
+            _check(rname == "*" and pos == 0 and cig == "*",
+                   f"unmapped record with placement fields: {ln!r}")
+            continue
+        n_mapped += 1
+        n_reverse += bool(flag & FLAG_REVERSE)
+        _check(rname in sq, f"RNAME {rname!r} not in @SQ")
+        _check(1 <= pos <= sq[rname], f"POS {pos} outside [1, {sq[rname]}]")
+        if cig != "*":
+            _check(cigar_query_len(cig) == len(seq),
+                   f"CIGAR consumes {cigar_query_len(cig)} query bases "
+                   f"but SEQ has {len(seq)}: {ln!r}")
+            parsed = parse_cigar(cig)
+            _check(parsed[0][1] != "D" and parsed[-1][1] != "D",
+                   f"CIGAR begins/ends with a deletion: {ln!r}")
+            end = pos + cigar_ref_len(cig) - 1
+            _check(end <= sq[rname],
+                   f"alignment footprint [{pos}, {end}] extends past "
+                   f"{rname}'s LN {sq[rname]}: {ln!r}")
+    if expect_reads is not None:
+        _check(n == expect_reads, f"{n} records != {expect_reads} reads")
+    return dict(n_records=n, n_mapped=n_mapped, n_reverse=n_reverse,
+                contigs=sq)

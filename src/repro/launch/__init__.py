@@ -1,1 +1,2 @@
-# Launchers: mesh construction, multi-pod dry-run, train/serve drivers.
+# Launchers: mesh construction, multi-pod dry-run, train/serve drivers,
+# and the FASTA+FASTQ -> SAM end-to-end mapper (map_fastq).

@@ -1,0 +1,156 @@
+"""FASTA + FASTQ -> SAM, end-to-end over the ``Mapper`` session.
+
+    PYTHONPATH=src python -m repro.launch.map_fastq ref.fa reads.fq \
+        -o out.sam
+    PYTHONPATH=src python -m repro.launch.map_fastq ref.fa reads.fq \
+        -o out.sam --topology mesh --shards 4
+
+The real-data boundary of the reproduction: a (multi-contig) FASTA
+reference is indexed, FASTQ reads stream through the session in
+``--chunk-reads`` batches — each chunk mapped on **both strands**
+(forward + reverse complement; ``--single-strand`` disables) — and
+spec-valid SAM comes out (@SQ per contig, FLAG 0x4/0x10, 1-based POS,
+``=``/``X``/``I``/``D`` CIGARs from the affine-WF traceback, NM from the
+WF distance).  ``--topology mesh`` routes chunks onto the distributed
+all_to_all mapper; its stage B computes distances/positions only, so
+mesh records carry CIGAR ``*`` (strand/POS/NM still present).
+
+Progress and the closing unified-stats lines go to stderr, so ``-o -``
+pipes clean SAM to stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def run(args) -> int:
+    from repro.core.index import build_index
+    from repro.core.mapper import Mapper, accumulate_stats
+    from repro.core.pipeline import MapperConfig
+    from repro.io.fasta import ReferenceMap, load_reference
+    from repro.io.fastq import FastqStream
+    from repro.io.sam import emit_alignments, sam_header
+
+    t0 = time.perf_counter()
+    stream = FastqStream(args.reads, read_len=args.read_len,
+                         chunk_reads=args.chunk_reads)
+    rl = stream.read_len
+    # spacer >= one alignment window: no read can map across a boundary
+    ref, contigs = load_reference(args.reference, spacer=rl + 2 * args.eth)
+    refmap = ReferenceMap(contigs)
+    idx = build_index(ref, read_len=rl, k=args.k, w=args.w, eth=args.eth)
+    cfg = MapperConfig.from_index(
+        idx, engine=args.engine, wf_backend=args.wf_backend,
+        chunk_reads=args.chunk_reads, stream=not args.no_stream,
+        both_strands=not args.single_strand)
+    mapper = Mapper(idx, cfg, topology=args.topology, n_shards=args.shards)
+    print(f"map_fastq: {len(contigs)} contig(s), {len(ref)} indexed bases, "
+          f"read_len={rl}, topology={mapper.topology}, "
+          f"both_strands={cfg.both_strands}, engine={cfg.engine}, "
+          f"wf_backend={cfg.wf_backend}", file=sys.stderr)
+
+    out = sys.stdout if args.output == "-" else open(args.output, "w")
+    totals = dict(reads=0, mapped=0, reverse_best=0, survivors=0,
+                  affine_instances=0, padded_affine_instances=0,
+                  dropped_send=0, dropped_affine=0)
+    saw_stats = False
+    try:
+        for line in sam_header(contigs,
+                               command_line=" ".join(sys.argv)):
+            out.write(line + "\n")
+        t_map = time.perf_counter()
+        for i, chunk in enumerate(stream):
+            res = mapper.map(chunk.reads)
+            for rec in emit_alignments(res, chunk.names, chunk.reads,
+                                       chunk.quals, refmap,
+                                       seqs=chunk.seqs):
+                out.write(rec + "\n")
+            totals["reads"] += len(chunk)
+            totals["mapped"] += int(res.mapped.sum())
+            if res.strand is not None:  # from the result, not the stats:
+                #                         the padded engine has stats=None
+                totals["reverse_best"] += int((res.strand
+                                               & res.mapped).sum())
+            if res.stats is not None:
+                saw_stats = True
+                accumulate_stats(totals, res.stats, fields=(
+                    "survivors", "affine_instances",
+                    "padded_affine_instances", "dropped_send",
+                    "dropped_affine"))
+            rate = totals["reads"] / max(time.perf_counter() - t_map, 1e-9)
+            print(f"chunk {i}: {len(chunk)} reads, "
+                  f"mapped {res.mapped.mean():.3f} "
+                  f"(cumulative {totals['reads']} reads, {rate:.0f} reads/s)",
+                  file=sys.stderr)
+    finally:
+        if out is not sys.stdout:
+            out.close()
+
+    dt = time.perf_counter() - t0
+    skipped = (f", skipped {stream.n_skipped} short" if stream.n_skipped
+               else "") + (f", truncated {stream.n_truncated} long"
+                           if stream.n_truncated else "")
+    print(f"done: {totals['reads']} reads in {dt:.1f}s "
+          f"({totals['reads']/max(dt, 1e-9):.0f} reads/s incl. index build), "
+          f"mapped {totals['mapped']} "
+          f"({totals['reverse_best']} reverse-strand){skipped}",
+          file=sys.stderr)
+    if saw_stats:
+        from repro.launch.serve import _print_mapper_stats
+        _print_mapper_stats(mapper, totals, file=sys.stderr)
+    else:  # padded reference engine: no instance accounting to report
+        print(f"plan cache: {mapper.plan_cache_hits} hits / "
+              f"{mapper.plan_cache_misses} misses", file=sys.stderr)
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.map_fastq",
+        description="Map a FASTQ read set against a FASTA reference; "
+                    "emit SAM.")
+    ap.add_argument("reference", help="FASTA reference (multi-contig ok; "
+                                      "N -> never-matching sentinel)")
+    ap.add_argument("reads", help="FASTQ reads (4-line records)")
+    ap.add_argument("-o", "--output", default="-",
+                    help="output SAM path ('-' = stdout; progress goes to "
+                         "stderr either way)")
+    ap.add_argument("--topology", default="single",
+                    choices=("single", "mesh"))
+    ap.add_argument("--shards", type=int, default=None,
+                    help="mesh topology: shard count (default: all devices)")
+    ap.add_argument("--chunk-reads", type=int, default=1024,
+                    help="FASTQ batch size == engine streaming chunk")
+    ap.add_argument("--read-len", type=int, default=None,
+                    help="fixed read length (default: first FASTQ record)")
+    ap.add_argument("--single-strand", action="store_true",
+                    help="forward strand only (reverse-strand reads will "
+                         "not map)")
+    ap.add_argument("--engine", default="compacted",
+                    choices=("compacted", "padded"))
+    ap.add_argument("--wf-backend", default="jnp", choices=("jnp", "pallas"))
+    ap.add_argument("--no-stream", action="store_true",
+                    help="synchronous debug path (per-stage timings)")
+    ap.add_argument("--k", type=int, default=12)
+    ap.add_argument("--w", type=int, default=30)
+    ap.add_argument("--eth", type=int, default=6)
+    args = ap.parse_args()
+    if args.topology == "mesh" and args.shards and \
+            "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.shards}")
+    try:
+        return run(args)
+    except BrokenPipeError:
+        # `map_fastq ... -o - | head` closing the pipe is not an error;
+        # detach stdout so interpreter shutdown doesn't re-raise
+        devnull = os.open(os.devnull, os.O_WRONLY)
+        os.dup2(devnull, sys.stdout.fileno())
+        return 141  # 128 + SIGPIPE, the conventional exit status
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -29,16 +29,25 @@ import sys
 import time
 
 
-def _print_mapper_stats(mapper, totals: dict) -> None:
-    """Closing stats lines shared by both modes: the unified MapperStats
-    stage-B/filter accounting and the session plan-cache counters."""
-    print(f"stage B/filter (unified MapperStats): {totals['survivors']} "
+def _print_mapper_stats(mapper, totals: dict, file=None) -> None:
+    """Closing stats lines shared by every launcher (``map_fastq`` uses
+    it too, with ``file=sys.stderr``): the unified MapperStats accounting
+    and the session plan-cache counters.  The counter label names the
+    stage that actually ran them: the mesh topology's stage B (filter +
+    compacted affine on the index-owner shards) vs the single topology's
+    filter/affine stages — so `--topology mesh` output is comparable
+    across modes without guessing which path produced it."""
+    label = ("stage B [mesh]" if mapper.topology == "mesh"
+             else "filter/affine [single]")
+    print(f"{label}: {totals['survivors']} "
           f"survivors -> {totals['affine_instances']} affine instances "
           f"(of {totals['padded_affine_instances']} padded), dropped "
-          f"send={totals['dropped_send']} affine={totals['dropped_affine']}")
+          f"send={totals['dropped_send']} affine={totals['dropped_affine']}",
+          file=file)
     print(f"plan cache: {mapper.plan_cache_hits} hits / "
           f"{mapper.plan_cache_misses} misses "
-          f"(same-size batches reuse compiled executables after warm-up)")
+          f"(same-size batches reuse compiled executables after warm-up)",
+          file=file)
 
 
 def run_service(args) -> int:
@@ -88,7 +97,7 @@ def run_distributed(args) -> int:
     import numpy as np
 
     from repro.core.index import build_index
-    from repro.core.mapper import Mapper
+    from repro.core.mapper import Mapper, accumulate_stats
     from repro.core.pipeline import MapperConfig
     from repro.data.genome import make_reference, sample_reads
     from repro.launch.mesh import make_genomics_mesh
@@ -104,7 +113,7 @@ def run_distributed(args) -> int:
           f"{len(ref)} bases")
     totals = dict(survivors=0, affine_instances=0,
                   padded_affine_instances=0, dropped_send=0,
-                  dropped_affine=0)
+                  dropped_affine=0, reverse_best=0)
     total = correct = 0
     t0 = time.perf_counter()
     for b in range(args.batches):
@@ -112,8 +121,7 @@ def run_distributed(args) -> int:
         res = mapper.map(rs.reads)
         total += len(res.position)
         correct += int((np.abs(res.position - rs.true_pos) <= 6).sum())
-        for k in totals:
-            totals[k] += getattr(res.stats, k)
+        accumulate_stats(totals, res.stats)
     dt = time.perf_counter() - t0
     print(f"{total} reads in {dt:.1f}s ({total/dt:.0f} reads/s), "
           f"accuracy {correct/total:.4f}, dropped {totals['dropped_send']}")

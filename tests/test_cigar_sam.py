@@ -1,0 +1,175 @@
+"""CIGAR rendering of END-aligned traceback ops and SAM structural
+validity: hand-crafted edge alignments (leading/trailing indels,
+adjacent I/D runs, all-match, the max_ops truncation path), a property
+test that CIGAR lengths re-sum to the read length, and the
+dependency-free SAM checker's own failure modes."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.affine_wf import OP_DEL, OP_INS, OP_MATCH, OP_NONE, OP_SUB
+from repro.io.cigar import (cigar_from_ops, cigar_query_len, cigar_ref_len,
+                            parse_cigar, trim_edge_deletions, unparse_cigar)
+from repro.io.sam import sam_header, sam_record, validate_sam
+from repro.io.fasta import Contig
+
+
+def end_aligned(ops_list, max_ops):
+    """Pack an op list the way affine_wf.traceback stores it: right-
+    aligned in a fixed buffer, left-padded with OP_NONE."""
+    arr = np.full(max_ops, OP_NONE, dtype=np.int32)
+    if ops_list:
+        arr[max_ops - len(ops_list):] = ops_list
+    return arr, len(ops_list)
+
+
+# ----------------------------------------------------------------- CIGAR
+
+@pytest.mark.parametrize("ops,expect", [
+    ([OP_MATCH] * 7, "7="),
+    ([OP_INS, OP_INS] + [OP_MATCH] * 5, "2I5="),               # leading ins
+    ([OP_DEL] + [OP_MATCH] * 4, "1D4="),                       # leading del
+    ([OP_MATCH] * 4 + [OP_DEL, OP_DEL], "4=2D"),               # trailing del
+    ([OP_MATCH, OP_INS, OP_INS, OP_DEL, OP_DEL, OP_DEL, OP_MATCH],
+     "1=2I3D1="),                                              # adjacent I/D
+    ([OP_SUB, OP_MATCH, OP_SUB], "1X1=1X"),
+])
+def test_cigar_hand_crafted(ops, expect):
+    arr, k = end_aligned(ops, 32)
+    assert cigar_from_ops(arr, k) == expect
+
+
+def test_cigar_unmapped_and_truncation():
+    arr, _ = end_aligned([OP_MATCH] * 4, 16)
+    assert cigar_from_ops(arr, 0) == "*"          # unmapped
+    # max_ops truncation: the walk was longer than the buffer, so the
+    # stored ops are incomplete -> CIGAR unavailable, never a lying string
+    assert cigar_from_ops(arr, 17) == "*"
+    assert cigar_from_ops(arr, 16) == "*"         # padding inside the walk
+
+
+def test_traceback_truncation_path_end_to_end():
+    """A real traceback with max_ops smaller than the walk produces
+    op_count > max_ops, which must render as '*'."""
+    import jax.numpy as jnp
+    from repro.core.affine_wf import banded_affine, traceback
+    rng = np.random.default_rng(0)
+    s1 = rng.integers(0, 4, 40).astype(np.uint8)
+    win = np.full(40 + 12, 4, dtype=np.uint8)
+    win[6 : 6 + 40] = s1
+    _, _, dirs = banded_affine(jnp.asarray(s1), jnp.asarray(win), eth=6)
+    ops, count = traceback(dirs[None], eth=6, max_ops=8)
+    assert int(count[0]) == 40 > 8
+    assert cigar_from_ops(np.asarray(ops[0]), int(count[0])) == "*"
+    # and with a big enough buffer the same dirs give the full alignment
+    ops2, count2 = traceback(dirs[None], eth=6, max_ops=82)
+    assert cigar_from_ops(np.asarray(ops2[0]), int(count2[0])) == "40="
+
+
+def test_trim_edge_deletions():
+    parsed, shift = trim_edge_deletions(parse_cigar("2D3=1I2D"))
+    assert unparse_cigar(parsed) == "3=1I" and shift == 2
+    parsed, shift = trim_edge_deletions(parse_cigar("5="))
+    assert unparse_cigar(parsed) == "5=" and shift == 0
+
+
+def test_parse_cigar_rejects_garbage():
+    for bad in ("abc", "3", "=3", "0M", "3=x"):
+        with pytest.raises(ValueError):
+            parse_cigar(bad)
+    assert parse_cigar("*") == []
+
+
+@settings(max_examples=60)
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=48))
+def test_cigar_lengths_resum_to_read_length(ops):
+    """Property: for any op walk, the CIGAR's query length equals the
+    number of read-consuming ops (= the read length the traceback walked)
+    and the ref length equals the reference-consuming ops; round-trips
+    through parse/unparse."""
+    arr, k = end_aligned(ops, 64)
+    cig = cigar_from_ops(arr, k)
+    assert cigar_query_len(cig) == sum(
+        1 for o in ops if o in (OP_MATCH, OP_SUB, OP_INS))
+    assert cigar_ref_len(cig) == sum(
+        1 for o in ops if o in (OP_MATCH, OP_SUB, OP_DEL))
+    assert unparse_cigar(parse_cigar(cig)) == cig
+
+
+# ------------------------------------------------------------------- SAM
+
+def _doc(records):
+    header = sam_header([Contig("chr1", 1000, 0)])
+    return "\n".join(header + records) + "\n"
+
+
+def test_validate_sam_accepts_wellformed():
+    recs = [
+        sam_record("r0", 0, "chr1", 5, 255, "4=", "ACGT", "IIII", nm=0),
+        sam_record("r1", 16, "chr1", 9, 255, "2=1X1=", "ACGT", "IIII", nm=1),
+        sam_record("r2", 4, "*", 0, 0, "*", "ACGT", "IIII"),
+    ]
+    st_ = validate_sam(_doc(recs), expect_reads=3)
+    assert st_["n_mapped"] == 2 and st_["n_reverse"] == 1
+    assert st_["contigs"] == {"chr1": 1000}
+
+
+@pytest.mark.parametrize("rec,msg", [
+    (["r", "0", "chr2", "5", "255", "4=", "*", "0", "0", "ACGT", "IIII"],
+     "not in @SQ"),
+    (["r", "0", "chr1", "0", "255", "4=", "*", "0", "0", "ACGT", "IIII"],
+     "outside"),
+    (["r", "4", "chr1", "5", "0", "*", "*", "0", "0", "ACGT", "IIII"],
+     "unmapped record"),
+    (["r", "0", "chr1", "5", "255", "3=", "*", "0", "0", "ACGT", "IIII"],
+     "CIGAR consumes"),
+    (["r", "0", "chr1", "5", "255", "1D4=", "*", "0", "0", "ACGT", "IIII"],
+     "deletion"),
+    (["r", "0", "chr1", "5", "255", "4=", "*", "0", "0", "ACGT", "III"],
+     "length mismatch"),
+    (["r", "0", "chr1", "5", "255", "4="], "columns"),
+])
+def test_validate_sam_catches_violations(rec, msg):
+    with pytest.raises(AssertionError, match=msg):
+        validate_sam(_doc(["\t".join(rec)]))
+
+
+def test_emit_alignments_raw_seq_and_contig_shift():
+    """Two review-found edges: (a) raw FASTQ text (N bases) must reach
+    SEQ verbatim — the engine's N->A seeding codes must not; (b) the
+    leading-deletion POS shift applies *before* contig lookup, so an
+    alignment seeded in the inter-contig spacer lands on the contig of
+    its first aligned base."""
+    from repro.core.pipeline import MappingResult
+    from repro.io.fasta import ReferenceMap
+    from repro.io.sam import emit_alignments
+
+    rm = ReferenceMap([Contig("c1", 100, 0), Contig("c2", 100, 110)])
+    max_ops = 16
+    ops = np.full((3, max_ops), OP_NONE, np.int32)
+    ops[1, -6:] = [OP_DEL, OP_DEL] + [OP_MATCH] * 4  # leading 2D
+    ops[2, -4:] = [OP_MATCH] * 4
+    res = MappingResult(
+        position=np.array([-1, 108, 5]),      # 108 = inside the spacer
+        distance=np.array([32, 2, 0]),
+        mapped=np.array([False, True, True]),
+        strand=np.array([0, 0, 1], np.int8),
+        ops=ops, op_count=np.array([0, 6, 4]))
+    reads = np.zeros((3, 4), np.uint8)
+    quals = np.tile(np.frombuffer(b"HIJK", np.uint8), (3, 1))
+    recs = [r.split("\t") for r in emit_alignments(
+        res, ["u", "m", "rev"], reads, quals, rm,
+        seqs=["ANGN", "ACGT", "AANT"])]
+    assert int(recs[0][1]) & 4 and recs[0][9] == "ANGN"  # N kept verbatim
+    # 108 + 2 leading-D = 110 -> c2 local 0 -> POS 1, CIGAR trimmed
+    assert recs[1][2] == "c2" and recs[1][3] == "1" and recs[1][5] == "4="
+    # reverse strand: raw text revcomped (N self-complements), qual flipped
+    assert recs[2][9] == "ANTT" and recs[2][10] == "KJIH"
+
+
+def test_validate_sam_requires_header():
+    with pytest.raises(AssertionError, match="@HD"):
+        validate_sam("r\t4\t*\t0\t0\t*\t*\t0\t0\tA\tI\n")
+    with pytest.raises(AssertionError, match="@SQ"):
+        validate_sam("@HD\tVN:1.6\n")

@@ -1,0 +1,143 @@
+"""repro.io parsers: FASTA/FASTQ round-trips through the simulator's
+writers, N -> sentinel handling, contig tables, chunked streaming, and
+the fixed-read-length policy (skip short / truncate long, counted)."""
+import io
+
+import numpy as np
+import pytest
+
+from repro.core.index import SENTINEL
+from repro.data.genome import (make_reference, sample_reads, write_fasta,
+                               write_fastq)
+from repro.io.fasta import ReferenceMap, load_reference, parse_fasta
+from repro.io.fastq import FastqStream
+
+
+# ------------------------------------------------------------------- FASTA
+
+def test_fasta_roundtrip_multirecord_with_n():
+    c1 = make_reference(500, seed=1)
+    c1[100:107] = SENTINEL  # simulated N run survives the round trip
+    c2 = make_reference(300, seed=2)
+    buf = io.StringIO()
+    write_fasta(buf, [("chr1", c1), ("chr2 description ignored", c2)],
+                width=61)
+    buf.seek(0)
+    recs = list(parse_fasta(buf))
+    assert [n for n, _ in recs] == ["chr1", "chr2"]
+    np.testing.assert_array_equal(recs[0][1], c1)
+    np.testing.assert_array_equal(recs[1][1], c2)
+
+
+def test_fasta_lowercase_and_iupac_to_sentinel():
+    buf = io.StringIO(">c\nacgtACGT\nNRYWn\n")
+    (_, codes), = parse_fasta(buf)
+    np.testing.assert_array_equal(codes[:8], [0, 1, 2, 3, 0, 1, 2, 3])
+    assert (codes[8:] == SENTINEL).all()
+
+
+def test_load_reference_spacer_and_locate():
+    c1, c2 = make_reference(400, seed=3), make_reference(250, seed=4)
+    buf = io.StringIO()
+    write_fasta(buf, [("a", c1), ("b", c2)])
+    buf.seek(0)
+    ref, contigs = load_reference(buf, spacer=50)
+    assert len(ref) == 400 + 50 + 250
+    assert (ref[400:450] == SENTINEL).all()
+    assert [c.offset for c in contigs] == [0, 450]
+    rm = ReferenceMap(contigs)
+    assert rm.locate(0) == (contigs[0], 0)
+    assert rm.locate(399) == (contigs[0], 399)
+    # positions inside the spacer clamp to the NEAREST contig edge:
+    # just past contig a -> a's last base; just before b -> b's first
+    assert rm.locate(420) == (contigs[0], 399)
+    assert rm.locate(445) == (contigs[1], 0)
+    assert rm.locate(450) == (contigs[1], 0)
+    assert rm.locate(451) == (contigs[1], 1)
+
+
+def test_fasta_errors():
+    with pytest.raises(ValueError, match="before any"):
+        list(parse_fasta(io.StringIO("ACGT\n")))
+    with pytest.raises(ValueError, match="no records"):
+        load_reference(io.StringIO(""), spacer=10)
+    with pytest.raises(ValueError, match="no sequence"):
+        load_reference(io.StringIO(">a\n>b\nACGT\n"), spacer=10)
+
+
+# ------------------------------------------------------------------- FASTQ
+
+def test_fastq_roundtrip_chunked():
+    ref = make_reference(3000, seed=5)
+    rs = sample_reads(ref, 24, read_len=80, seed=6, both_strands=True)
+    names = [f"r{i}" for i in range(24)]
+    buf = io.StringIO()
+    write_fastq(buf, rs, names=names)
+    buf.seek(0)
+    stream = FastqStream(buf, chunk_reads=10)
+    assert stream.read_len == 80  # inferred from the first record
+    chunks = list(stream)
+    assert [len(c) for c in chunks] == [10, 10, 4]
+    np.testing.assert_array_equal(
+        np.concatenate([c.reads for c in chunks]), rs.reads)
+    np.testing.assert_array_equal(
+        np.concatenate([c.quals for c in chunks]), rs.quals)
+    assert [n for c in chunks for n in c.names] == names
+    assert stream.n_reads == 24
+    assert stream.n_skipped == 0 and stream.n_truncated == 0
+
+
+def test_fastq_length_policy_counts():
+    txt = ("@long\n" + "A" * 12 + "\n+\n" + "I" * 12 + "\n"
+           "@short\nACG\n+\nIII\n"
+           "@exact\n" + "C" * 8 + "\n+\n" + "#" * 8 + "\n")
+    stream = FastqStream(io.StringIO(txt), read_len=8, chunk_reads=64)
+    (chunk,) = list(stream)
+    assert chunk.names == ["long", "exact"]
+    assert stream.n_skipped == 1 and stream.n_truncated == 1
+    assert chunk.reads.shape == (2, 8)
+    np.testing.assert_array_equal(chunk.reads[1], np.full(8, 1))  # C
+    assert chunk.quals[1].tobytes() == b"#" * 8
+
+
+def test_fastq_n_bases_encode_to_a_but_seqs_keep_raw_text():
+    stream = FastqStream(io.StringIO("@r\nANGN\n+\nIIII\n"), chunk_reads=4)
+    (chunk,) = list(stream)
+    np.testing.assert_array_equal(chunk.reads[0], [0, 0, 2, 0])
+    assert chunk.seqs == ["ANGN"]  # raw text survives for SAM SEQ
+
+
+def test_fastq_closes_owned_handle_on_early_break(tmp_path):
+    p = tmp_path / "r.fq"
+    p.write_text("".join(f"@r{i}\nACGT\n+\nIIII\n" for i in range(8)))
+    stream = FastqStream(str(p), chunk_reads=2)
+    it = iter(stream)
+    next(it)
+    it.close()  # abandon mid-file: generator finalization must close
+    assert stream._f.closed
+
+
+def test_fastq_malformed():
+    with pytest.raises(ValueError, match="empty FASTQ"):
+        FastqStream(io.StringIO(""))
+    with pytest.raises(ValueError, match="'@' header"):
+        list(FastqStream(io.StringIO("ACGT\n")))
+    with pytest.raises(ValueError, match="separator"):
+        list(FastqStream(io.StringIO("@r\nACGT\nACGT\nIIII\n")))
+    with pytest.raises(ValueError, match="qualities"):
+        list(FastqStream(io.StringIO("@r\nACGT\n+\nII\n")))
+
+
+def test_simulator_forward_only_unchanged():
+    """both_strands=False must keep the historical RNG stream: forward
+    loci, reads, and error counts are bit-identical with the flag off and
+    equal to the forward subset with it on."""
+    ref = make_reference(2000, seed=7)
+    a = sample_reads(ref, 16, read_len=60, seed=8)
+    b = sample_reads(ref, 16, read_len=60, seed=8, both_strands=True)
+    np.testing.assert_array_equal(a.true_pos, b.true_pos)
+    assert (a.strand == 0).all() and b.strand.sum() > 0
+    fwd = b.strand == 0
+    np.testing.assert_array_equal(a.reads[fwd], b.reads[fwd])
+    from repro.core.encoding import revcomp
+    np.testing.assert_array_equal(a.reads[~fwd], revcomp(b.reads[~fwd]))

@@ -1,0 +1,109 @@
+"""End-to-end CLI smoke (the CI job's test): simulate a dual-strand read
+set, write real FASTA/FASTQ files, run ``python -m repro.launch.map_fastq``
+on both topologies as a subprocess, and validate the emitted SAM with the
+dependency-free checker — header, mandatory columns, FLAG strand bits
+against ground truth, CIGAR/SEQ consistency, and position accuracy."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.data.genome import (make_reference, sample_reads, write_fasta,
+                               write_fastq)
+from repro.io.cigar import cigar_query_len
+from repro.io.sam import FLAG_REVERSE, FLAG_UNMAPPED, validate_sam
+
+READ_LEN = 120
+N_READS = 24
+
+
+@pytest.fixture(scope="module")
+def fastq_world(tmp_path_factory):
+    d = tmp_path_factory.mktemp("map_fastq")
+    c1 = make_reference(5_000, seed=0, repeat_frac=0.02)
+    c2 = make_reference(3_000, seed=5, repeat_frac=0.0)
+    c1[700:704] = 4  # an N run in the reference
+    write_fasta(d / "ref.fa", [("chr1", c1), ("chr2", c2)])
+    rs1 = sample_reads(c1, N_READS // 2, read_len=READ_LEN, seed=3,
+                       both_strands=True)
+    rs2 = sample_reads(c2, N_READS // 2, read_len=READ_LEN, seed=9,
+                       both_strands=True)
+    reads = np.concatenate([rs1.reads, rs2.reads])
+    quals = np.concatenate([rs1.quals, rs2.quals])
+    truth = [("chr1", int(p), int(s))
+             for p, s in zip(rs1.true_pos, rs1.strand)]
+    truth += [("chr2", int(p), int(s))
+              for p, s in zip(rs2.true_pos, rs2.strand)]
+    names = [f"read{i}" for i in range(N_READS)]
+    write_fastq(d / "reads.fq", reads, quals, names)
+    return d, dict(zip(names, truth))
+
+
+def _run_cli(d, out_name, *extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..",
+                                      "src") +
+                         os.pathsep + env.get("PYTHONPATH", ""))
+    cmd = [sys.executable, "-m", "repro.launch.map_fastq",
+           str(d / "ref.fa"), str(d / "reads.fq"), "-o",
+           str(d / out_name), "--chunk-reads", "16", *extra]
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    return (d / out_name).read_text(), proc.stderr
+
+
+def _check_sam(text, truth, *, expect_cigars):
+    stats = validate_sam(text, expect_reads=N_READS)
+    assert stats["contigs"] == {"chr1": 5000, "chr2": 3000}
+    n_pos_strand_ok = 0
+    for ln in text.splitlines():
+        if ln.startswith("@"):
+            continue
+        f = ln.split("\t")
+        qname, flag, rname, pos, cig, seq = (f[0], int(f[1]), f[2],
+                                             int(f[3]), f[5], f[9])
+        t_contig, t_pos, t_strand = truth[qname]
+        if flag & FLAG_UNMAPPED:
+            continue
+        if expect_cigars:
+            assert cig != "*"
+            assert cigar_query_len(cig) == READ_LEN == len(seq)
+        else:
+            assert cig == "*"  # mesh stage B never tracebacks
+        strand_bit = 1 if flag & FLAG_REVERSE else 0
+        if (rname == t_contig and abs((pos - 1) - t_pos) <= 6
+                and strand_bit == t_strand):
+            n_pos_strand_ok += 1
+    # strand-aware accuracy: position AND strand, against ground truth
+    assert n_pos_strand_ok >= int(0.9 * N_READS), \
+        f"only {n_pos_strand_ok}/{N_READS} correct (pos+strand)"
+    assert stats["n_reverse"] > 0  # reverse-strand reads really mapped
+    return stats
+
+
+def test_map_fastq_single_topology(fastq_world):
+    d, truth = fastq_world
+    text, err = _run_cli(d, "single.sam")
+    stats = _check_sam(text, truth, expect_cigars=True)
+    assert stats["n_mapped"] >= int(0.9 * N_READS)
+    assert "filter/affine [single]" in err
+
+
+def test_map_fastq_mesh_topology(fastq_world):
+    d, truth = fastq_world
+    text, err = _run_cli(d, "mesh.sam", "--topology", "mesh",
+                         "--shards", "2")
+    _check_sam(text, truth, expect_cigars=False)
+    assert "stage B [mesh]" in err
+
+
+def test_map_fastq_single_strand_flag_drops_reverse(fastq_world):
+    d, truth = fastq_world
+    text, _ = _run_cli(d, "fwd.sam", "--single-strand")
+    stats = validate_sam(text, expect_reads=N_READS)
+    assert stats["n_reverse"] == 0
+    n_rev_truth = sum(1 for _, _, s in truth.values() if s)
+    assert stats["n_mapped"] <= N_READS - n_rev_truth + 2

@@ -55,6 +55,26 @@ def test_map_matches_deprecated_map_reads(world):
     assert res.stats.survivors == res.stats["survivors"]
 
 
+def test_deprecation_warnings_point_at_caller(world, mesh1):
+    """The shims' DeprecationWarnings must carry a stacklevel that blames
+    the *calling* code (this file), not the shim module — that is what
+    makes `python -W error::DeprecationWarning` output actionable."""
+    idx, reads = world
+    mesh, sidx = mesh1
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        map_reads(idx, reads[:8])
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert dep and dep[0].filename == __file__
+
+    from repro.core.distributed import distributed_map_reads
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        distributed_map_reads(mesh, sidx, reads[:8])
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert dep and dep[0].filename == __file__
+
+
 def test_map_matches_padded_reference(world):
     idx, reads = world
     a = Mapper(idx, MapperConfig.from_index(idx, engine="padded")).map(reads)
