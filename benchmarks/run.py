@@ -50,35 +50,60 @@ def emit_pipeline_json(path: str, reads: int, chunk_reads: int | None,
               f"{fp['fastq_sam_reads_per_s']:.1f} reads/s through "
               f"FASTQ->SAM vs {fp['in_memory_reads_per_s']:.1f} in-memory "
               f"(I/O overhead {fp['io_overhead_frac']:.1%})")
+    pp = bench.get("paired_path")
+    if pp:
+        print(f"paired_path (gzip R1/R2 -> paired SAM): "
+              f"{pp['reads_per_s']:.1f} reads/s "
+              f"({pp['pairs_per_s']:.1f} pairs/s, proper "
+              f"{pp['proper_frac']:.1%}, {pp['rescued']} rescued)")
     print(f"wrote {path}")
     return bench
 
 
+def _gate_metric(name: str, fresh_val, base_val, tolerance: float,
+                 missing_reason: str | None = None) -> int:
+    if fresh_val is None:
+        why = f": {missing_reason}" if missing_reason else ""
+        print(f"perf-trend: FAIL — fresh run has no {name}{why}")
+        return 1
+    floor = (1.0 - tolerance) * base_val
+    verdict = "OK" if fresh_val >= floor else "FAIL"
+    print(f"perf-trend: {verdict} — {name} "
+          f"fresh={fresh_val:.1f} baseline={base_val:.1f} "
+          f"floor={floor:.1f} (tolerance {tolerance:.0%})")
+    return 0 if fresh_val >= floor else 1
+
+
 def check_regression(fresh: dict, baseline_path: str,
                      tolerance: float) -> int:
-    """Non-zero when the streamed Pallas engine regressed > tolerance
-    vs the committed baseline (the CI perf-trend gate)."""
+    """Non-zero when the streamed Pallas engine — or the paired-end
+    path's reads/s — regressed > tolerance vs the committed baseline
+    (the CI perf-trend gate).  Metrics the baseline lacks are skipped,
+    so the gate never blocks the PR that introduces a new section."""
     with open(baseline_path) as f:
         base = json.load(f)
+    rc = 0
     try:
         b = base["engines"][REGRESSION_ENGINE][REGRESSION_METRIC]
     except KeyError:
         print(f"perf-trend: baseline {baseline_path} lacks "
               f"{REGRESSION_ENGINE}.{REGRESSION_METRIC}; skipping check")
-        return 0
-    e = fresh["engines"].get(REGRESSION_ENGINE, {})
-    if "error" in e or REGRESSION_METRIC not in e:
-        print(f"perf-trend: FAIL — fresh run has no "
-              f"{REGRESSION_ENGINE}.{REGRESSION_METRIC}: "
-              f"{e.get('error', 'missing')}")
-        return 1
-    f_ = e[REGRESSION_METRIC]
-    floor = (1.0 - tolerance) * b
-    verdict = "OK" if f_ >= floor else "FAIL"
-    print(f"perf-trend: {verdict} — {REGRESSION_ENGINE}.{REGRESSION_METRIC} "
-          f"fresh={f_:.1f} baseline={b:.1f} floor={floor:.1f} "
-          f"(tolerance {tolerance:.0%})")
-    return 0 if f_ >= floor else 1
+        b = None
+    if b is not None:
+        e = fresh["engines"].get(REGRESSION_ENGINE, {})
+        fresh_val = (None if "error" in e else e.get(REGRESSION_METRIC))
+        rc |= _gate_metric(f"{REGRESSION_ENGINE}.{REGRESSION_METRIC}",
+                           fresh_val, b, tolerance,
+                           missing_reason=e.get("error"))
+    bp = base.get("paired_path", {}).get("reads_per_s")
+    if bp is None:
+        print(f"perf-trend: baseline {baseline_path} lacks "
+              f"paired_path.reads_per_s; skipping check")
+    else:
+        rc |= _gate_metric("paired_path.reads_per_s",
+                           fresh.get("paired_path", {}).get("reads_per_s"),
+                           bp, tolerance)
+    return rc
 
 
 def run_csv() -> None:

@@ -173,8 +173,9 @@ def _stage_b(local, uniq, offsets, positions, segments, cfg: MapperConfig,
     on those ``aff_cap`` instances instead of every bucket entry.
     Survivors beyond ``aff_cap`` are *dropped* (reported unmapped), the
     same bounded-latency/accuracy trade as the Reads-FIFO overflow.
-    Returns per-shard (aff (S, cap), pos (S, cap), n_survivors,
-    n_affine_dropped).
+    Returns per-shard (aff (S, cap), pos (S, cap), co_est (S, cap) —
+    the placement-level co-optimal runner-up estimate for the distance2
+    reduce, n_survivors, n_affine_dropped).
     """
     S, cap = local["kmer"].shape
     kmers = local["kmer"].reshape(-1)
@@ -219,8 +220,24 @@ def _stage_b(local, uniq, offsets, positions, segments, cfg: MapperConfig,
     kept = scatter_to(E, slots, slot_ok, slot_ok, False)
     sel_occ = jnp.take_along_axis(occ, best_pl[:, None], 1)[:, 0]
     pos = positions[sel_occ] - minipos
+    # placement-level co-optimal survey (pipeline._co_optimal_runner_up's
+    # mesh analog): a repeat copy whose placements share this entry's
+    # minimizer never leaves the per-entry argmin, so survey the full
+    # (E, P) linear distances for far-locus placements at least as good
+    # as the chosen one; estimate their affine distance as this entry's
+    # plus the linear excess.  The estimate rides the return exchange and
+    # feeds stage C's runner-up reduce.
+    sat_lin = jnp.int32(cfg.eth + 1)
+    pos_pl = positions[occ] - minipos[:, None]                 # (E, P)
+    far_pl = jnp.abs(pos_pl - pos[:, None]) > cfg.eth
+    co = far_pl & occ_valid & (lin_end
+                               <= min(cfg.filter_threshold, cfg.eth))
+    min_far = jnp.min(jnp.where(co, lin_end, sat_lin), axis=-1)
+    co_est = jnp.minimum(aff_end + jnp.maximum(min_far - best_lin, 0), sat)
+    co_est = jnp.where((min_far < sat_lin) & kept, co_est, sat)
     pos = jnp.where(kept, pos, -1)
-    return (aff_end.reshape(S, cap), pos.reshape(S, cap), n_surv,
+    return (aff_end.reshape(S, cap), pos.reshape(S, cap),
+            co_est.reshape(S, cap).astype(jnp.int32), n_surv,
             n_surv - jnp.sum(slot_ok))
 
 
@@ -233,7 +250,8 @@ def make_distributed_mapper(mesh, cfg: MapperConfig, n_shards: int,
     compiled program executes.  Call signature of ``fn``:
       fn(uniq (S,U), offsets (S,U+1), positions (S,O), segments (S,O,L),
          reads (R_global, rl), read_dst_meta...) ->
-         (position (R_global,), distance (R_global,), dropped (S,),
+         (position (R_global,), distance (R_global,),
+          distance2 (R_global,), dropped (S,),
           stage_b_survivors (S,), stage_b_affine_dropped (S,))
     """
     from jax.sharding import PartitionSpec as P
@@ -273,13 +291,15 @@ def make_distributed_mapper(mesh, cfg: MapperConfig, n_shards: int,
                 for k, v in buckets.items()}
 
         # ---- stage B on the index owner
-        aff, pos, n_surv, aff_drop = _stage_b(recv, uniq, offsets, positions,
-                                              segments, cfg, aff_cap)
+        aff, pos, co_est, n_surv, aff_drop = _stage_b(
+            recv, uniq, offsets, positions, segments, cfg, aff_cap)
         aff = jnp.where(recv["valid"], aff, cfg.sat_affine)
+        co_est = jnp.where(recv["valid"], co_est, cfg.sat_affine)
 
         # ---- return trip
         back_aff = jax.lax.all_to_all(aff, AXIS, 0, 0)
         back_pos = jax.lax.all_to_all(pos, AXIS, 0, 0)
+        back_co = jax.lax.all_to_all(co_est, AXIS, 0, 0)
         back_rid = buckets["rid"]  # origin kept its own copy (same order)
         back_val = buckets["valid"]
 
@@ -296,13 +316,26 @@ def make_distributed_mapper(mesh, cfg: MapperConfig, n_shards: int,
         posr = posr.at[flat_rid].min(bigpos)
         position = jnp.where((best[:R] < cfg.sat_affine) & (posr[:R] < 2 ** 30),
                              posr[:R], -1)
-        return (position, best[:R], dropped[None], n_surv[None],
+        # runner-up distance at a different locus (beyond the band from
+        # the winner) — same semantics as pipeline._runner_up_distance,
+        # expressed as a second scatter-min over the returned entries,
+        # plus the per-entry placement-level co-optimal estimates from
+        # stage B (the _co_optimal_runner_up analog)
+        pos_ext = jnp.concatenate([position, jnp.full((1,), -1, jnp.int32)])
+        far = jnp.abs(flat_pos - pos_ext[flat_rid]) > cfg.eth
+        d2_key = jnp.where(far & (flat_aff < cfg.sat_affine)
+                           & (flat_pos >= 0), flat_aff, cfg.sat_affine)
+        best2 = jnp.full((R + 1,), cfg.sat_affine, dtype=jnp.int32)
+        best2 = best2.at[flat_rid].min(d2_key)
+        flat_co = jnp.where(back_val, back_co, cfg.sat_affine).reshape(-1)
+        best2 = best2.at[flat_rid].min(flat_co)
+        return (position, best[:R], best2[:R], dropped[None], n_surv[None],
                 aff_drop[None])
 
     pspec = P(AXIS)
     fn = _shard_map(step, mesh,
                     in_specs=(pspec, pspec, pspec, pspec, pspec),
-                    out_specs=(pspec,) * 5)
+                    out_specs=(pspec,) * 6)
     return jax.jit(fn), aff_cap
 
 

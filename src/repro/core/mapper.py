@@ -71,7 +71,29 @@ from .pipeline import (MapperConfig, MappingResult, _ChunkPipeline,
 
 TOPOLOGIES = ("single", "mesh")
 
-__all__ = ["Mapper", "MapperStats", "MappingPlan", "TOPOLOGIES"]
+__all__ = ["Mapper", "MapperStats", "MappingPlan", "TOPOLOGIES",
+           "split_result"]
+
+
+_PER_READ_FIELDS = ("position", "distance", "distance2", "mapped", "strand",
+                    "ops", "op_count", "linear_dist", "n_candidates")
+
+
+def split_result(res: MappingResult, n: int,
+                 ) -> tuple[MappingResult, MappingResult]:
+    """Split one stacked ``MappingResult`` into ``(first n, rest)``.
+
+    The paired-end path maps both mates as one stacked batch (R1 rows
+    then R2 rows — one plan, one engine dispatch, shared chunking) and
+    splits here.  Both halves share the run's ``stats`` object (its
+    ``reads`` counts the full stacked batch).
+    """
+    def half(lo, hi):
+        return MappingResult(
+            **{f: (getattr(res, f)[lo:hi] if getattr(res, f) is not None
+                   else None) for f in _PER_READ_FIELDS},
+            stats=res.stats)
+    return half(0, n), half(n, len(res.position))
 
 
 @dataclasses.dataclass
@@ -220,10 +242,20 @@ def _reduce_strands(res: MappingResult, n: int) -> MappingResult:
         stats = dataclasses.replace(
             stats, reads=n, reverse_best=int(np.sum(rev_wins & mapped)),
             extra={**stats.extra, "both_strands": True})
+    # the runner-up across both strands: the winner strand's own second
+    # locus, or the loser strand's best alignment — whichever is closer.
+    # (An opposite-strand hit is a genuinely competing alignment even at
+    # the same locus, so no distance-to-winner exclusion applies here.)
+    d2 = None
+    if res.distance2 is not None:
+        lose_d1 = np.where(rev_wins, res.distance[:n], res.distance[n:])
+        d2 = np.minimum(pick(res.distance2), lose_d1).astype(
+            res.distance2.dtype)
     return MappingResult(
         position=pick(res.position), distance=pick(res.distance),
-        mapped=mapped, strand=rev_wins.astype(np.int8), ops=pick(res.ops),
-        op_count=pick(res.op_count), linear_dist=pick(res.linear_dist),
+        distance2=d2, mapped=mapped, strand=rev_wins.astype(np.int8),
+        ops=pick(res.ops), op_count=pick(res.op_count),
+        linear_dist=pick(res.linear_dist),
         n_candidates=pick(res.n_candidates), stats=stats)
 
 
@@ -360,6 +392,25 @@ class Mapper:
         reads = np.asarray(reads)
         return self.run(self.plan(len(reads)), reads)
 
+    def map_pairs(self, reads1: np.ndarray, reads2: np.ndarray,
+                  ) -> tuple[MappingResult, MappingResult]:
+        """Map both mates of a paired batch in ONE stacked engine batch.
+
+        ``reads1[i]`` and ``reads2[i]`` are the R1/R2 mates of pair
+        ``i``, each in as-sequenced orientation (both_strands handles
+        orientation per mate).  The stack shares a single plan — same
+        chunking, same capacities, one strand reduce — and is split back
+        into per-mate results, so pairing never forks the execution
+        path.  Host-side pair resolution (proper pairs, rescue, MAPQ)
+        lives in ``repro.core.pairing``.
+        """
+        reads1, reads2 = np.asarray(reads1), np.asarray(reads2)
+        if reads1.shape != reads2.shape:
+            raise ValueError(f"mate batches must align pairwise: "
+                             f"{reads1.shape} vs {reads2.shape}")
+        res = self.map(np.concatenate([reads1, reads2]))
+        return split_result(res, len(reads1))
+
     def map_async(self, reads: np.ndarray) -> Future:
         """Submit a batch to the session worker thread; returns a Future
         of the ``MappingResult``.  Submissions execute in order, each one
@@ -423,6 +474,7 @@ class Mapper:
             return MappingResult(
                 position=np.asarray(out["position"]),
                 distance=np.asarray(out["distance"]),
+                distance2=np.asarray(out["distance2"]),
                 mapped=np.asarray(out["mapped"]),
                 ops=np.asarray(out["ops"]),
                 op_count=np.asarray(out["op_count"]),
@@ -458,7 +510,9 @@ class Mapper:
             plan_cache_hits=self.plan_cache_hits,
             plan_cache_misses=self.plan_cache_misses, extra=raw)
         return MappingResult(position=cat("position"),
-                             distance=cat("distance"), mapped=cat("mapped"),
+                             distance=cat("distance"),
+                             distance2=cat("distance2"),
+                             mapped=cat("mapped"),
                              ops=cat("ops"), op_count=cat("op_count"),
                              linear_dist=cat("linear_dist"),
                              n_candidates=cat("n_candidates"), stats=stats)
@@ -473,10 +527,11 @@ class Mapper:
                            reads.dtype)
             reads = np.concatenate([reads, pad])
         fn, aff_cap = entry
-        pos, dist, dropped, n_surv, aff_drop = fn(*self._dev,
-                                                  jnp.asarray(reads))
+        pos, dist, dist2, dropped, n_surv, aff_drop = fn(*self._dev,
+                                                         jnp.asarray(reads))
         pos = np.asarray(pos)[:n]
         dist = np.asarray(dist)[:n]
+        dist2 = np.asarray(dist2)[:n]
         dropped = np.asarray(dropped)
         S = plan.n_shards
         surv = int(np.asarray(n_surv).sum())
@@ -497,5 +552,5 @@ class Mapper:
             dropped_send=int(dropped.sum()), dropped_affine=n_aff_drop,
             plan_cache_hits=self.plan_cache_hits,
             plan_cache_misses=self.plan_cache_misses, extra=raw)
-        return MappingResult(position=pos, distance=dist, mapped=pos >= 0,
-                             stats=stats)
+        return MappingResult(position=pos, distance=dist, distance2=dist2,
+                             mapped=pos >= 0, stats=stats)

@@ -1,0 +1,396 @@
+"""Host-side paired-end resolution: proper pairs, mate rescue, MAPQ.
+
+DART-PIM (and this reproduction's engine) maps each mate independently;
+what makes the output *paired-end* is the host-side reduce that the
+paper's main controller would own.  This module is that reduce:
+
+* **proper pairs** — both mates mapped, FR orientation (the upstream
+  mate forward, the downstream mate reverse-complement: the standard
+  Illumina library geometry), and an observed insert size inside a
+  window derived from a **running median** of the batch's own
+  concordant pairs (``InsertSizeTracker``) — no insert-size parameter
+  to mistune;
+* **mate rescue** — a pair with exactly one mapped mate re-aligns the
+  unmapped mate with a banded affine WF sweep over the window where the
+  library geometry predicts it (anchor position ± the tracked insert
+  window), accepting only below a distance threshold: a real alignment,
+  not a positional guess;
+* **MAPQ** — a calibrated 0..60 score per mate from the engine's
+  best-vs-second-best affine distance gap (``MappingResult.distance2``,
+  the runner-up at a *different* locus) plus pair concordance: proper
+  pairs are promoted, discordant ones demoted, rescued mates are capped
+  by their anchor's confidence.  Mapped records therefore always carry
+  MAPQ <= 254 (255 stays the single-end path's "unavailable").
+
+Everything here is numpy post-processing over two ``MappingResult``
+halves of one stacked engine batch (``Mapper.map_pairs``), so both
+topologies — including the mesh path, whose stage B has no traceback —
+pair identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .encoding import revcomp
+from .pipeline import MapperConfig, MappingResult
+
+MAPQ_MAX = 60            # score ceiling (BWA/minimap2 convention, << 254)
+_GAP_SCALE = 6           # MAPQ points per unit of best-vs-2nd distance gap
+_PROPER_BONUS = 8        # concordant-pair promotion
+_RESCUE_CAP = 17         # rescued mate: placed by its anchor, capped by it
+
+
+# --------------------------------------------------------------------------
+# Insert-size tracking (the running-median window)
+# --------------------------------------------------------------------------
+
+class InsertSizeTracker:
+    """Running median + MAD window over observed FR insert sizes.
+
+    ``update`` feeds the insert sizes of orientation-concordant pairs
+    (bounded memory: only the most recent ``max_samples`` are kept);
+    ``window()`` returns the ``[lo, hi]`` acceptance interval — median
+    ± ``window_mads`` scaled-MAD half-widths, floored so a low-variance
+    library cannot collapse the window to a point.  Until ``min_samples``
+    inserts have been seen it reports the permissive ``default_window``,
+    so the first chunk of a stream can bootstrap itself (observe, then
+    resolve).
+    """
+
+    def __init__(self, *, max_samples: int = 4096, window_mads: float = 8.0,
+                 min_samples: int = 32,
+                 default_window: tuple[int, int] = (0, 10_000)):
+        self.max_samples = max_samples
+        self.window_mads = window_mads
+        self.min_samples = min_samples
+        self.default_window = default_window
+        self._samples: list[int] = []
+        self.n_observed = 0
+
+    def update(self, inserts) -> None:
+        vals = [int(v) for v in np.asarray(inserts).reshape(-1)]
+        self.n_observed += len(vals)
+        self._samples.extend(vals)
+        if len(self._samples) > self.max_samples:
+            self._samples = self._samples[-self.max_samples:]
+
+    @property
+    def median(self) -> float | None:
+        if len(self._samples) < self.min_samples:
+            return None
+        return float(np.median(self._samples))
+
+    def _mad_window(self) -> tuple[int, int]:
+        arr = np.asarray(self._samples, dtype=np.float64)
+        med = float(np.median(arr))
+        mad = float(np.median(np.abs(arr - med)))
+        half = max(self.window_mads * 1.4826 * mad, 0.25 * med, 16.0)
+        return max(int(med - half), 0), int(med + half)
+
+    def window(self) -> tuple[int, int]:
+        if len(self._samples) < self.min_samples:
+            return self.default_window
+        return self._mad_window()
+
+    def rescue_window(self, min_samples: int = 4) -> tuple[int, int] | None:
+        """Insert window for the mate-rescue sweep, or None when there is
+        nothing to calibrate from.  Rescue needs a *bounded* interval (a
+        stride-1 WF sweep over it), so it trusts the MAD window as soon
+        as a handful of concordant inserts exist — unlike :meth:`window`,
+        which stays permissive until ``min_samples`` for judging
+        properness."""
+        if len(self._samples) < min_samples:
+            return None
+        return self._mad_window()
+
+
+# --------------------------------------------------------------------------
+# Pair resolution
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PairResolution:
+    """Per-pair outcome of ``resolve_pairs`` (all arrays length n_pairs).
+
+    ``res1``/``res2`` are *copies* of the inputs with rescued mates
+    filled in (position/strand/mapped/distance); the caller's results
+    are never mutated.  ``insert`` is the observed fragment length for
+    orientation-concordant pairs (0 otherwise).
+    """
+    res1: MappingResult
+    res2: MappingResult
+    proper: np.ndarray       # (n,) bool — FR orientation + insert in window
+    mapq1: np.ndarray        # (n,) int32 0..MAPQ_MAX
+    mapq2: np.ndarray        # (n,) int32
+    rescued1: np.ndarray     # (n,) bool — mate 1 was placed by rescue
+    rescued2: np.ndarray     # (n,) bool
+    insert: np.ndarray       # (n,) int32 observed FR fragment length
+    stats: dict
+
+
+def _strands(res: MappingResult) -> np.ndarray:
+    s = res.strand
+    if s is None:  # single-strand runs: everything mapped forward
+        return np.zeros(len(res.position), dtype=np.int8)
+    return np.asarray(s)
+
+
+def _fr_geometry(pos1, s1, pos2, s2, read_len: int):
+    """FR-orientation mask + fragment length in global flat coordinates.
+
+    A pair is FR-oriented when the mates face each other: opposite
+    strands and the forward mate upstream of (or overlapping) the
+    reverse mate.  The fragment spans the forward mate's start to the
+    reverse mate's end (footprint approximated by ``read_len`` — the
+    band keeps true footprints within a few bases of it).
+    """
+    opposite = s1 != s2
+    fwd_pos = np.where(s1 == 0, pos1, pos2)
+    rev_pos = np.where(s1 == 0, pos2, pos1)
+    facing = fwd_pos <= rev_pos
+    insert = rev_pos + read_len - fwd_pos
+    return opposite & facing, insert.astype(np.int32)
+
+
+def _copy_result(res: MappingResult) -> MappingResult:
+    fields = {f.name: getattr(res, f.name)
+              for f in dataclasses.fields(MappingResult)}
+    for name in ("position", "distance", "distance2", "mapped", "strand"):
+        if fields[name] is not None:
+            fields[name] = np.array(fields[name], copy=True)
+    return MappingResult(**fields)
+
+
+def _rescue_candidates(anchor_pos, anchor_strand, window, read_len,
+                       max_windows: int):
+    """Candidate start positions for the unmapped mate, from the anchor's
+    locus and the insert window.  Stride 1 — a start offset *into* the
+    band costs gap penalties (the band is end-anchored), so skipping
+    starts would misprice in-between placements; when the interval
+    exceeds ``max_windows`` the sweep coarsens just enough to fit."""
+    lo_ins, hi_ins = window
+    if anchor_strand == 0:
+        # forward anchor at p: reverse mate starts in
+        # [p + lo - rl, p + hi - rl]
+        lo = anchor_pos + lo_ins - read_len
+        hi = anchor_pos + hi_ins - read_len
+    else:
+        # reverse anchor ending at p + rl: forward mate starts in
+        # [p + rl - hi, p + rl - lo]
+        lo = anchor_pos + read_len - hi_ins
+        hi = anchor_pos + read_len - lo_ins
+    step = max(1, -(-(hi - lo + 1) // max_windows))
+    return np.arange(lo, hi + 1, step, dtype=np.int64)
+
+
+def _rescue(res_un, res_an, idx, reads_un, ref, cfg: MapperConfig,
+            window, max_dist: int, max_windows: int, rescued) -> int:
+    """Re-align the unmapped mates ``idx`` of ``res_un`` near their
+    anchors in ``res_an``; fill accepted placements in-place (``res_un``
+    is already a private copy).  Returns the number rescued."""
+    import jax.numpy as jnp
+
+    from . import wf_backend as wfb
+
+    rl = cfg.read_len
+    G = len(ref)
+    # sentinel padding: candidate windows near the reference edges clip
+    # into never-matching bases instead of wrapping or crashing
+    pad = np.full(G + 2 * (rl + 2 * cfg.eth), 4, dtype=np.uint8)
+    off0 = rl + 2 * cfg.eth
+    pad[off0 : off0 + G] = ref
+
+    an_strand = _strands(res_an)
+    n_rescued = 0
+    s1_rows, win_rows, meta = [], [], []
+    for i in idx:
+        sa = int(an_strand[i])
+        starts = _rescue_candidates(int(res_an.position[i]), sa,
+                                    window, rl, max_windows)
+        # a placement must fit wholly inside the reference: a start
+        # hanging off either edge would score against sentinel padding
+        # and then emit a coordinate that disagrees with the alignment
+        starts = starts[(starts >= 0) & (starts <= G - rl)][:max_windows]
+        if not len(starts):
+            continue
+        # FR: the rescued mate sits on the opposite strand of its anchor;
+        # the engine's convention is "revcomp encoding aligned here"
+        mate_strand = 1 - sa
+        aligned = revcomp(reads_un[i]) if mate_strand else reads_un[i]
+        for p in starts:
+            w0 = int(p) + off0 - cfg.eth
+            win_rows.append(pad[w0 : w0 + rl + 2 * cfg.eth])
+            s1_rows.append(aligned)
+            meta.append((i, int(p), mate_strand))
+    if not s1_rows:
+        return 0
+    # pad the stacked sweep to a pow-2 bucket: the banded WF is jitted
+    # per static shape, and the rescue workload varies every chunk — the
+    # bucket makes shapes repeat so streams hit the compile cache
+    # instead of re-tracing per chunk (same convention as the engine's
+    # capacity buckets)
+    from .compaction import bucket_capacity
+    n_rows = len(s1_rows)
+    cap = bucket_capacity(n_rows, align=128, cap_max=n_rows)
+    s1_arr = np.zeros((cap, rl), dtype=np.uint8)
+    win_arr = np.full((cap, rl + 2 * cfg.eth), 4, dtype=np.uint8)
+    s1_arr[:n_rows] = np.stack(s1_rows)
+    win_arr[:n_rows] = np.stack(win_rows)
+    dist, _ = wfb.affine_wf_dist(jnp.asarray(s1_arr), jnp.asarray(win_arr),
+                                 eth=cfg.eth, sat=cfg.sat_affine,
+                                 backend="jnp")
+    dist = np.asarray(dist)[:n_rows]
+    best: dict[int, tuple[int, int, int]] = {}
+    for (i, p, ms), d in zip(meta, dist):
+        d = int(d)
+        if d <= max_dist and (i not in best or d < best[i][0]
+                              or (d == best[i][0] and p < best[i][1])):
+            best[i] = (d, p, ms)
+    for i, (d, p, ms) in best.items():
+        res_un.position[i] = p
+        res_un.distance[i] = d
+        res_un.mapped[i] = True
+        if res_un.strand is not None:
+            res_un.strand[i] = ms
+        if res_un.distance2 is not None:
+            # a rescue sweep sees one window, not the genome: no runner-up
+            # evidence, so the gap term must not claim uniqueness
+            res_un.distance2[i] = d
+        rescued[i] = True
+        n_rescued += 1
+    return n_rescued
+
+
+def compute_mapq(distance, distance2, mapped, *, sat: int,
+                 proper=None, mate_mapped=None) -> np.ndarray:
+    """Calibrated 0..``MAPQ_MAX`` mapping quality per read.
+
+    Base score is the best-vs-second-best affine distance gap
+    (``distance2 - distance``; a unique locus has ``distance2 == sat``
+    and earns the full gap), discounted by the winner's own distance.
+    Pair concordance then adjusts: proper pairs gain ``_PROPER_BONUS``,
+    discordant both-mapped pairs are halved, a lone mapped mate keeps
+    its solo score.  Unmapped reads are 0.
+    """
+    d1 = np.asarray(distance, dtype=np.int64)
+    mapped = np.asarray(mapped, dtype=bool)
+    if distance2 is None:  # no runner-up accounting on this path: assume a
+        d2 = d1 + 3        # modest gap rather than claiming uniqueness
+    else:
+        d2 = np.asarray(distance2, dtype=np.int64)
+    gap = np.clip(d2 - d1, 0, sat)
+    mapq = np.clip(_GAP_SCALE * gap - d1, 0, MAPQ_MAX)
+    if proper is not None and mate_mapped is not None:
+        proper = np.asarray(proper, dtype=bool)
+        discordant = ~proper & np.asarray(mate_mapped, dtype=bool)
+        mapq = np.where(proper, np.minimum(mapq + _PROPER_BONUS, MAPQ_MAX),
+                        mapq)
+        mapq = np.where(discordant, mapq // 2, mapq)
+    return np.where(mapped, mapq, 0).astype(np.int32)
+
+
+def _same_contig(pos1, pos2, contig_starts) -> np.ndarray:
+    """True where both (global, flat) positions fall inside the same
+    contig of a multi-contig reference.  ``contig_starts`` are the
+    contigs' global offsets, sorted ascending (``Contig.offset``)."""
+    starts = np.asarray(contig_starts)
+    if starts.size <= 1:
+        return np.ones(len(pos1), dtype=bool)
+    c1 = np.searchsorted(starts, pos1, side="right")
+    c2 = np.searchsorted(starts, pos2, side="right")
+    return c1 == c2
+
+
+def resolve_pairs(res1: MappingResult, res2: MappingResult, *,
+                  cfg: MapperConfig, tracker: InsertSizeTracker | None = None,
+                  ref: np.ndarray | None = None,
+                  reads1: np.ndarray | None = None,
+                  reads2: np.ndarray | None = None,
+                  contig_starts=None,
+                  rescue_max_dist: int | None = None,
+                  rescue_max_windows: int = 512) -> PairResolution:
+    """Resolve one batch of mate results into pairs.
+
+    ``res1``/``res2`` are the per-mate halves of a stacked batch
+    (``Mapper.map_pairs``), in global flat-reference coordinates.  The
+    ``tracker`` carries insert-size state across batches of a stream
+    (pass the same instance to every call); this batch's own concordant
+    inserts are observed *before* the window is applied, so the first
+    batch bootstraps itself.  ``ref`` (the flat uint8 reference) plus
+    ``reads1``/``reads2`` (the as-sequenced base codes) enable mate
+    rescue; without them rescue is skipped.  ``contig_starts`` (the
+    contigs' global offsets on a multi-contig reference) excludes
+    cross-contig mates from FR concordance — a chimeric pair must never
+    earn 0x2 or feed the insert tracker, even during the permissive
+    bootstrap window.  Returns a ``PairResolution``; the inputs are not
+    mutated.
+    """
+    n = len(res1.position)
+    if len(res2.position) != n:
+        raise ValueError(f"mate result batches must align pairwise: "
+                         f"{n} vs {len(res2.position)}")
+    tracker = tracker if tracker is not None else InsertSizeTracker()
+    res1, res2 = _copy_result(res1), _copy_result(res2)
+    m1, m2 = np.asarray(res1.mapped, bool), np.asarray(res2.mapped, bool)
+    s1, s2 = _strands(res1), _strands(res2)
+
+    def _concordant(mapped_both):
+        fr, ins = _fr_geometry(res1.position, s1, res2.position, s2,
+                               cfg.read_len)
+        fr &= mapped_both
+        if contig_starts is not None:
+            fr &= _same_contig(res1.position, res2.position, contig_starts)
+        return fr, ins
+
+    both = m1 & m2
+    fr, insert = _concordant(both)
+    tracker.update(insert[fr])  # observe before judging: running median
+
+    n_rescued = 0
+    rescued1 = np.zeros(n, dtype=bool)
+    rescued2 = np.zeros(n, dtype=bool)
+    win = (tracker.rescue_window() if ref is not None
+           and reads1 is not None and reads2 is not None else None)
+    if win is not None:
+        max_dist = cfg.eth if rescue_max_dist is None else rescue_max_dist
+        only1 = np.flatnonzero(m1 & ~m2)
+        only2 = np.flatnonzero(m2 & ~m1)
+        n_rescued += _rescue(res2, res1, only1, np.asarray(reads2),
+                             ref, cfg, win, max_dist, rescue_max_windows,
+                             rescued2)
+        n_rescued += _rescue(res1, res2, only2, np.asarray(reads1),
+                             ref, cfg, win, max_dist, rescue_max_windows,
+                             rescued1)
+        if n_rescued:  # rescued placements can complete proper pairs
+            m1 = np.asarray(res1.mapped, bool)
+            m2 = np.asarray(res2.mapped, bool)
+            both = m1 & m2
+            s1, s2 = _strands(res1), _strands(res2)
+            fr, insert = _concordant(both)
+
+    lo, hi = tracker.window()
+    proper = fr & (insert >= lo) & (insert <= hi)
+    insert = np.where(fr, insert, 0).astype(np.int32)
+
+    mapq1 = compute_mapq(res1.distance, res1.distance2, m1,
+                         sat=cfg.sat_affine, proper=proper, mate_mapped=m2)
+    mapq2 = compute_mapq(res2.distance, res2.distance2, m2,
+                         sat=cfg.sat_affine, proper=proper, mate_mapped=m1)
+    # a rescued mate exists only because its anchor placed it: its
+    # confidence cannot exceed the anchor's
+    mapq2 = np.where(rescued2, np.minimum(np.minimum(mapq1, _RESCUE_CAP),
+                                          mapq2), mapq2)
+    mapq1 = np.where(rescued1, np.minimum(np.minimum(mapq2, _RESCUE_CAP),
+                                          mapq1), mapq1)
+
+    stats = dict(n_pairs=n, n_both_mapped=int(both.sum()),
+                 n_proper=int(proper.sum()), n_rescued=n_rescued,
+                 n_discordant=int((both & ~proper).sum()),
+                 insert_median=tracker.median,
+                 insert_window=(lo, hi))
+    return PairResolution(res1=res1, res2=res2, proper=proper,
+                          mapq1=mapq1, mapq2=mapq2,
+                          rescued1=rescued1, rescued2=rescued2,
+                          insert=insert, stats=stats)

@@ -146,6 +146,11 @@ class MappingResult:
     position: np.ndarray   # (R,) int32 best mapping position (-1 if unmapped)
     distance: np.ndarray   # (R,) int32 affine WF distance
     mapped: np.ndarray     # (R,) bool
+    distance2: np.ndarray | None = None  # (R,) int32 runner-up affine WF
+    #                      distance at a *different* locus (beyond the band
+    #                      half-width from the winner; ``sat_affine`` when no
+    #                      competing locus exists) — the best-vs-second-best
+    #                      gap that feeds the MAPQ model (repro.core.pairing)
     strand: np.ndarray | None = None  # (R,) int8 0=forward 1=reverse-
     #                      complement winner; None on single-strand runs
     ops: np.ndarray | None = None   # (R, max_ops) traceback ops (END-aligned)
@@ -203,6 +208,11 @@ def map_reads_jax(uniq_kmers, offsets, positions, segments, reads,
                                   jnp.arange(cfg.max_minis)[None, :],
                                   cfg.max_minis), axis=-1)
     position = jnp.where(mapped & (position < 2 ** 30), position, -1)
+    distance2 = _runner_up_distance(aff_end, cand_pos, position,
+                                    cfg.eth, cfg.sat_affine)
+    distance2 = _co_optimal_runner_up(lin_end, occ_idx, mini_pos, positions,
+                                      position, best_m, best_aff,
+                                      distance2, cfg)
 
     # traceback for the winning instance only
     sel_dirs = jnp.take_along_axis(
@@ -212,9 +222,51 @@ def map_reads_jax(uniq_kmers, offsets, positions, segments, reads,
     ops = jnp.where(mapped[:, None], ops, affine_wf.OP_NONE)
     op_count = jnp.where(mapped, op_count, 0)
 
-    return dict(position=position, distance=best_aff, mapped=mapped, ops=ops,
-                op_count=op_count, linear_dist=lin_end,
+    return dict(position=position, distance=best_aff, distance2=distance2,
+                mapped=mapped, ops=ops, op_count=op_count,
+                linear_dist=lin_end,
                 n_candidates=jnp.sum(occ_valid, axis=(1, 2)))
+
+
+def _runner_up_distance(aff_end, cand_pos, position, eth: int, sat: int):
+    """Best affine distance among candidates at a *different* locus than
+    the winner (more than the band half-width away — candidates within
+    ``eth`` of the winning position are the same alignment seeded from
+    another minimizer, not a competitor).  ``sat`` when no competing
+    locus exists; both engines share this so their ``distance2`` is
+    bit-identical like the rest of the result."""
+    far = jnp.abs(cand_pos - position[:, None]) > eth
+    key = jnp.where((aff_end < sat) & far & (cand_pos >= 0), aff_end, sat)
+    return jnp.min(key, axis=-1).astype(jnp.int32)
+
+
+def _co_optimal_runner_up(lin_end, occ_idx, mini_pos, positions, position,
+                          best_m, best_aff, distance2, cfg: MapperConfig):
+    """Fold placement-level competitors into ``distance2``.
+
+    The per-(read, minimizer) reduce collapses placements with
+    ``argmin`` (ties -> lowest index), so a repeat copy whose placements
+    share *all* the winner's minimizers never reaches the affine survey
+    — an ambiguous read would look unique and earn maximal MAPQ.  The
+    linear stage's full ``(R, M, P)`` distances still see every
+    placement: any far-locus placement at most the filter threshold is a
+    competitor, its affine distance estimated as the winner's plus its
+    linear-distance excess (exact for exact repeat copies, where the
+    excess is 0)."""
+    eth, sat = cfg.eth, cfg.sat_affine
+    sat_lin = jnp.int32(eth + 1)
+    pos_all = positions[occ_idx] - mini_pos[..., None]         # (R, M, P)
+    far = jnp.abs(pos_all - position[:, None, None]) > eth
+    # min(thr, eth) keeps the linear sat value (= invalid/absent slots)
+    # out even when the filter threshold is set above the band
+    cand = far & (lin_end <= min(cfg.filter_threshold, eth))
+    min_far = jnp.min(jnp.where(cand, lin_end, sat_lin), axis=(1, 2))
+    lin_w_all = jnp.min(lin_end, axis=-1)                      # (R, M)
+    lin_w = jnp.take_along_axis(lin_w_all, best_m[:, None], 1)[:, 0]
+    est = jnp.minimum(best_aff + jnp.maximum(min_far - lin_w, 0), sat)
+    return jnp.where(min_far < sat_lin,
+                     jnp.minimum(distance2, est.astype(jnp.int32)),
+                     distance2)
 
 
 # --------------------------------------------------------------------------
@@ -253,10 +305,14 @@ def _linear_stage_impl(segments, reads, occ_idx, occ_valid, mini_pos,
 
 
 def _affine_stage_impl(segments, positions, reads, occ_idx, mini_pos, best_pl,
-                       pass_filter, cfg: MapperConfig, cap: int):
+                       pass_filter, lin_end_full, cfg: MapperConfig,
+                       cap: int):
     """(5)+(7): distance-only affine WF on the compacted filter survivors,
     then the per-read winner reduce (identical tie-breaking to the padded
-    engine: min distance, ties -> leftmost position)."""
+    engine: min distance, ties -> leftmost position).  ``lin_end_full``
+    is the linear stage's (R, M, P) distance tensor, surveyed for
+    placement-level co-optimal competitors the per-minimizer collapse
+    hides (see ``_co_optimal_runner_up``)."""
     R = reads.shape[0]
     M = cfg.max_minis
     sat = cfg.sat_affine
@@ -288,7 +344,12 @@ def _affine_stage_impl(segments, positions, reads, occ_idx, mini_pos, best_pl,
     best_m = jnp.argmin(jnp.where(pos_key == position[:, None],
                                   jnp.arange(M)[None, :], M), axis=-1)
     position = jnp.where(mapped & (position < 2 ** 30), position, -1)
-    return best_aff, mapped, position, best_m
+    distance2 = _runner_up_distance(aff_end, cand_pos, position,
+                                    cfg.eth, sat)
+    distance2 = _co_optimal_runner_up(lin_end_full, occ_idx, mini_pos,
+                                      positions, position, best_m,
+                                      best_aff, distance2, cfg)
+    return best_aff, mapped, position, best_m, distance2
 
 
 _linear_stage = partial(jax.jit, static_argnames=("cfg", "cap"))(
@@ -410,9 +471,9 @@ class _ChunkPipeline:
                        int(jnp.sum(pass_filter[:n_real])))
         aff_cap = bucket_capacity(n_surv, align=cfg.aff_block_r,
                                   cap_max=R * M)
-        best_aff, mapped, position, best_m = self.aff_jit(
+        best_aff, mapped, position, best_m, distance2 = self.aff_jit(
             segments, positions, reads, occ_idx, mini_pos, best_pl,
-            pass_filter, cfg, aff_cap)
+            pass_filter, lin_end, cfg, aff_cap)
         if times is not None:
             position.block_until_ready()
         t0 = streaming.timed(times, "affine", t0)
@@ -430,7 +491,8 @@ class _ChunkPipeline:
                      affine_dist_instances=aff_cap,
                      padded_affine_instances=n_real * M,
                      affine_dirs_instances=n_real)
-        out = dict(position=position, distance=best_aff, mapped=mapped,
+        out = dict(position=position, distance=best_aff,
+                   distance2=distance2, mapped=mapped,
                    ops=ops, op_count=op_count, linear_dist=lin_end,
                    n_candidates=n_cand)
         return out, stats, n_real

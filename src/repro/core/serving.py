@@ -33,7 +33,8 @@ import dataclasses
 import numpy as np
 
 from .compaction import bucket_capacity
-from .mapper import Mapper, MapperStats, accumulate_stats
+from .mapper import (_PER_READ_FIELDS, Mapper, MapperStats,
+                     accumulate_stats, split_result)
 from .pipeline import MapperConfig, MappingResult
 
 
@@ -111,8 +112,9 @@ class ReadBatcher:
         return reads, buckets, spans
 
 
-_RESULT_FIELDS = ("position", "distance", "mapped", "strand", "ops",
-                  "op_count", "linear_dist", "n_candidates")
+# the per-read MappingResult fields, shared with mapper.split_result so
+# reassembly and pair splitting cannot drift apart
+_RESULT_FIELDS = _PER_READ_FIELDS
 
 _TOTAL_FIELDS = ("reads", "candidates", "survivors", "affine_instances",
                  "padded_affine_instances", "dropped_send", "dropped_affine",
@@ -145,9 +147,24 @@ class MappingService:
         self.cfg = self.mapper.cfg
         self.batcher = ReadBatcher(self.cfg.read_len, batcher)
         self.totals = {k: 0 for k in _TOTAL_FIELDS}
+        self._paired: set[int] = set()
 
     def submit(self, reads: np.ndarray) -> int:
         return self.batcher.submit(reads)
+
+    def submit_paired(self, reads1: np.ndarray, reads2: np.ndarray) -> int:
+        """Queue a paired-end request: mates ride the bucket pipeline as
+        one stacked block (R1 rows then R2 rows), and ``flush`` hands the
+        request back as a ``(res1, res2)`` per-mate tuple instead of one
+        ``MappingResult`` — the serving-layer face of
+        ``Mapper.map_pairs``."""
+        reads1, reads2 = np.asarray(reads1), np.asarray(reads2)
+        if reads1.shape != reads2.shape:
+            raise ValueError(f"mate batches must align pairwise: "
+                             f"{reads1.shape} vs {reads2.shape}")
+        rid = self.batcher.submit(np.concatenate([reads1, reads2]))
+        self._paired.add(rid)
+        return rid
 
     def _accumulate(self, parts: list[MappingResult]) -> None:
         for p in parts:
@@ -187,8 +204,12 @@ class MappingService:
         fields = {f: cat(f) for f in _RESULT_FIELDS}
         out = {}
         for rid, (lo, hi_) in spans.items():
-            out[rid] = MappingResult(
+            res = MappingResult(
                 **{f: (v[lo:hi_] if v is not None else None)
                    for f, v in fields.items()},
                 stats=None)
+            if rid in self._paired:
+                self._paired.discard(rid)
+                res = split_result(res, (hi_ - lo) // 2)
+            out[rid] = res
         return out

@@ -35,8 +35,20 @@ for _i, _c in enumerate("ACGT"):
 
 
 def _open(path_or_handle, mode="r"):
+    """Open a path (gzip-transparent) or pass a handle through.
+
+    Returns ``(handle, owned)``.  Paths ending in ``.gz`` open through
+    ``gzip`` in text mode, so every reader and writer built on this —
+    FASTA/FASTQ parsing, the simulator's ``write_fasta``/``write_fastq``
+    — handles ``.fastq.gz`` files with zero caller changes.  Compression
+    is detected by extension, not magic bytes: a misnamed file fails fast
+    in the parser instead of silently streaming gzip framing as bases.
+    """
     if hasattr(path_or_handle, "read") or hasattr(path_or_handle, "write"):
         return path_or_handle, False
+    if str(path_or_handle).endswith(".gz"):
+        import gzip
+        return gzip.open(path_or_handle, mode + "t"), True
     return open(path_or_handle, mode), True
 
 

@@ -14,10 +14,22 @@ Both are counted (``n_truncated`` / ``n_skipped``) so silent data loss
 is impossible.  Read bases outside ACGT encode to A (the 2-bit k-mer
 alphabet has no N slot — same policy as ``core.encoding.encode_str``);
 qualities ride along as raw phred+33 bytes for SAM emission.
+
+``.fastq.gz`` paths stream through gzip transparently (``fasta._open``)
+and parse bit-identically to the plain file; a truncated gzip stream
+raises a ``ValueError`` naming the failure instead of ending the read
+set early as if the file were complete.
+
+``PairedFastqStream`` is the paired-end entry: two R1/R2 files (or one
+interleaved file) iterated in lockstep as ``(chunk1, chunk2)`` pairs,
+with mate names cross-checked (``/1``/``/2`` suffixes stripped) and the
+length policy applied *per pair* — if either mate is too short the whole
+pair is skipped, so the two chunks stay index-aligned mate-for-mate.
 """
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Iterator
 
 import numpy as np
@@ -25,6 +37,19 @@ import numpy as np
 from ..core.encoding import encode_str
 
 DEFAULT_CHUNK_READS = 1024
+
+# trailing mate designator: read7/1, read7/2.  ONLY the '/1'-'/2'
+# convention is stripped — '.1'/'_1' are real name parts in the wild
+# (SRA spot names are 'SRR123.1', 'SRR123.2', ... for *different*
+# templates; stripping those would conflate them into one QNAME)
+_MATE_SUFFIX_RE = re.compile(r"/[12]$")
+
+
+def mate_base_name(name: str) -> str:
+    """QNAME with a trailing ``/1``/``/2`` mate designator stripped —
+    the canonical template name both mates must share (and the QNAME the
+    SAM spec wants: identical for both records of a pair)."""
+    return _MATE_SUFFIX_RE.sub("", name)
 
 
 @dataclasses.dataclass
@@ -93,6 +118,14 @@ class FastqStream:
         if self._peeked is not None:
             rec, self._peeked = self._peeked, None
             return rec
+        try:
+            return self._parse_record()
+        except EOFError as e:  # gzip: stream ends before the EOF marker
+            raise ValueError(
+                "truncated gzip FASTQ stream (compressed file ended "
+                f"mid-record): {e}") from e
+
+    def _parse_record(self):
         head = self._f.readline()
         while head is not None and head.strip() == "" and head != "":
             head = self._f.readline()
@@ -155,3 +188,115 @@ def parse_fastq(path_or_handle, read_len: int | None = None,
     stream object; use the class when you need them)."""
     return iter(FastqStream(path_or_handle, read_len=read_len,
                             chunk_reads=chunk_reads))
+
+
+class _ChunkBuilder:
+    """Accumulates records into one ReadChunk (shared by the two mates
+    of ``PairedFastqStream`` so their policy cannot drift)."""
+
+    def __init__(self, read_len: int):
+        self.rl = read_len
+        self.names, self.reads, self.quals, self.seqs = [], [], [], []
+
+    def add(self, name: str, seq: str, qual: str) -> None:
+        rl = self.rl
+        self.names.append(name)
+        self.reads.append(_encode_read(seq, rl))
+        self.quals.append(np.frombuffer(qual[:rl].encode("ascii"),
+                                        dtype=np.uint8))
+        self.seqs.append(seq[:rl])
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+    def emit(self) -> ReadChunk:
+        chunk = ReadChunk(self.names, np.stack(self.reads),
+                          np.stack(self.quals), self.seqs)
+        self.names, self.reads, self.quals, self.seqs = [], [], [], []
+        return chunk
+
+
+class PairedFastqStream:
+    """Iterate paired-end FASTQ as lockstep ``(chunk1, chunk2)`` batches.
+
+    Two source layouts:
+
+    * two files — ``PairedFastqStream(r1_path, r2_path)``: record *i* of
+      R1 pairs with record *i* of R2;
+    * interleaved — ``PairedFastqStream(path, interleaved=True)``:
+      records ``2i``/``2i+1`` are the R1/R2 mates of pair *i*.
+
+    Both mates must share a template name once the ``/1``/``/2``-style
+    suffix is stripped (``mate_base_name``); a mismatch or a mate count
+    imbalance raises instead of silently re-pairing.  The fixed-length
+    policy is applied per *pair*: if either mate is shorter than
+    ``read_len`` the whole pair is skipped (``n_skipped`` counts pairs),
+    so ``chunk1[i]`` and ``chunk2[i]`` are always mates.  ``names`` on
+    the emitted chunks carry the shared template name — exactly the SAM
+    QNAME both records of the pair must use.
+
+    ``.gz`` paths stream through gzip transparently on either layout.
+    """
+
+    def __init__(self, r1, r2=None, *, interleaved: bool = False,
+                 read_len: int | None = None,
+                 chunk_reads: int = DEFAULT_CHUNK_READS):
+        if interleaved and r2 is not None:
+            raise ValueError("interleaved=True takes a single source; "
+                             "r2 must be None")
+        if not interleaved and r2 is None:
+            raise ValueError("paired input needs r2 (or interleaved=True)")
+        if chunk_reads < 1:
+            raise ValueError(f"chunk_reads={chunk_reads!r} must be >= 1")
+        self.interleaved = interleaved
+        self.chunk_reads = chunk_reads
+        self._s1 = FastqStream(r1, read_len=read_len, chunk_reads=chunk_reads)
+        self.read_len = self._s1.read_len
+        self._s2 = (self._s1 if interleaved else
+                    FastqStream(r2, read_len=self.read_len,
+                                chunk_reads=chunk_reads))
+        self.n_pairs = 0      # pairs emitted (post length policy)
+        self.n_skipped = 0    # pairs dropped because a mate was short
+        self.n_truncated = 0  # mates longer than read_len (counted singly)
+
+    def _next_pair(self):
+        r1 = self._s1._next_record()
+        r2 = self._s2._next_record()
+        if r1 is None and r2 is None:
+            return None
+        if (r1 is None) != (r2 is None):
+            which = "R2" if r1 is None else "R1"
+            raise ValueError(f"unpaired FASTQ input: {which} ended before "
+                             f"its mate stream")
+        b1, b2 = mate_base_name(r1[0]), mate_base_name(r2[0])
+        if b1 != b2:
+            raise ValueError(f"mate name mismatch: {r1[0]!r} vs {r2[0]!r} "
+                             f"(template {b1!r} != {b2!r})")
+        return b1, r1, r2
+
+    def __iter__(self) -> Iterator[tuple[ReadChunk, ReadChunk]]:
+        rl = self.read_len
+        c1, c2 = _ChunkBuilder(rl), _ChunkBuilder(rl)
+        try:
+            while True:
+                pair = self._next_pair()
+                if pair is None:
+                    break
+                base, (_, s1, q1), (_, s2, q2) = pair
+                if len(s1) < rl or len(s2) < rl:
+                    self.n_skipped += 1  # pair integrity: drop both mates
+                    continue
+                self.n_truncated += (len(s1) > rl) + (len(s2) > rl)
+                c1.add(base, s1, q1)
+                c2.add(base, s2, q2)
+                if len(c1) == self.chunk_reads:
+                    self.n_pairs += len(c1)
+                    yield c1.emit(), c2.emit()
+            if len(c1):
+                self.n_pairs += len(c1)
+                yield c1.emit(), c2.emit()
+        finally:
+            if self._s1._owned:
+                self._s1._f.close()
+            if not self.interleaved and self._s2._owned:
+                self._s2._f.close()

@@ -2,18 +2,27 @@
 
     PYTHONPATH=src python -m repro.launch.map_fastq ref.fa reads.fq \
         -o out.sam
-    PYTHONPATH=src python -m repro.launch.map_fastq ref.fa reads.fq \
-        -o out.sam --topology mesh --shards 4
+    PYTHONPATH=src python -m repro.launch.map_fastq ref.fa \
+        --r1 reads_R1.fastq.gz --r2 reads_R2.fastq.gz -o out.sam
+    PYTHONPATH=src python -m repro.launch.map_fastq ref.fa pairs.fq \
+        --interleaved -o out.sam --topology mesh --shards 4
 
 The real-data boundary of the reproduction: a (multi-contig) FASTA
 reference is indexed, FASTQ reads stream through the session in
 ``--chunk-reads`` batches — each chunk mapped on **both strands**
 (forward + reverse complement; ``--single-strand`` disables) — and
-spec-valid SAM comes out (@SQ per contig, FLAG 0x4/0x10, 1-based POS,
-``=``/``X``/``I``/``D`` CIGARs from the affine-WF traceback, NM from the
-WF distance).  ``--topology mesh`` routes chunks onto the distributed
-all_to_all mapper; its stage B computes distances/positions only, so
-mesh records carry CIGAR ``*`` (strand/POS/NM still present).
+spec-valid SAM comes out.  Plain and ``.gz`` FASTQ parse identically.
+
+Single-end input (one positional FASTQ) emits FLAG 0x4/0x10 records
+with MAPQ 255 (no quality model on this path — unchanged output).
+Paired-end input (``--r1``/``--r2`` or ``--interleaved``) maps both
+mates of every pair in one stacked batch, resolves proper pairs
+host-side (FR orientation, insert window from a running median, mate
+rescue — see ``repro.core.pairing``) and emits the full pairing FLAGs
+(0x1/0x2/0x8/0x20/0x40/0x80), RNEXT/PNEXT/TLEN, and calibrated MAPQ.
+``--topology mesh`` routes chunks onto the distributed all_to_all
+mapper; its stage B computes distances/positions only, so mesh records
+carry CIGAR ``*`` (strand/POS/NM/pairing still present).
 
 Progress and the closing unified-stats lines go to stderr, so ``-o -``
 pipes clean SAM to stdout.
@@ -26,17 +35,46 @@ import sys
 import time
 
 
+def _open_stream(args):
+    """Build the FASTQ stream per input layout -> (stream, paired)."""
+    from repro.io.fastq import FastqStream, PairedFastqStream
+
+    if args.r2 is not None and args.r1 is None:
+        raise SystemExit("map_fastq: --r2 needs --r1")
+    if args.r1 is not None:
+        if args.reads is not None:
+            raise SystemExit("map_fastq: pass either a positional FASTQ or "
+                             "--r1/--r2, not both")
+        if args.r2 is None:
+            raise SystemExit("map_fastq: --r1 needs --r2 (or use "
+                             "--interleaved with a single file)")
+        if args.interleaved:
+            raise SystemExit("map_fastq: --interleaved takes a single "
+                             "positional FASTQ, not --r1/--r2")
+        return PairedFastqStream(args.r1, args.r2, read_len=args.read_len,
+                                 chunk_reads=args.chunk_reads), True
+    if args.reads is None:
+        raise SystemExit("map_fastq: no reads given (positional FASTQ or "
+                         "--r1/--r2)")
+    if args.interleaved:
+        return PairedFastqStream(args.reads, interleaved=True,
+                                 read_len=args.read_len,
+                                 chunk_reads=args.chunk_reads), True
+    return FastqStream(args.reads, read_len=args.read_len,
+                       chunk_reads=args.chunk_reads), False
+
+
 def run(args) -> int:
     from repro.core.index import build_index
     from repro.core.mapper import Mapper, accumulate_stats
+    from repro.core.pairing import InsertSizeTracker, resolve_pairs
     from repro.core.pipeline import MapperConfig
     from repro.io.fasta import ReferenceMap, load_reference
-    from repro.io.fastq import FastqStream
-    from repro.io.sam import emit_alignments, sam_header
+    from repro.io.sam import (emit_alignments, emit_paired_alignments,
+                              sam_header)
 
     t0 = time.perf_counter()
-    stream = FastqStream(args.reads, read_len=args.read_len,
-                         chunk_reads=args.chunk_reads)
+    stream, paired = _open_stream(args)
     rl = stream.read_len
     # spacer >= one alignment window: no read can map across a boundary
     ref, contigs = load_reference(args.reference, spacer=rl + 2 * args.eth)
@@ -48,32 +86,63 @@ def run(args) -> int:
         both_strands=not args.single_strand)
     mapper = Mapper(idx, cfg, topology=args.topology, n_shards=args.shards)
     print(f"map_fastq: {len(contigs)} contig(s), {len(ref)} indexed bases, "
-          f"read_len={rl}, topology={mapper.topology}, "
+          f"read_len={rl}, topology={mapper.topology}, paired={paired}, "
           f"both_strands={cfg.both_strands}, engine={cfg.engine}, "
           f"wf_backend={cfg.wf_backend}", file=sys.stderr)
 
     out = sys.stdout if args.output == "-" else open(args.output, "w")
     totals = dict(reads=0, mapped=0, reverse_best=0, survivors=0,
                   affine_instances=0, padded_affine_instances=0,
-                  dropped_send=0, dropped_affine=0)
+                  dropped_send=0, dropped_affine=0,
+                  pairs=0, proper=0, rescued=0)
     saw_stats = False
+    tracker = InsertSizeTracker()
+    contig_starts = [c.offset for c in contigs]
     try:
         for line in sam_header(contigs,
                                command_line=" ".join(sys.argv)):
             out.write(line + "\n")
         t_map = time.perf_counter()
         for i, chunk in enumerate(stream):
-            res = mapper.map(chunk.reads)
-            for rec in emit_alignments(res, chunk.names, chunk.reads,
-                                       chunk.quals, refmap,
-                                       seqs=chunk.seqs):
-                out.write(rec + "\n")
-            totals["reads"] += len(chunk)
-            totals["mapped"] += int(res.mapped.sum())
-            if res.strand is not None:  # from the result, not the stats:
-                #                         the padded engine has stats=None
-                totals["reverse_best"] += int((res.strand
-                                               & res.mapped).sum())
+            if paired:
+                c1, c2 = chunk
+                res1, res2 = mapper.map_pairs(c1.reads, c2.reads)
+                pr = resolve_pairs(res1, res2, cfg=cfg, tracker=tracker,
+                                   ref=ref, reads1=c1.reads,
+                                   reads2=c2.reads,
+                                   contig_starts=contig_starts)
+                for rec in emit_paired_alignments(
+                        pr, c1.names, c1.reads, c1.quals, c2.reads,
+                        c2.quals, refmap, seqs1=c1.seqs, seqs2=c2.seqs):
+                    out.write(rec + "\n")
+                n_new = 2 * len(c1)
+                n_mapped = int(pr.res1.mapped.sum() + pr.res2.mapped.sum())
+                res = res1  # stats object is shared by both halves
+                for r in (pr.res1, pr.res2):
+                    if r.strand is not None:
+                        totals["reverse_best"] += int((r.strand
+                                                       & r.mapped).sum())
+                totals["pairs"] += pr.stats["n_pairs"]
+                totals["proper"] += pr.stats["n_proper"]
+                totals["rescued"] += pr.stats["n_rescued"]
+                extra = (f", proper {pr.stats['n_proper']}/"
+                         f"{pr.stats['n_pairs']} "
+                         f"(insert median {pr.stats['insert_median']})")
+            else:
+                res = mapper.map(chunk.reads)
+                for rec in emit_alignments(res, chunk.names, chunk.reads,
+                                           chunk.quals, refmap,
+                                           seqs=chunk.seqs):
+                    out.write(rec + "\n")
+                n_new = len(chunk)
+                n_mapped = int(res.mapped.sum())
+                if res.strand is not None:  # from the result, not stats:
+                    #                         the padded engine has stats=None
+                    totals["reverse_best"] += int((res.strand
+                                                   & res.mapped).sum())
+                extra = ""
+            totals["reads"] += n_new
+            totals["mapped"] += n_mapped
             if res.stats is not None:
                 saw_stats = True
                 accumulate_stats(totals, res.stats, fields=(
@@ -81,9 +150,10 @@ def run(args) -> int:
                     "padded_affine_instances", "dropped_send",
                     "dropped_affine"))
             rate = totals["reads"] / max(time.perf_counter() - t_map, 1e-9)
-            print(f"chunk {i}: {len(chunk)} reads, "
-                  f"mapped {res.mapped.mean():.3f} "
-                  f"(cumulative {totals['reads']} reads, {rate:.0f} reads/s)",
+            print(f"chunk {i}: {n_new} reads, "
+                  f"mapped {n_mapped / max(n_new, 1):.3f} "
+                  f"(cumulative {totals['reads']} reads, {rate:.0f} reads/s)"
+                  f"{extra}",
                   file=sys.stderr)
     finally:
         if out is not sys.stdout:
@@ -98,6 +168,11 @@ def run(args) -> int:
           f"mapped {totals['mapped']} "
           f"({totals['reverse_best']} reverse-strand){skipped}",
           file=sys.stderr)
+    if paired:
+        lo, hi = tracker.window()
+        print(f"pairing: {totals['proper']}/{totals['pairs']} proper, "
+              f"{totals['rescued']} rescued, insert median "
+              f"{tracker.median} window [{lo}, {hi}]", file=sys.stderr)
     if saw_stats:
         from repro.launch.serve import _print_mapper_stats
         _print_mapper_stats(mapper, totals, file=sys.stderr)
@@ -114,7 +189,17 @@ def main():
                     "emit SAM.")
     ap.add_argument("reference", help="FASTA reference (multi-contig ok; "
                                       "N -> never-matching sentinel)")
-    ap.add_argument("reads", help="FASTQ reads (4-line records)")
+    ap.add_argument("reads", nargs="?", default=None,
+                    help="FASTQ reads (4-line records; .gz ok) — "
+                         "single-end, or interleaved pairs with "
+                         "--interleaved")
+    ap.add_argument("--r1", default=None,
+                    help="paired-end R1 FASTQ (.gz ok); requires --r2")
+    ap.add_argument("--r2", default=None,
+                    help="paired-end R2 FASTQ (.gz ok)")
+    ap.add_argument("--interleaved", action="store_true",
+                    help="the positional FASTQ holds interleaved R1/R2 "
+                         "records")
     ap.add_argument("-o", "--output", default="-",
                     help="output SAM path ('-' = stdout; progress goes to "
                          "stderr either way)")

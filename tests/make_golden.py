@@ -1,0 +1,33 @@
+"""Regenerate the golden paired-end SAM conformance file.
+
+    PYTHONPATH=src python tests/make_golden.py
+
+Only run this after a *deliberate* output-format or model change, and
+review the diff of tests/golden/paired_small.sam like any other code
+change — the golden test exists to make silent drift impossible.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:  # same fallback as tests/conftest.py
+    sys.path.append(os.path.join(os.path.dirname(__file__), "_stubs"))
+
+
+def main():
+    import test_pairing_properties as tpp
+
+    text, pr, _ = tpp._paired_sam(tpp._world(), seed=779)
+    out = os.path.join(tpp.GOLDEN_DIR, "paired_small.sam")
+    os.makedirs(tpp.GOLDEN_DIR, exist_ok=True)
+    with open(out, "w") as f:
+        f.write(text)
+    print(f"wrote {out}: {len(text.splitlines())} lines, "
+          f"{pr.stats['n_proper']}/{pr.stats['n_pairs']} proper")
+
+
+if __name__ == "__main__":
+    main()

@@ -173,3 +173,94 @@ def test_validate_sam_requires_header():
         validate_sam("r\t4\t*\t0\t0\t*\t*\t0\t0\tA\tI\n")
     with pytest.raises(AssertionError, match="@SQ"):
         validate_sam("@HD\tVN:1.6\n")
+
+
+# -------------------------------------------- validator tightening (PR 5)
+
+def test_validate_sam_mapq_tightening():
+    """Regression: the validator used to accept any 0..255 MAPQ on mapped
+    records; with require_mapq it now rejects the 255 'unavailable'
+    placeholder (and always rejects values past 255)."""
+    ok = sam_record("r", 0, "chr1", 5, 60, "4=", "ACGT", "IIII")
+    legacy = sam_record("r", 0, "chr1", 5, 255, "4=", "ACGT", "IIII")
+    validate_sam(_doc([ok]), require_mapq=True)
+    validate_sam(_doc([legacy]))  # single-end default: 255 still legal
+    with pytest.raises(AssertionError, match="MAPQ 255"):
+        validate_sam(_doc([legacy]), require_mapq=True)
+    with pytest.raises(AssertionError, match="MAPQ"):
+        validate_sam(_doc([sam_record("r", 0, "chr1", 5, 300, "4=",
+                                      "ACGT", "IIII")]))
+    # unmapped records keep MAPQ 0 regardless
+    unm = sam_record("r", 4, "*", 0, 0, "*", "ACGT", "IIII")
+    validate_sam(_doc([unm]), require_mapq=True)
+
+
+def test_validate_sam_rnext_cross_checks():
+    """Regression: RNEXT was previously unchecked — '=' with RNAME '*',
+    unknown mate contigs, and PNEXT/TLEN on RNEXT '*' all slipped
+    through."""
+    with pytest.raises(AssertionError, match="RNAME is '\\*'"):
+        validate_sam(_doc([sam_record("r", 4, "*", 0, 0, "*", "ACGT",
+                                      "IIII", rnext="=", pnext=5)]))
+    with pytest.raises(AssertionError, match="neither"):
+        validate_sam(_doc([sam_record("r", 0, "chr1", 5, 60, "4=", "ACGT",
+                                      "IIII", rnext="chrMissing")]))
+    with pytest.raises(AssertionError, match="PNEXT/TLEN"):
+        validate_sam(_doc([sam_record("r", 0, "chr1", 5, 60, "4=", "ACGT",
+                                      "IIII", rnext="*", pnext=9)]))
+    with pytest.raises(AssertionError, match="PNEXT"):
+        validate_sam(_doc([sam_record("r", 0, "chr1", 5, 60, "4=", "ACGT",
+                                      "IIII", rnext="=", pnext=5000)]))
+    # and the well-formed spellings all pass
+    validate_sam(_doc([sam_record("r", 0, "chr1", 5, 60, "4=", "ACGT",
+                                  "IIII", rnext="=", pnext=9)]))
+
+
+def test_validate_sam_paired_only_flags_need_0x1():
+    with pytest.raises(AssertionError, match="without 0x1"):
+        validate_sam(_doc([sam_record("r", 0x40, "chr1", 5, 60, "4=",
+                                      "ACGT", "IIII")]))
+
+
+def _pair(flag1, flag2, *, pos1=5, pos2=40, tlen1=75, tlen2=-75,
+          rnext1="=", rnext2="=", pnext1=None, pnext2=None):
+    r1 = sam_record("t", flag1, "chr1" if not flag1 & 0x4 else "*",
+                    pos1 if not flag1 & 0x4 else 0,
+                    60 if not flag1 & 0x4 else 0,
+                    "4=" if not flag1 & 0x4 else "*", "ACGT", "IIII",
+                    rnext=rnext1,
+                    pnext=pnext1 if pnext1 is not None else pos2,
+                    tlen=tlen1)
+    r2 = sam_record("t", flag2, "chr1" if not flag2 & 0x4 else "*",
+                    pos2 if not flag2 & 0x4 else 0,
+                    60 if not flag2 & 0x4 else 0,
+                    "4=" if not flag2 & 0x4 else "*", "ACGT", "IIII",
+                    rnext=rnext2,
+                    pnext=pnext2 if pnext2 is not None else pos1,
+                    tlen=tlen2)
+    return _doc([r1, r2])
+
+
+def test_validate_sam_pair_consistency():
+    st_ = validate_sam(_pair(0x63, 0x93))  # 99/147: proper FR pair
+    assert st_["n_paired"] == 2 and st_["n_proper"] == 1
+    # TLEN must be symmetric
+    with pytest.raises(AssertionError, match="TLEN not symmetric"):
+        validate_sam(_pair(0x63, 0x93, tlen2=75))
+    # both mates claiming R1
+    with pytest.raises(AssertionError, match="same mate slot"):
+        validate_sam(_pair(0x63, 0x53))
+    # 0x2 with an unmapped mate (0x8 missing on the mapped record)
+    with pytest.raises(AssertionError, match="0x8 does not mirror|proper"):
+        validate_sam(_pair(0x63, 0x97, rnext2="chr1", tlen1=0, tlen2=0))
+    # 0x20 not mirroring the mate's 0x10
+    with pytest.raises(AssertionError, match="0x20"):
+        validate_sam(_pair(0x43, 0x93, tlen1=75))
+    # PNEXT pointing away from the mate
+    with pytest.raises(AssertionError, match="RNEXT/PNEXT"):
+        validate_sam(_pair(0x63, 0x93, pnext1=7))
+    # a lone paired record (mate record missing entirely)
+    with pytest.raises(AssertionError, match="not 2"):
+        validate_sam(_doc([sam_record("t", 0x63, "chr1", 5, 60, "4=",
+                                      "ACGT", "IIII", rnext="=", pnext=40,
+                                      tlen=75)]))

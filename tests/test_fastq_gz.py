@@ -1,0 +1,178 @@
+"""gzip FASTQ ingestion: .fastq.gz parses bit-identically to the plain
+file (same ReadChunks, same skip/truncate counters), the truncated-gzip
+failure mode raises instead of silently ending the read set, and the
+paired reader walks two gzip files / one interleaved file in lockstep
+with per-pair length policy and mate-name checks."""
+import gzip
+
+import numpy as np
+import pytest
+
+from repro.data.genome import (make_reference, sample_pairs, sample_reads,
+                               write_fastq, write_fastq_pair)
+from repro.io.fastq import FastqStream, PairedFastqStream, mate_base_name
+
+
+@pytest.fixture(scope="module")
+def world(tmp_path_factory):
+    d = tmp_path_factory.mktemp("fastq_gz")
+    ref = make_reference(4000, seed=21)
+    rs = sample_reads(ref, 33, read_len=90, seed=22, both_strands=True)
+    names = [f"r{i}" for i in range(33)]
+    write_fastq(d / "reads.fq", rs, names=names)
+    write_fastq(d / "reads.fastq.gz", rs, names=names)
+    return d, ref
+
+
+def _drain(stream):
+    chunks = list(stream)
+    return (np.concatenate([c.reads for c in chunks]),
+            np.concatenate([c.quals for c in chunks]),
+            [n for c in chunks for n in c.names],
+            [s for c in chunks for s in c.seqs])
+
+
+def test_gzip_parses_bit_identical_to_plain(world):
+    d, _ = world
+    plain = FastqStream(str(d / "reads.fq"), chunk_reads=10)
+    gz = FastqStream(str(d / "reads.fastq.gz"), chunk_reads=10)
+    assert gz.read_len == plain.read_len == 90
+    pr, pq, pn, ps = _drain(plain)
+    gr, gq, gn, gs = _drain(gz)
+    np.testing.assert_array_equal(pr, gr)
+    np.testing.assert_array_equal(pq, gq)
+    assert pn == gn and ps == gs
+    assert (gz.n_reads, gz.n_skipped, gz.n_truncated) == \
+        (plain.n_reads, plain.n_skipped, plain.n_truncated) == (33, 0, 0)
+
+
+def test_gzip_length_policy_counters_match_plain(tmp_path):
+    txt = ("@long\n" + "A" * 12 + "\n+\n" + "I" * 12 + "\n"
+           "@short\nACG\n+\nIII\n"
+           "@exact\n" + "C" * 8 + "\n+\n" + "#" * 8 + "\n")
+    (tmp_path / "p.fq").write_text(txt)
+    with gzip.open(tmp_path / "p.fastq.gz", "wt") as f:
+        f.write(txt)
+    out = []
+    for name in ("p.fq", "p.fastq.gz"):
+        s = FastqStream(str(tmp_path / name), read_len=8, chunk_reads=64)
+        (chunk,) = list(s)
+        out.append((chunk.names, chunk.reads.tobytes(),
+                    s.n_reads, s.n_skipped, s.n_truncated))
+    assert out[0] == out[1]
+    assert out[0][3] == 1 and out[0][4] == 1  # skip short, truncate long
+
+
+def test_truncated_gzip_stream_raises(tmp_path):
+    ref = make_reference(3000, seed=5)
+    rs = sample_reads(ref, 64, read_len=80, seed=6)
+    write_fastq(tmp_path / "full.fastq.gz", rs)
+    blob = (tmp_path / "full.fastq.gz").read_bytes()
+    (tmp_path / "cut.fastq.gz").write_bytes(blob[: len(blob) // 2])
+    stream = FastqStream(str(tmp_path / "cut.fastq.gz"), chunk_reads=16)
+    with pytest.raises((ValueError, EOFError), match="truncated|Compressed"):
+        for _ in stream:
+            pass
+    # and the records seen before the cut never silently count as a
+    # complete read set
+    assert stream.n_reads < 64
+
+
+def test_misnamed_gz_fails_fast(tmp_path):
+    """A gzip blob without the .gz suffix must error in the parser, not
+    stream compressed framing as bases."""
+    ref = make_reference(1000, seed=7)
+    rs = sample_reads(ref, 4, read_len=50, seed=8)
+    write_fastq(tmp_path / "x.fastq.gz", rs)
+    renamed = tmp_path / "x.fastq"
+    renamed.write_bytes((tmp_path / "x.fastq.gz").read_bytes())
+    with pytest.raises((ValueError, UnicodeDecodeError)):
+        list(FastqStream(str(renamed)))
+
+
+# ---------------------------------------------------------------- paired
+
+def test_mate_base_name():
+    assert mate_base_name("p7/1") == mate_base_name("p7/2") == "p7"
+    assert mate_base_name("plain") == "plain"
+    assert mate_base_name("x/12") == "x/12"  # only a trailing 1 or 2
+    # SRA spot names use '.N' for DIFFERENT templates — never stripped
+    # (conflating 'SRR123.1' and 'SRR123.2' would merge two spots)
+    assert mate_base_name("SRR123.1") == "SRR123.1"
+    assert mate_base_name("SRR123_2") == "SRR123_2"
+
+
+@pytest.fixture(scope="module")
+def paired_world(tmp_path_factory):
+    d = tmp_path_factory.mktemp("paired_gz")
+    ref = make_reference(8000, seed=31)
+    ps = sample_pairs(ref, 21, read_len=80, insert_mean=220, insert_sd=20,
+                      seed=32)
+    write_fastq_pair(str(d / "r1.fastq.gz"), str(d / "r2.fastq.gz"), ps)
+    write_fastq_pair(None, None, ps,
+                     interleaved_path=str(d / "inter.fastq.gz"))
+    return d, ps
+
+
+def test_paired_two_file_gz_roundtrip(paired_world):
+    d, ps = paired_world
+    stream = PairedFastqStream(str(d / "r1.fastq.gz"),
+                               str(d / "r2.fastq.gz"), chunk_reads=8)
+    assert stream.read_len == 80
+    pairs = list(stream)
+    assert [len(c1) for c1, _ in pairs] == [8, 8, 5]
+    for c1, c2 in pairs:
+        assert c1.names == c2.names  # shared template QNAMEs
+    np.testing.assert_array_equal(
+        np.concatenate([c1.reads for c1, _ in pairs]), ps.reads1)
+    np.testing.assert_array_equal(
+        np.concatenate([c2.reads for _, c2 in pairs]), ps.reads2)
+    np.testing.assert_array_equal(
+        np.concatenate([c2.quals for _, c2 in pairs]), ps.quals2)
+    assert stream.n_pairs == 21 and stream.n_skipped == 0
+
+
+def test_paired_interleaved_matches_two_file(paired_world):
+    d, ps = paired_world
+    two = PairedFastqStream(str(d / "r1.fastq.gz"), str(d / "r2.fastq.gz"),
+                            chunk_reads=64)
+    inter = PairedFastqStream(str(d / "inter.fastq.gz"), interleaved=True,
+                              chunk_reads=64)
+    (t1, t2), = list(two)
+    (i1, i2), = list(inter)
+    assert t1.names == i1.names
+    np.testing.assert_array_equal(t1.reads, i1.reads)
+    np.testing.assert_array_equal(t2.reads, i2.reads)
+    np.testing.assert_array_equal(t2.quals, i2.quals)
+
+
+def test_paired_skips_whole_pair_when_one_mate_short(tmp_path):
+    r1 = "@a/1\n" + "A" * 8 + "\n+\n" + "I" * 8 + "\n" \
+         "@b/1\n" + "C" * 8 + "\n+\n" + "I" * 8 + "\n"
+    r2 = "@a/2\nACG\n+\nIII\n" \
+         "@b/2\n" + "G" * 10 + "\n+\n" + "I" * 10 + "\n"
+    (tmp_path / "r1.fq").write_text(r1)
+    (tmp_path / "r2.fq").write_text(r2)
+    stream = PairedFastqStream(str(tmp_path / "r1.fq"),
+                               str(tmp_path / "r2.fq"), read_len=8)
+    (c1, c2), = list(stream)
+    # pair a dropped entirely (short R2), pair b kept (R2 truncated)
+    assert c1.names == c2.names == ["b"]
+    assert stream.n_skipped == 1 and stream.n_truncated == 1
+    assert c1.reads.shape == c2.reads.shape == (1, 8)
+
+
+def test_paired_name_mismatch_and_desync(tmp_path):
+    (tmp_path / "r1.fq").write_text("@a/1\nACGT\n+\nIIII\n")
+    (tmp_path / "r2.fq").write_text("@zz/2\nACGT\n+\nIIII\n")
+    with pytest.raises(ValueError, match="mate name mismatch"):
+        list(PairedFastqStream(str(tmp_path / "r1.fq"),
+                               str(tmp_path / "r2.fq")))
+    (tmp_path / "r1b.fq").write_text("@a/1\nACGT\n+\nIIII\n"
+                                     "@b/1\nACGT\n+\nIIII\n")
+    (tmp_path / "r2b.fq").write_text("@a/2\nACGT\n+\nIIII\n")
+    with pytest.raises(ValueError, match="unpaired FASTQ"):
+        list(PairedFastqStream(str(tmp_path / "r1b.fq"),
+                               str(tmp_path / "r2b.fq")))
+    with pytest.raises(ValueError, match="r2 must be None"):
+        PairedFastqStream("x.fq", "y.fq", interleaved=True)
