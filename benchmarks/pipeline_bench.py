@@ -63,10 +63,21 @@ def bench_pipeline(R: int = 4096, genome: int = 30_000,
             stream=False)
         engines["compacted_pallas"] = MapperConfig(
             engine="compacted", wf_backend="pallas", chunk_reads=chunk_reads)
+    # the single-dispatch engine: seed->filter->linear->affine->traceback
+    # in one jit per chunk, no post-filter host sync
+    engines["fused_jnp"] = MapperConfig(
+        engine="fused", wf_backend="jnp", chunk_reads=chunk_reads)
+    if include_pallas:
+        engines["fused_pallas_sync"] = MapperConfig(
+            engine="fused", wf_backend="pallas", chunk_reads=chunk_reads,
+            stream=False)
+        engines["fused_pallas"] = MapperConfig(
+            engine="fused", wf_backend="pallas", chunk_reads=chunk_reads)
 
     out = {"R": R, "genome": genome, "chunk_reads": chunk_reads,
            "engines": {}}
-    baseline = base_dt = sync_dt = None
+    baseline = base_dt = None
+    sync_dts = {}
     for name, cfg in engines.items():
         try:
             res, dt = _timed_map(idx, rs.reads, cfg)
@@ -87,10 +98,10 @@ def bench_pipeline(R: int = 4096, genome: int = 30_000,
             entry["matches_padded"] = bool(
                 (res.position == baseline.position).all()
                 and (res.distance == baseline.distance).all())
-        if name == "compacted_pallas_sync":
-            sync_dt = dt
-        elif name == "compacted_pallas" and sync_dt is not None:
-            entry["speedup_vs_sync"] = round(sync_dt / dt, 2)
+        if name.endswith("_sync"):
+            sync_dts[name[: -len("_sync")]] = dt
+        elif name in sync_dts:
+            entry["speedup_vs_sync"] = round(sync_dts[name] / dt, 2)
         if res.stats:
             st = dict(res.stats)
             st.pop("stream", None)

@@ -19,6 +19,10 @@ import time
 
 REGRESSION_ENGINE = "compacted_pallas"
 REGRESSION_METRIC = "reads_per_s"
+# synchronous runs carry per-stage wall times; each stage is gated
+# independently so a regression hiding inside an improved total still fails
+STAGE_ENGINES = ("compacted_pallas_sync", "fused_pallas_sync")
+STAGE_NOISE_FLOOR_S = 0.005  # sub-5ms stages are runner noise, not signal
 
 
 def emit_pipeline_json(path: str, reads: int, chunk_reads: int | None,
@@ -74,10 +78,43 @@ def _gate_metric(name: str, fresh_val, base_val, tolerance: float,
     return 0 if fresh_val >= floor else 1
 
 
-def check_regression(fresh: dict, baseline_path: str,
-                     tolerance: float) -> int:
+def _gate_stages(fresh: dict, base: dict, engine: str,
+                 tolerance: float) -> int:
+    """Per-stage gate: any stage of ``engine``'s synchronous breakdown
+    that takes > (1 + tolerance) x its baseline wall time fails, even
+    when the total improved — that is what catches a stage-level
+    regression smuggled in under a bigger win elsewhere."""
+    bst = base.get("engines", {}).get(engine, {}).get("stage_times_s")
+    if not bst:
+        print(f"perf-trend: baseline lacks {engine}.stage_times_s; "
+              f"skipping per-stage check")
+        return 0
+    fe = fresh.get("engines", {}).get(engine, {})
+    fst = fe.get("stage_times_s")
+    if not fst:
+        why = fe.get("error", "engine missing from fresh run")
+        print(f"perf-trend: FAIL — fresh run has no "
+              f"{engine}.stage_times_s ({why})")
+        return 1
+    rc = 0
+    for stage, bval in sorted(bst.items()):
+        fval = fst.get(stage)
+        if fval is None or bval < STAGE_NOISE_FLOOR_S:
+            continue
+        ceil = (1.0 + tolerance) * bval
+        verdict = "OK" if fval <= ceil else "FAIL"
+        print(f"perf-trend: {verdict} — {engine}.{stage} "
+              f"fresh={fval:.4f}s baseline={bval:.4f}s "
+              f"ceiling={ceil:.4f}s (tolerance {tolerance:.0%})")
+        rc |= fval > ceil
+    return rc
+
+
+def check_regression(fresh: dict, baseline_path: str, tolerance: float,
+                     stage_tolerance: float = 0.25) -> int:
     """Non-zero when the streamed Pallas engine — or the paired-end
-    path's reads/s — regressed > tolerance vs the committed baseline
+    path's reads/s — regressed > tolerance vs the committed baseline,
+    or any synchronous per-stage wall time grew > stage_tolerance
     (the CI perf-trend gate).  Metrics the baseline lacks are skipped,
     so the gate never blocks the PR that introduces a new section."""
     with open(baseline_path) as f:
@@ -103,6 +140,8 @@ def check_regression(fresh: dict, baseline_path: str,
         rc |= _gate_metric("paired_path.reads_per_s",
                            fresh.get("paired_path", {}).get("reads_per_s"),
                            bp, tolerance)
+    for engine in STAGE_ENGINES:
+        rc |= _gate_stages(fresh, base, engine, stage_tolerance)
     return rc
 
 
@@ -150,6 +189,9 @@ def main() -> None:
                          "baseline JSON; exit 1 on >tolerance regression")
     ap.add_argument("--tolerance", type=float, default=0.15,
                     help="allowed reads/s regression fraction (default .15)")
+    ap.add_argument("--stage-tolerance", type=float, default=0.25,
+                    help="allowed per-stage wall-time growth fraction for "
+                         "the synchronous engines (default .25)")
     args = ap.parse_args()
     if args.check_against and not args.pipeline_json:
         ap.error("--check-against requires --pipeline-json (the gate "
@@ -160,7 +202,8 @@ def main() -> None:
                                    include_padded=not args.no_padded)
         if args.check_against:
             raise SystemExit(check_regression(bench, args.check_against,
-                                              args.tolerance))
+                                              args.tolerance,
+                                              args.stage_tolerance))
     else:
         run_csv()
 

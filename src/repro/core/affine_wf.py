@@ -285,71 +285,85 @@ def banded_affine_dist(s1: jnp.ndarray, s2_window: jnp.ndarray, eth: int = 6,
     return de, dm
 
 
+def traceback_step(i, d, state, byte, eth: int):
+    """One fused-transition traceback step, shared by the jnp walk below
+    and the Pallas kernel (``repro.kernels.traceback``).
+
+    The oracle (``traceback_numpy``) spends an extra non-emitting
+    iteration on every "enter M1/M2" transition (dd == 2/3) before the gap
+    move reads the *same* cell's dm1/dm2 bit.  Fusing the transition with
+    its gap move makes every step emit exactly one op, so a batch of
+    walks stays in lockstep: step t IS op index t for every still-active
+    lane, which is what lets the batched walk write one uniform output
+    row per step instead of a per-lane scatter.
+
+    All args are int32 arrays of one broadcastable shape (``byte`` is the
+    packed direction byte at (i-1, d)).  Returns (op, ni, nd, ns, active);
+    outputs for inactive lanes are unmasked — callers apply ``active``.
+    """
+    j = i + d - eth
+    active = (i > 0) | (j > 0)
+    dd, dm1, dm2 = byte & 3, (byte >> 2) & 1, (byte >> 3) & 1
+    top = i == 0                      # top row: horizontal to (0,0)
+    left = (j == 0) & ~top            # left col: vertical, state preserved
+    in_d = (state == 0) & ~top & ~left
+    # gap moves: an explicit M1/M2 step, or a D-cell transition (dd==2/3)
+    # fused with the move it precedes — both consult this cell's dm1/dm2
+    go_m1 = ((state == 1) & ~top & ~left) | (in_d & (dd == 2))
+    go_m2 = ((state == 2) & ~top & ~left) | (in_d & (dd == 3))
+    diag = in_d & (dd <= 1)
+    vert = left | go_m1
+    op = jnp.where(diag, jnp.where(dd == 0, OP_MATCH, OP_SUB),
+                   jnp.where(vert, OP_INS, OP_DEL)).astype(jnp.int32)
+    ni = jnp.where(diag | vert, i - 1, i)
+    nd = jnp.where(vert, d + 1, jnp.where(top | go_m2, d - 1, d))
+    ns = jnp.where(go_m1, jnp.where(dm1 == 1, 0, 1),
+                   jnp.where(go_m2, jnp.where(dm2 == 1, 0, 2), state))
+    return op, ni, nd, ns, active
+
+
 @partial(jax.jit, static_argnames=("eth", "max_ops"))
 def traceback(dirs: jnp.ndarray, eth: int, max_ops: int | None = None):
-    """Vectorizable traceback walk.  dirs: (..., n, band) -> ops (..., max_ops)
-    filled from the END (left-padded with OP_NONE), plus op count."""
-    n = dirs.shape[-2]
+    """Batched traceback walk.  dirs: (..., n, band) -> ops (..., max_ops)
+    filled from the END (left-padded with OP_NONE), plus op count.
+
+    Every step emits exactly one op for every active lane
+    (``traceback_step``), so the k-th op of each lane lands in the same
+    output row ``(max_ops - 1 - k) % max_ops`` — one masked row update
+    per step across the whole batch, no per-lane scatter.  A walk emits
+    at most ``2n`` ops (each consumes a read and/or a window char), so
+    the default ``max_ops = 2n + 2`` never truncates; smaller ``max_ops``
+    wraps exactly like the pre-fused implementation's END-relative
+    indexing did.
+    """
+    n, band = dirs.shape[-2], dirs.shape[-1]
     if max_ops is None:
         max_ops = 2 * n + 2
+    lead = dirs.shape[:-2]
+    flat = dirs.reshape((-1, n * band)).astype(jnp.int32)
+    R = flat.shape[0]
 
-    def walk(dirs1):
-        def cond(c):
-            i, d, state, k, _ = c
-            return (i > 0) | (i + d - eth > 0)
+    def cond(c):
+        i, d, _, _, t, _ = c
+        return ((i > 0) | (i + d - eth > 0)).any()
 
-        def body(c):
-            i, d, state, k, ops = c
-            j = i + d - eth
-            byte = dirs1[jnp.maximum(i - 1, 0), d].astype(jnp.int32)
-            dd, dm1, dm2 = byte & 3, (byte >> 2) & 1, (byte >> 3) & 1
-            # defaults
-            op = jnp.int32(OP_NONE)
-            ni, nd, ns, emit = i, d, state, False
-            top_row = i == 0
-            left_col = (j == 0) & ~top_row
-            in_d = (state == 0) & ~top_row & ~left_col
-            in_m1 = (state == 1) & ~top_row & ~left_col
-            in_m2 = (state == 2) & ~top_row & ~left_col
+    def body(c):
+        i, d, state, k, t, ops = c
+        cell = jnp.maximum(i - 1, 0) * band + d
+        byte = jnp.take_along_axis(flat, cell[:, None], axis=1)[:, 0]
+        op, ni, nd, ns, active = traceback_step(i, d, state, byte, eth)
+        ni = jnp.where(active, ni, i)
+        nd = jnp.where(active, nd, d)
+        ns = jnp.where(active, ns, state)
+        row = jnp.remainder(max_ops - 1 - t, max_ops)
+        cur = jax.lax.dynamic_slice_in_dim(ops, row, 1, axis=0)[0]
+        ops = jax.lax.dynamic_update_slice_in_dim(
+            ops, jnp.where(active, op, cur)[None], row, axis=0)
+        return ni, nd, ns, k + active.astype(jnp.int32), t + 1, ops
 
-            # top row: horizontal to (0,0)
-            op = jnp.where(top_row, OP_DEL, op)
-            nd = jnp.where(top_row, d - 1, nd)
-            emit = emit | top_row
-            # left col: vertical
-            op = jnp.where(left_col, OP_INS, op)
-            ni = jnp.where(left_col, i - 1, ni)
-            nd = jnp.where(left_col, d + 1, nd)
-            emit = emit | left_col
-            # state D
-            diag_move = in_d & (dd <= 1)
-            op = jnp.where(diag_move, jnp.where(dd == 0, OP_MATCH, OP_SUB), op)
-            ni = jnp.where(diag_move, i - 1, ni)
-            emit = emit | diag_move
-            ns = jnp.where(in_d & (dd == 2), 1, ns)
-            ns = jnp.where(in_d & (dd == 3), 2, ns)
-            # state M1: vertical move
-            op = jnp.where(in_m1, OP_INS, op)
-            ni = jnp.where(in_m1, i - 1, ni)
-            nd = jnp.where(in_m1, d + 1, nd)
-            ns = jnp.where(in_m1, jnp.where(dm1 == 1, 0, 1), ns)
-            emit = emit | in_m1
-            # state M2: horizontal move
-            op = jnp.where(in_m2, OP_DEL, op)
-            nd = jnp.where(in_m2, d - 1, nd)
-            ns = jnp.where(in_m2, jnp.where(dm2 == 1, 0, 2), ns)
-            emit = emit | in_m2
-
-            nk = jnp.where(emit, k + 1, k)
-            ops = jnp.where(emit, ops.at[max_ops - 1 - k].set(op), ops)
-            return ni, nd, ns, nk, ops
-
-        init = (jnp.int32(n), jnp.int32(eth), jnp.int32(0), jnp.int32(0),
-                jnp.full((max_ops,), OP_NONE, dtype=jnp.int32))
-        _, _, _, k, ops = jax.lax.while_loop(cond, body, init)
-        return ops, k
-
-    flat = dirs.reshape((-1,) + dirs.shape[-2:])
-    ops, counts = jax.vmap(walk)(flat)
-    return (ops.reshape(dirs.shape[:-2] + (max_ops,)),
-            counts.reshape(dirs.shape[:-2]))
+    init = (jnp.full((R,), n, jnp.int32), jnp.full((R,), eth, jnp.int32),
+            jnp.zeros((R,), jnp.int32), jnp.zeros((R,), jnp.int32),
+            jnp.int32(0),
+            jnp.full((max_ops, R), OP_NONE, dtype=jnp.int32))
+    _, _, _, k, _, ops = jax.lax.while_loop(cond, body, init)
+    return ops.T.reshape(lead + (max_ops,)), k.reshape(lead)

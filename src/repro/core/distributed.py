@@ -40,7 +40,7 @@ import numpy as np
 
 from . import wf_backend as wfb
 from .compaction import bucket_capacity, compact_indices, scatter_to
-from .filtering import gather_windows
+from .filtering import collapse_candidates, gather_windows
 from .index import GenomeIndex
 from .minimizers import hash32, unique_read_minimizers
 from .pipeline import MapperConfig
@@ -61,7 +61,8 @@ def _shard_map(f, mesh, in_specs, out_specs):
               check_rep=False)
 
 
-def stage_b_affine_capacity(n_entries: int, cfg: MapperConfig) -> int:
+def stage_b_affine_capacity(n_entries: int, cfg: MapperConfig,
+                            frac: float | None = None) -> int:
     """Static survivor capacity for stage B's affine pass.
 
     Stage B is inside one jit (no host sync between the filter and the
@@ -70,13 +71,18 @@ def stage_b_affine_capacity(n_entries: int, cfg: MapperConfig) -> int:
     bucket slots contributes at most one affine candidate (its best of
     ``max_pls`` PLs), and a slot only survives when it is occupied, its
     minimizer is found, and its best linear distance clears the filter
-    threshold.  ``cfg.stage_b_survivor_frac`` is the provisioned fraction
-    of that bound (drop-on-overflow beyond it — the Reads-FIFO semantics);
-    a threshold that cannot reject anything (``> eth``) disables the
-    filter, so provisioning falls back to full capacity.
+    threshold.  ``frac`` is the provisioned fraction of that bound
+    (default ``cfg.stage_b_survivor_frac``; ``stage_b_adaptive`` sessions
+    pass the quantile of their observed survivor history instead — see
+    ``Mapper._stage_b_frac``).  Drop-on-overflow beyond the capacity is
+    the Reads-FIFO semantics; a threshold that cannot reject anything
+    (``> eth``) disables the filter, so provisioning falls back to full
+    capacity.
     """
+    if frac is None:
+        frac = cfg.stage_b_survivor_frac
     frac = 1.0 if cfg.filter_threshold > cfg.eth else \
-        max(min(cfg.stage_b_survivor_frac, 1.0), 0.0)
+        max(min(frac, 1.0), 0.0)
     want = int(np.ceil(n_entries * frac))
     cap = bucket_capacity(want, align=cfg.aff_block_r, cap_max=n_entries)
     # neither the lane-align floor nor the pow-2 rounding may outgrow the
@@ -200,9 +206,8 @@ def _stage_b(local, uniq, offsets, positions, segments, cfg: MapperConfig,
                                     backend=cfg.wf_backend,
                                     block_r=cfg.lin_block_r)
     lin_end = jnp.where(occ_valid, lin_end, cfg.eth + 1)
-    best_pl = jnp.argmin(lin_end, axis=-1)
-    best_lin = jnp.take_along_axis(lin_end, best_pl[:, None], 1)[:, 0]
-    passed = best_lin <= cfg.filter_threshold
+    best_pl, best_lin, passed = collapse_candidates(lin_end,
+                                                    cfg.filter_threshold)
     n_surv = jnp.sum(passed)
 
     # distance-only affine on the compacted survivors: stage B never
@@ -242,12 +247,15 @@ def _stage_b(local, uniq, offsets, positions, segments, cfg: MapperConfig,
 
 
 def make_distributed_mapper(mesh, cfg: MapperConfig, n_shards: int,
-                            send_cap: int):
+                            send_cap: int, aff_cap: int | None = None):
     """Build the jitted shard_map mapping step.
 
     Returns ``(fn, stage_b_affine_cap)`` — the negotiated per-shard
     survivor capacity is surfaced so callers report exactly what the
-    compiled program executes.  Call signature of ``fn``:
+    compiled program executes.  ``aff_cap`` overrides the negotiation
+    (the ``Mapper`` session passes its plan's — possibly adaptively
+    derived — capacity so the compiled program matches the plan).
+    Call signature of ``fn``:
       fn(uniq (S,U), offsets (S,U+1), positions (S,O), segments (S,O,L),
          reads (R_global, rl), read_dst_meta...) ->
          (position (R_global,), distance (R_global,),
@@ -259,7 +267,8 @@ def make_distributed_mapper(mesh, cfg: MapperConfig, n_shards: int,
     M = cfg.max_minis
     # survivor capacity is negotiated once per program: every shard's
     # stage B sees n_shards*send_cap bucket entries after the exchange
-    aff_cap = stage_b_affine_capacity(n_shards * send_cap, cfg)
+    if aff_cap is None:
+        aff_cap = stage_b_affine_capacity(n_shards * send_cap, cfg)
 
     def step(uniq, offsets, positions, segments, reads):
         # local shapes: uniq (1, U) ... reads (R_local, rl)

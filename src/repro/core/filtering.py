@@ -66,6 +66,21 @@ def linear_wf_filter(reads: jnp.ndarray, windows: jnp.ndarray,
                                                           sat)
 
 
+def collapse_candidates(lin_end: jnp.ndarray, threshold: int):
+    """(4) min extraction + filter: collapse the PL axis to the best
+    candidate per (read, minimizer) and apply the filter threshold.
+
+    lin_end (..., P) int32 (invalid slots hold the linear sat value) ->
+    (best_pl (...,), best_lin (...,), pass_filter (...,)).  Shared by the
+    padded reference, both compacted engines and the distributed stage B
+    so the winner/filter semantics cannot drift between paths.
+    """
+    best_pl = jnp.argmin(lin_end, axis=-1)
+    best_lin = jnp.take_along_axis(lin_end, best_pl[..., None],
+                                   -1)[..., 0]
+    return best_pl, best_lin, best_lin <= threshold
+
+
 @jax.jit
 def base_count_filter(reads: jnp.ndarray, windows: jnp.ndarray,
                       occ_valid: jnp.ndarray, threshold: int = 6):

@@ -66,8 +66,8 @@ from .distributed import (AXIS, ShardedIndex, _cached_mapper, shard_index,
                           stage_b_affine_capacity)
 from .encoding import revcomp
 from .index import GenomeIndex
-from .pipeline import (MapperConfig, MappingResult, _ChunkPipeline,
-                       _merge_stats, map_reads_jax)
+from .pipeline import (LazyTraceback, MapperConfig, MappingResult,
+                       _ChunkPipeline, _merge_stats, map_reads_jax)
 
 TOPOLOGIES = ("single", "mesh")
 
@@ -86,13 +86,19 @@ def split_result(res: MappingResult, n: int,
     The paired-end path maps both mates as one stacked batch (R1 rows
     then R2 rows — one plan, one engine dispatch, shared chunking) and
     splits here.  Both halves share the run's ``stats`` object (its
-    ``reads`` counts the full stacked batch).
+    ``reads`` counts the full stacked batch).  Raw attribute access keeps
+    a ``cigar_mode="lazy"`` result lazy: the pending traceback holder is
+    sliced, not materialized.
     """
+    lt = object.__getattribute__(res, "lazy_tb")
+
     def half(lo, hi):
-        return MappingResult(
-            **{f: (getattr(res, f)[lo:hi] if getattr(res, f) is not None
-                   else None) for f in _PER_READ_FIELDS},
-            stats=res.stats)
+        def raw(f):
+            v = object.__getattribute__(res, f)
+            return v[lo:hi] if v is not None else None
+        return MappingResult(**{f: raw(f) for f in _PER_READ_FIELDS},
+                             stats=res.stats,
+                             lazy_tb=lt[lo:hi] if lt is not None else None)
     return half(0, n), half(n, len(res.position))
 
 
@@ -192,12 +198,17 @@ class MappingPlan:
     @property
     def key(self) -> tuple:
         """Plan-cache key: plans sharing a key share one executable (and
-        therefore its compiled programs — equal keys cannot recompile)."""
+        therefore its compiled programs — equal keys cannot recompile).
+        The mesh key includes the negotiated stage-B survivor capacity:
+        static configs derive it deterministically from (batch, send_cap)
+        so repeated plans still hit, while ``stage_b_adaptive`` sessions
+        recompile exactly when the provisioned capacity moves."""
         if self.topology == "mesh":
-            return ("mesh", self.padded_reads, self.send_cap)
+            return ("mesh", self.padded_reads, self.send_cap,
+                    self.stage_b_affine_cap)
         if self.engine == "padded":
             return ("single", "padded", self.n_reads)
-        return ("single", "compacted", self.chunk)
+        return ("single", self.engine, self.chunk)
 
 
 def make_mesh_compat(shape, axes):
@@ -292,6 +303,10 @@ class Mapper:
         self.plan_cache_hits = 0
         self.plan_cache_misses = 0
         self._pool: ThreadPoolExecutor | None = None
+        # rolling per-run stage-B survivor fractions (survivors / bucket
+        # entries), fed by _run_mesh; drives adaptive capacity planning
+        from collections import deque
+        self._survivor_hist = deque(maxlen=self.cfg.stage_b_history)
 
         if topology == "single":
             if isinstance(index, ShardedIndex):
@@ -348,18 +363,37 @@ class Mapper:
             return MappingPlan(
                 topology="mesh", engine=cfg.engine, n_reads=n,
                 chunk=padded, chunk_sizes=(eff,), n_shards=S, send_cap=sc,
-                stage_b_affine_cap=stage_b_affine_capacity(S * sc, cfg),
+                stage_b_affine_cap=stage_b_affine_capacity(
+                    S * sc, cfg, frac=self._stage_b_frac()),
                 padded_reads=padded, both_strands=bs)
         if cfg.engine == "padded":
             return MappingPlan(topology="single", engine="padded", n_reads=n,
                                chunk=max(eff, 1), chunk_sizes=(eff,),
                                both_strands=bs)
-        c = chunk or cfg.chunk_reads or max(eff, 1)
-        sizes = tuple(min(c, eff - i) for i in range(0, eff, c))
-        return MappingPlan(topology="single", engine="compacted", n_reads=n,
+        # compacted/fused engines chunk over the n *reads*: each chunk
+        # carries its own forward + reverse-complement rows and reduces
+        # them on device, so capacities are sized for 2*chunk rows while
+        # the chunk schedule (and every fetched array) stays per-read
+        c = chunk or cfg.chunk_reads or max(n, 1)
+        sizes = tuple(min(c, n - i) for i in range(0, n, c))
+        rows = 2 * c if bs else c
+        return MappingPlan(topology="single", engine=cfg.engine, n_reads=n,
                            chunk=c, chunk_sizes=sizes,
-                           lin_cap_max=c * cfg.max_minis * cfg.max_pls,
-                           aff_cap_max=c * cfg.max_minis, both_strands=bs)
+                           lin_cap_max=rows * cfg.max_minis * cfg.max_pls,
+                           aff_cap_max=rows * cfg.max_minis, both_strands=bs)
+
+    def _stage_b_frac(self) -> float | None:
+        """Adaptive stage-B provisioning fraction, or None for the static
+        ``cfg.stage_b_survivor_frac``.  Uses the session's rolling
+        quantile of observed survivor fractions with 25% headroom — a
+        workload that filters harder than provisioned shrinks the
+        compiled affine pass, one that stops filtering grows it instead
+        of silently dropping survivors."""
+        if not self.cfg.stage_b_adaptive or not self._survivor_hist:
+            return None
+        q = float(np.quantile(np.asarray(self._survivor_hist),
+                              self.cfg.stage_b_quantile))
+        return min(q * 1.25, 1.0)
 
     def _executable(self, plan: MappingPlan):
         """Plan-cache lookup (counting hits/misses), building on miss.
@@ -377,7 +411,7 @@ class Mapper:
         self.plan_cache_misses += 1
         if plan.topology == "mesh":
             entry = _cached_mapper(self.mesh, self.cfg, plan.n_shards,
-                                   plan.send_cap)
+                                   plan.send_cap, plan.stage_b_affine_cap)
         elif plan.engine == "padded":
             entry = map_reads_jax
         else:
@@ -450,13 +484,17 @@ class Mapper:
         reads are padded to the plan's static shape and results trimmed.
 
         On a ``both_strands`` plan the engine executes the forward and
-        reverse-complement encodings of every read (stacked fwd-then-rc,
-        sharing chunks/capacities/plan-cache entries with any other
-        batch) and the per-read winner is reduced host-side — lower
-        distance wins, ties prefer the forward strand.
+        reverse-complement encodings of every read.  The compacted/fused
+        engines stack the two encodings *per chunk* and reduce the
+        per-read winner on device before anything is fetched (see
+        ``pipeline._strand_stage``); the padded reference and the mesh
+        topology run one stacked fwd-then-rc batch and reduce host-side
+        (``_reduce_strands``).  Either way: lower distance wins, ties
+        prefer the forward strand — bit-identical results.
         """
         reads = np.asarray(reads)
-        if plan.both_strands:
+        if plan.both_strands and (plan.topology == "mesh"
+                                  or plan.engine == "padded"):
             n_real = len(reads)
             reads = np.concatenate([reads, revcomp(reads)])
             res = self._run_strand(plan, reads)
@@ -488,9 +526,9 @@ class Mapper:
         items = [(reads[c0 : c0 + plan.chunk], plan.chunk)
                  for c0 in range(0, n, plan.chunk)]
         if cfg.stream:
-            times = None
+            times = {} if cfg.profile else None
             fetched = streaming.stream_map(items, pipe.phase1, pipe.phase2,
-                                           pipe.fetch)
+                                           pipe.fetch, times=times)
         else:
             times = {}
             fetched = streaming.sync_map(items, pipe.phase1, pipe.phase2,
@@ -498,24 +536,43 @@ class Mapper:
         parts = [out for out, _ in fetched]
         raw = _merge_stats([st for _, st in fetched])
         raw["stream"] = cfg.stream
+        if cfg.both_strands:
+            raw["both_strands"] = True
         if times is not None:
             raw["stage_times_s"] = {k: round(v, 4) for k, v in times.items()}
-        cat = (lambda k: np.asarray(parts[0][k]) if len(parts) == 1 else
-               np.concatenate([np.asarray(p[k]) for p in parts]))
+
+        def cat(k):
+            if k not in parts[0]:
+                return None
+            if len(parts) > 1:  # concatenate copies -> always writable
+                return np.concatenate([np.asarray(p[k]) for p in parts])
+            a = np.asarray(parts[0][k])
+            # a single chunk's fetch is a zero-copy read-only view of the
+            # device buffer; results are caller-owned, so hand out a
+            # writable copy (callers mutate e.g. `mapped` in pair rescue)
+            return a if a.flags.writeable else a.copy()
+
+        mapped = cat("mapped")
+        lazy = None
+        if cfg.cigar_mode == "lazy":
+            lazy = LazyTraceback(self._dev[3], cfg, cat("_tb_reads"),
+                                 cat("_tb_occ"), cat("_tb_mpos"), mapped)
         stats = MapperStats(
-            topology="single", engine="compacted", reads=n,
+            topology="single", engine=cfg.engine, reads=n,
             candidates=raw["candidates_valid"], survivors=raw["survivors"],
             affine_instances=raw["affine_dist_instances"],
             padded_affine_instances=raw["padded_affine_instances"],
+            reverse_best=raw.get("reverse_best", 0),
             plan_cache_hits=self.plan_cache_hits,
             plan_cache_misses=self.plan_cache_misses, extra=raw)
         return MappingResult(position=cat("position"),
                              distance=cat("distance"),
                              distance2=cat("distance2"),
-                             mapped=cat("mapped"),
+                             mapped=mapped, strand=cat("strand"),
                              ops=cat("ops"), op_count=cat("op_count"),
                              linear_dist=cat("linear_dist"),
-                             n_candidates=cat("n_candidates"), stats=stats)
+                             n_candidates=cat("n_candidates"), stats=stats,
+                             lazy_tb=lazy)
 
     def _run_mesh(self, plan: MappingPlan, entry, reads: np.ndarray,
                   n: int) -> MappingResult:
@@ -537,6 +594,7 @@ class Mapper:
         surv = int(np.asarray(n_surv).sum())
         n_aff_drop = int(np.asarray(aff_drop).sum())
         entries = S * S * plan.send_cap
+        self._survivor_hist.append(surv / max(entries, 1))
         raw = dict(stage_b_entries=entries, stage_b_survivors=surv,
                    stage_b_affine_capacity=aff_cap,
                    stage_b_affine_instances=S * aff_cap,

@@ -60,7 +60,8 @@ from . import affine_wf
 from . import streaming
 from . import wf_backend as wfb
 from .compaction import bucket_capacity, compact_indices, scatter_to
-from .filtering import gather_windows, linear_wf_filter
+from .encoding import revcomp
+from .filtering import collapse_candidates, gather_windows, linear_wf_filter
 from .index import GenomeIndex
 from .linear_wf import banded_wf
 from .seeding import SeedParams, seed_reads
@@ -77,8 +78,15 @@ class MapperConfig:
     max_pls: int = 32       # linear WF buffer rows per crossbar
     filter_threshold: int = 6
     max_ops: int | None = None
-    engine: str = "compacted"     # "compacted" | "padded"
+    engine: str = "compacted"     # "compacted" | "fused" | "padded"
     wf_backend: str = "jnp"       # "jnp" | "pallas"  (see core.wf_backend)
+    cigar_mode: str = "eager"     # "eager" | "lazy" | "off": when the
+    #                               dirs-emitting traceback pass runs.
+    #                               eager = with the batch (default);
+    #                               lazy  = deferred until the first
+    #                               MappingResult.ops/op_count access;
+    #                               off   = never (distance-only consumers;
+    #                               SAM CIGARs degrade to "*")
     lin_block_r: int = 512        # linear kernel lanes; linear bucket align
     aff_block_r: int = 256        # affine kernel lanes; affine bucket align
     chunk_reads: int | None = None  # stream reads in chunks of this size
@@ -90,9 +98,20 @@ class MapperConfig:
     #                               path with per-stage wall times in stats
     stage_b_survivor_frac: float = 0.5  # distributed stage-B: static affine
     #                               capacity as a fraction of bucket entries
+    profile: bool = False         # streamed path: record per-stage
+    #                               completion-time offsets into
+    #                               stats["stage_times_s"] (the sync path
+    #                               always records exclusive wall times)
+    stage_b_adaptive: bool = False  # mesh: derive the stage-B survivor
+    #                               capacity from the session's observed
+    #                               survivor-fraction history instead of
+    #                               the static stage_b_survivor_frac
+    stage_b_quantile: float = 0.9   # rolling quantile of that history
+    stage_b_history: int = 32       # history window (runs)
 
-    ENGINES = ("compacted", "padded")
+    ENGINES = ("compacted", "fused", "padded")
     WF_BACKENDS = ("jnp", "pallas")
+    CIGAR_MODES = ("eager", "lazy", "off")
 
     def __post_init__(self):
         """Reject invalid configurations at construction time, with errors
@@ -114,6 +133,19 @@ class MapperConfig:
         if self.chunk_reads is not None and self.chunk_reads < 1:
             raise ValueError(f"chunk_reads={self.chunk_reads!r} must be "
                              f">= 1 (or None for unchunked)")
+        if self.cigar_mode not in self.CIGAR_MODES:
+            raise ValueError(f"unknown cigar_mode {self.cigar_mode!r}; "
+                             f"expected one of {self.CIGAR_MODES}")
+        if self.engine == "padded" and self.cigar_mode != "eager":
+            raise ValueError(
+                'engine="padded" is the fully-eager reference and only '
+                f'supports cigar_mode="eager", got {self.cigar_mode!r}')
+        if not 0.0 <= self.stage_b_quantile <= 1.0:
+            raise ValueError(f"stage_b_quantile={self.stage_b_quantile!r} "
+                             f"must be within [0, 1]")
+        if self.stage_b_history < 1:
+            raise ValueError(f"stage_b_history={self.stage_b_history!r} "
+                             f"must be >= 1")
 
     @classmethod
     def from_index(cls, index, **overrides) -> "MapperConfig":
@@ -142,6 +174,12 @@ class MappingResult:
     positions only — see ``repro.core.mapper``).  ``stats`` is a
     ``mapper.MapperStats`` on the compacted/mesh paths (dict-compatible
     for the legacy keys) and ``None`` on the padded reference engine.
+
+    With ``cigar_mode="lazy"`` the ``ops``/``op_count`` fields start as
+    ``None`` and a ``lazy_tb`` holder carries the per-read winner metadata;
+    the first attribute access of either field dispatches the deferred
+    on-device traceback and fills both in (reads that never ask for CIGARs
+    never pay for them).
     """
     position: np.ndarray   # (R,) int32 best mapping position (-1 if unmapped)
     distance: np.ndarray   # (R,) int32 affine WF distance
@@ -158,6 +196,18 @@ class MappingResult:
     linear_dist: np.ndarray | None = None  # (R, M, P) candidate linear dists
     n_candidates: np.ndarray | None = None  # (R,) valid PLs seeded
     stats: object | None = None  # MapperStats (compacted/mesh) | None
+    lazy_tb: object | None = None  # LazyTraceback (cigar_mode="lazy") —
+    #                      consumed (set back to None) on materialization
+
+    def __getattribute__(self, name):
+        if name in ("ops", "op_count"):
+            lt = object.__getattribute__(self, "lazy_tb")
+            if lt is not None:
+                object.__setattr__(self, "lazy_tb", None)
+                ops, cnt = lt.materialize()
+                object.__setattr__(self, "ops", ops)
+                object.__setattr__(self, "op_count", cnt)
+        return object.__getattribute__(self, name)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -178,10 +228,8 @@ def map_reads_jax(uniq_kmers, offsets, positions, segments, reads,
                                   block_r=cfg.lin_block_r)
 
     # (4) min extraction per (read, minimizer); filter threshold
-    best_pl = jnp.argmin(lin_end, axis=-1)                       # (R, M)
-    best_lin = jnp.take_along_axis(lin_end, best_pl[..., None],
-                                   -1)[..., 0]                   # (R, M)
-    pass_filter = best_lin <= cfg.filter_threshold
+    best_pl, _, pass_filter = collapse_candidates(lin_end,
+                                                  cfg.filter_threshold)
 
     # (5)+(6) affine WF on the per-minimizer winners
     sel_win = jnp.take_along_axis(
@@ -297,10 +345,8 @@ def _linear_stage_impl(segments, reads, occ_idx, occ_valid, mini_pos,
     lin_end = scatter_to(N, slots, slot_ok, de,
                          jnp.int32(sat)).reshape(R, M, P)
 
-    best_pl = jnp.argmin(lin_end, axis=-1)                       # (R, M)
-    best_lin = jnp.take_along_axis(lin_end, best_pl[..., None],
-                                   -1)[..., 0]                   # (R, M)
-    pass_filter = best_lin <= cfg.filter_threshold
+    best_pl, _, pass_filter = collapse_candidates(lin_end,
+                                                  cfg.filter_threshold)
     return lin_end, best_pl, pass_filter, jnp.sum(occ_valid, axis=(1, 2))
 
 
@@ -349,7 +395,15 @@ def _affine_stage_impl(segments, positions, reads, occ_idx, mini_pos, best_pl,
     distance2 = _co_optimal_runner_up(lin_end_full, occ_idx, mini_pos,
                                       positions, position, best_m,
                                       best_aff, distance2, cfg)
-    return best_aff, mapped, position, best_m, distance2
+    # winner metadata (occurrence row + minimizer offset of the winning
+    # instance): everything the traceback pass needs, so it no longer has
+    # to re-derive the winner from the full (R, M, P) seeding tensors —
+    # which is what lets the strand reduce and the lazy-CIGAR holder carry
+    # two small vectors instead of the whole candidate state
+    r = jnp.arange(R, dtype=jnp.int32)
+    occ_w = cand_occ[r, best_m]
+    mpos_w = mini_pos[r, best_m]
+    return best_aff, mapped, position, best_m, distance2, occ_w, mpos_w
 
 
 _linear_stage = partial(jax.jit, static_argnames=("cfg", "cap"))(
@@ -378,27 +432,189 @@ def _stage_jits(donate: bool):
     return lin, aff
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def _traceback_stage(segments, reads, occ_idx, mini_pos, best_pl, best_m,
-                     mapped, cfg: MapperConfig):
-    """(6): dirs-emitting affine WF + traceback on the per-read winners only
-    — R direction planes instead of (R, M, n*band)."""
-    R = reads.shape[0]
-    r = jnp.arange(R, dtype=jnp.int32)
-    pl = best_pl[r, best_m]
-    occ = occ_idx[r, best_m, pl]
-    mpos = mini_pos[r, best_m]
+def _winner_traceback(segments, reads, occ, mpos, mapped,
+                      cfg: MapperConfig):
+    """(6): fused affine WF + on-device banded traceback on the per-read
+    winners only.  Takes the winner metadata the affine stage emits (one
+    occurrence row + minimizer offset per read), so the END-aligned op
+    rows and counts are the only O(max_ops) arrays that ever exist: on
+    the pallas backend the (n, band) direction planes stay in VMEM
+    scratch inside the kernel, on the jnp backend they fuse into one jit
+    — neither ever crosses D2H."""
     wins = gather_windows(segments, occ, mpos, read_len=cfg.read_len,
                           k=cfg.k, eth=cfg.eth)                  # (R, wlen)
-    _, _, dirs = wfb.affine_wf_dirs(reads, wins, eth=cfg.eth,
-                                    sat=cfg.sat_affine,
-                                    backend=cfg.wf_backend,
-                                    block_r=cfg.aff_block_r)
     max_ops = cfg.max_ops or 2 * cfg.read_len + 2
-    ops, op_count = affine_wf.traceback(dirs, cfg.eth, max_ops)
+    _, _, ops, op_count = wfb.affine_traceback(
+        reads, wins, eth=cfg.eth, sat=cfg.sat_affine, max_ops=max_ops,
+        backend=cfg.wf_backend, block_r=cfg.aff_block_r)
     ops = jnp.where(mapped[:, None], ops, affine_wf.OP_NONE)
     op_count = jnp.where(mapped, op_count, 0)
     return ops, op_count
+
+
+_traceback_stage = partial(jax.jit, static_argnames=("cfg",))(
+    _winner_traceback)
+
+
+def _strand_fold(distance, mapped, position, distance2, n_cand, occ_w,
+                 mpos_w, reads, lin_end=None):
+    """Device-side fwd-vs-rc winner fold (``mapper._reduce_strands``
+    semantics, applied per chunk before anything is fetched): rows
+    ``[0:n)`` are the forward encodings, ``[n:2n)`` the reverse
+    complements of the same reads.  Lower affine distance wins; ties
+    (including both-unmapped) keep forward, so single-strand workloads
+    are bit-identical with or without ``both_strands``.  The runner-up
+    becomes min(winner strand's second locus, loser strand's best) — an
+    opposite-strand hit is a genuine competitor even at the same locus.
+    """
+    n = distance.shape[0] // 2
+    rev = distance[n:] < distance[:n]
+
+    def pick(a):
+        return jnp.where(rev.reshape((-1,) + (1,) * (a.ndim - 1)),
+                         a[n:], a[:n])
+
+    lose_d1 = jnp.where(rev, distance[:n], distance[n:])
+    out = dict(distance=pick(distance), mapped=pick(mapped),
+               position=pick(position),
+               distance2=jnp.minimum(pick(distance2),
+                                     lose_d1).astype(jnp.int32),
+               n_candidates=pick(n_cand), occ_w=pick(occ_w),
+               mpos_w=pick(mpos_w), reads_w=pick(reads),
+               strand=rev.astype(jnp.int8))
+    if lin_end is not None:
+        out["linear_dist"] = pick(lin_end)
+    return out, rev
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _strand_stage(distance, mapped, position, distance2, n_cand, occ_w,
+                  mpos_w, reads, lin_end, n_real, cfg: MapperConfig):
+    """Jitted strand reduce for the staged engine, plus the
+    ``reverse_best`` count over the ``n_real`` non-padding reads."""
+    out, rev = _strand_fold(distance, mapped, position, distance2, n_cand,
+                            occ_w, mpos_w, reads, lin_end)
+    n = distance.shape[0] // 2
+    real = jnp.arange(n, dtype=jnp.int32) < n_real
+    out["reverse_best"] = jnp.sum(rev & out["mapped"] & real)
+    return out
+
+
+def _fused_stage_impl(segments, positions, reads, occ_idx, occ_valid,
+                      mini_pos, n_real, cfg: MapperConfig, lin_cap: int,
+                      aff_cap: int):
+    """The single-dispatch engine: seeding output -> compaction -> linear
+    WF -> filter -> affine WF -> strand reduce -> traceback, one jit.
+
+    The staged engine syncs the measured survivor count between the
+    linear and affine stages to size the affine bucket; here the affine
+    capacity is *bounded* host-side from the candidate count alone (each
+    valid candidate contributes at most one surviving (read, minimizer)
+    group, and a filter threshold above the linear band disables the
+    filter entirely), so the whole back half of the pipeline dispatches
+    without a second host sync.  The bound can only over-provision, never
+    drop — results stay bit-identical to the staged engine; the trade is
+    that the scattered (R, M, P) ``linear_dist`` tensor is not
+    materialized for the host (``MappingResult.linear_dist`` is None).
+
+    Per-read accounting (candidate/survivor/reverse-best counts) is
+    reduced on device over the ``n_real`` non-padding rows and fetched as
+    scalars with the results.
+    """
+    R = reads.shape[0]
+    half = R // 2 if cfg.both_strands else R
+    real = (jnp.arange(R, dtype=jnp.int32) % half) < n_real
+
+    lin_end, best_pl, pass_filter, n_cand = _linear_stage_impl(
+        segments, reads, occ_idx, occ_valid, mini_pos, cfg, lin_cap)
+    (best_aff, mapped, position, best_m, distance2, occ_w,
+     mpos_w) = _affine_stage_impl(segments, positions, reads, occ_idx,
+                                  mini_pos, best_pl, pass_filter, lin_end,
+                                  cfg, aff_cap)
+    out = dict(survivors=jnp.sum(pass_filter & real[:, None]))
+    reads_w = reads
+    if cfg.both_strands:
+        fold, rev = _strand_fold(best_aff, mapped, position, distance2,
+                                 n_cand, occ_w, mpos_w, reads)
+        best_aff, mapped, position = (fold["distance"], fold["mapped"],
+                                      fold["position"])
+        distance2, n_cand = fold["distance2"], fold["n_candidates"]
+        occ_w, mpos_w, reads_w = fold["occ_w"], fold["mpos_w"], \
+            fold["reads_w"]
+        out["strand"] = fold["strand"]
+        out["reverse_best"] = jnp.sum(rev & mapped & real[:half])
+    out.update(position=position, distance=best_aff, distance2=distance2,
+               mapped=mapped, n_candidates=n_cand)
+    if cfg.cigar_mode == "eager":
+        out["ops"], out["op_count"] = _winner_traceback(
+            segments, reads_w, occ_w, mpos_w, mapped, cfg)
+    elif cfg.cigar_mode == "lazy":
+        out.update(_tb_reads=reads_w, _tb_occ=occ_w, _tb_mpos=mpos_w)
+    return out
+
+
+_fused_stage = partial(jax.jit,
+                       static_argnames=("cfg", "lin_cap", "aff_cap"))(
+    _fused_stage_impl)
+
+
+def fused_affine_capacity(n_valid: int, R: int, cfg: MapperConfig) -> int:
+    """Affine-survivor capacity for the fused engine, bounded without a
+    post-filter sync: survivors are (read, minimizer) groups whose best
+    linear distance clears the threshold, so there are at most
+    ``min(n_valid, R*M)`` of them (empty groups scatter the linear sat
+    value ``eth+1`` and cannot pass a threshold <= eth), and exactly
+    ``R*M`` when the threshold disables the filter.  Never smaller than
+    the true survivor count -> the fused engine never drops."""
+    M = cfg.max_minis
+    bound = R * M if cfg.filter_threshold > cfg.eth else min(n_valid, R * M)
+    return bucket_capacity(bound, align=cfg.aff_block_r, cap_max=R * M)
+
+
+class LazyTraceback:
+    """Deferred winners-only traceback (``cigar_mode="lazy"``).
+
+    Holds the per-read winner metadata fetched with the batch (read
+    encoding, winning occurrence row, minimizer offset, mapped mask) plus
+    the session's device-resident segments; ``materialize`` dispatches
+    the same jitted traceback stage the eager mode runs.  Slicing and
+    concatenation keep results lazy through ``mapper.split_result`` and
+    the serving layer's per-request reassembly.
+    """
+
+    def __init__(self, segments, cfg: MapperConfig, reads, occ, mpos,
+                 mapped):
+        self.segments = segments        # device array, shared not copied
+        self.cfg = cfg
+        self.reads, self.occ, self.mpos = reads, occ, mpos
+        self.mapped = mapped
+
+    def __len__(self):
+        return len(self.occ)
+
+    def __getitem__(self, sl):
+        return LazyTraceback(self.segments, self.cfg, self.reads[sl],
+                             self.occ[sl], self.mpos[sl], self.mapped[sl])
+
+    @classmethod
+    def concat(cls, parts: list["LazyTraceback"]) -> "LazyTraceback":
+        first = parts[0]
+        if len(parts) == 1:
+            return first
+        return cls(first.segments, first.cfg,
+                   np.concatenate([p.reads for p in parts]),
+                   np.concatenate([p.occ for p in parts]),
+                   np.concatenate([p.mpos for p in parts]),
+                   np.concatenate([p.mapped for p in parts]))
+
+    def materialize(self):
+        ops, cnt = _traceback_stage(self.segments, jnp.asarray(self.reads),
+                                    jnp.asarray(self.occ),
+                                    jnp.asarray(self.mpos),
+                                    jnp.asarray(self.mapped), self.cfg)
+        # copies: np.asarray of a device buffer is a read-only view, and
+        # materialized fields are caller-owned like their eager twins
+        return np.array(ops), np.array(cnt)
 
 
 class _ChunkPipeline:
@@ -432,6 +648,11 @@ class _ChunkPipeline:
         if n_real < chunk:  # keep the chunk shape static; trimmed in fetch
             sub = np.concatenate(
                 [sub, np.zeros((chunk - n_real, sub.shape[1]), sub.dtype)])
+        if self.cfg.both_strands:
+            # rows [0:chunk) forward, [chunk:2*chunk) reverse complement:
+            # each chunk carries both encodings of its own reads, so the
+            # strand reduce happens on device before fetch (phase 2)
+            sub = np.concatenate([sub, revcomp(sub)])
         t0 = streaming.timed(times, "host_prep", t0)
         reads = jnp.asarray(sub)
         if times is not None:
@@ -444,22 +665,60 @@ class _ChunkPipeline:
         streaming.timed(times, "seed", t0)
         return reads, seeds, n_real
 
+    def _real_count(self, arr, total: int, n_real: int, R: int):
+        """Host count of True entries in ``arr``'s non-padding rows.
+        ``total`` is the known full count; a partial chunk re-counts over
+        the real slice of each strand half."""
+        half = R // 2 if self.cfg.both_strands else R
+        if (2 * n_real if self.cfg.both_strands else n_real) == R:
+            return total
+        c = jnp.sum(arr[:n_real])
+        if self.cfg.both_strands:
+            c = c + jnp.sum(arr[half : half + n_real])
+        return int(c)
+
     def phase2(self, state, times=None):
         reads, seeds, n_real = state
         cfg, (_, _, positions, segments) = self.cfg, self.dev
-        R = reads.shape[0]
+        R = reads.shape[0]          # rows: 2*chunk when both_strands
         M, P = cfg.max_minis, cfg.max_pls
         occ_idx, occ_valid = seeds["occ_idx"], seeds["occ_valid"]
         mini_pos = seeds["mini_pos"]
+        rows_real = 2 * n_real if cfg.both_strands else n_real
+        profile = cfg.profile and times is None  # streamed profiling
 
         # count syncs happen before the stage call so the donated buffers
         # (occ_valid / pass_filter) are never read after being consumed
         t0 = time.perf_counter()
-        n_valid = int(jnp.sum(occ_valid))
-        n_valid_real = (n_valid if n_real == R else
-                        int(jnp.sum(occ_valid[:n_real])))
+        n_valid = int(seeds["n_valid"])
         lin_cap = bucket_capacity(n_valid, align=cfg.lin_block_r,
                                   cap_max=R * M * P)
+
+        if cfg.engine == "fused":
+            n_valid_real = self._real_count(occ_valid, n_valid, n_real, R)
+            aff_cap = fused_affine_capacity(n_valid, R, cfg)
+            out = _fused_stage(segments, positions, reads, occ_idx,
+                               occ_valid, mini_pos, jnp.int32(n_real), cfg,
+                               lin_cap, aff_cap)
+            if times is not None:
+                out["position"].block_until_ready()
+            streaming.timed(times, "fused", t0)
+            stats = dict(candidates_valid=n_valid_real,
+                         linear_instances=lin_cap,
+                         padded_linear_instances=rows_real * M * P,
+                         survivors=out.pop("survivors"),
+                         affine_dist_instances=aff_cap,
+                         padded_affine_instances=rows_real * M,
+                         affine_dirs_instances=(
+                             n_real if cfg.cigar_mode == "eager" else 0))
+            if cfg.both_strands:
+                stats["reverse_best"] = out.pop("reverse_best")
+            if profile:
+                out["_milestones"] = (("seed", mini_pos),
+                                      ("fused", out["position"]))
+            return out, stats, n_real
+
+        n_valid_real = self._real_count(occ_valid, n_valid, n_real, R)
         lin_end, best_pl, pass_filter, n_cand = self.lin_jit(
             segments, reads, occ_idx, occ_valid, mini_pos, cfg, lin_cap)
         if times is not None:
@@ -467,41 +726,73 @@ class _ChunkPipeline:
         t0 = streaming.timed(times, "linear", t0)
 
         n_surv = int(jnp.sum(pass_filter))
-        n_surv_real = (n_surv if n_real == R else
-                       int(jnp.sum(pass_filter[:n_real])))
+        n_surv_real = self._real_count(pass_filter, n_surv, n_real, R)
         aff_cap = bucket_capacity(n_surv, align=cfg.aff_block_r,
                                   cap_max=R * M)
-        best_aff, mapped, position, best_m, distance2 = self.aff_jit(
-            segments, positions, reads, occ_idx, mini_pos, best_pl,
-            pass_filter, lin_end, cfg, aff_cap)
+        (best_aff, mapped, position, best_m, distance2, occ_w,
+         mpos_w) = self.aff_jit(segments, positions, reads, occ_idx,
+                                mini_pos, best_pl, pass_filter, lin_end,
+                                cfg, aff_cap)
+        reads_w, strand, reverse_best = reads, None, None
+        if cfg.both_strands:
+            fold = _strand_stage(best_aff, mapped, position, distance2,
+                                 n_cand, occ_w, mpos_w, reads, lin_end,
+                                 jnp.int32(n_real), cfg)
+            best_aff, mapped, position = (fold["distance"], fold["mapped"],
+                                          fold["position"])
+            distance2, n_cand = fold["distance2"], fold["n_candidates"]
+            occ_w, mpos_w, reads_w = (fold["occ_w"], fold["mpos_w"],
+                                      fold["reads_w"])
+            lin_end, strand = fold["linear_dist"], fold["strand"]
+            reverse_best = fold["reverse_best"]
         if times is not None:
             position.block_until_ready()
         t0 = streaming.timed(times, "affine", t0)
 
-        ops, op_count = _traceback_stage(segments, reads, occ_idx, mini_pos,
-                                         best_pl, best_m, mapped, cfg)
-        if times is not None:
-            ops.block_until_ready()
+        out = dict(position=position, distance=best_aff,
+                   distance2=distance2, mapped=mapped, linear_dist=lin_end,
+                   n_candidates=n_cand)
+        if strand is not None:
+            out["strand"] = strand
+        tb_mark = position
+        if cfg.cigar_mode == "eager":
+            out["ops"], out["op_count"] = _traceback_stage(
+                segments, reads_w, occ_w, mpos_w, mapped, cfg)
+            tb_mark = out["ops"]
+            if times is not None:
+                tb_mark.block_until_ready()
+        elif cfg.cigar_mode == "lazy":
+            out.update(_tb_reads=reads_w, _tb_occ=occ_w, _tb_mpos=mpos_w)
         streaming.timed(times, "traceback", t0)
 
         stats = dict(candidates_valid=n_valid_real,
                      linear_instances=lin_cap,
-                     padded_linear_instances=n_real * M * P,
+                     padded_linear_instances=rows_real * M * P,
                      survivors=n_surv_real,
                      affine_dist_instances=aff_cap,
-                     padded_affine_instances=n_real * M,
-                     affine_dirs_instances=n_real)
-        out = dict(position=position, distance=best_aff,
-                   distance2=distance2, mapped=mapped,
-                   ops=ops, op_count=op_count, linear_dist=lin_end,
-                   n_candidates=n_cand)
+                     padded_affine_instances=rows_real * M,
+                     affine_dirs_instances=(
+                         n_real if cfg.cigar_mode == "eager" else 0))
+        if reverse_best is not None:
+            stats["reverse_best"] = reverse_best
+        if profile:
+            out["_milestones"] = (("seed", mini_pos), ("linear", best_pl),
+                                  ("affine", position),
+                                  ("traceback", tb_mark))
         return out, stats, n_real
 
     def fetch(self, state, times=None):
         out, stats, n_real = state
+        mil = out.pop("_milestones", None)
         t0 = time.perf_counter()
+        if mil is not None:  # streamed profiling: completion-time offsets
+            for name, arr in mil:
+                arr.block_until_ready()
+                t0 = streaming.timed(times, name, t0)
         host = {k: np.asarray(v)[:n_real] for k, v in out.items()}
         streaming.timed(times, "d2h", t0)
+        stats = {k: (int(v) if isinstance(v, jax.Array) else v)
+                 for k, v in stats.items()}
         return host, stats
 
 

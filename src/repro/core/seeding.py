@@ -38,7 +38,10 @@ def seed_reads(uniq_kmers: jnp.ndarray, offsets: jnp.ndarray,
       mini_valid  (R, M)      bool    found in index & within max_minis
       occ_idx     (R, M, P)   int32   occurrence row into index.positions/segments
       occ_valid   (R, M, P)   bool
-    where M = max_minis, P = max_pls.
+    where M = max_minis, P = max_pls; plus the batch scalar
+      n_valid     ()          int32   total valid candidates
+    folded into the same dispatch so the pipeline's bucket-capacity sync
+    blocks on one ready scalar instead of launching a separate reduction.
     """
     M, P = params.max_minis, params.max_pls
 
@@ -56,4 +59,6 @@ def seed_reads(uniq_kmers: jnp.ndarray, offsets: jnp.ndarray,
         return dict(mini_kmers=kmers, mini_pos=pos, mini_valid=found,
                     occ_idx=occ, occ_valid=occ_valid)
 
-    return jax.vmap(per_read)(reads)
+    out = jax.vmap(per_read)(reads)
+    out["n_valid"] = jnp.sum(out["occ_valid"]).astype(jnp.int32)
+    return out

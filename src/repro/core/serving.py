@@ -196,20 +196,38 @@ class MappingService:
         self._accumulate(parts)
 
         def cat(field):
-            arrs = [getattr(p, field) for p in parts]
+            # raw access: a cigar_mode="lazy" bucket result must not be
+            # materialized just to be reassembled per request
+            arrs = [object.__getattribute__(p, field) for p in parts]
             if any(a is None for a in arrs):  # mesh: no traceback fields
                 return None
             return arrs[0] if len(arrs) == 1 else np.concatenate(arrs)
 
         fields = {f: cat(f) for f in _RESULT_FIELDS}
+        lts = [object.__getattribute__(p, "lazy_tb") for p in parts]
+        lazy = None
+        if all(lt is not None for lt in lts):
+            from .pipeline import LazyTraceback
+            lazy = LazyTraceback.concat(lts)
         out = {}
         for rid, (lo, hi_) in spans.items():
             res = MappingResult(
                 **{f: (v[lo:hi_] if v is not None else None)
                    for f, v in fields.items()},
-                stats=None)
+                stats=None,
+                lazy_tb=lazy[lo:hi_] if lazy is not None else None)
             if rid in self._paired:
                 self._paired.discard(rid)
                 res = split_result(res, (hi_ - lo) // 2)
             out[rid] = res
         return out
+
+    @property
+    def affine_drop_rate(self) -> float:
+        """Fraction of stage-B filter survivors dropped on affine-capacity
+        overflow, across all flushes so far (0.0 on the single topology,
+        which never drops).  The observable that tells an operator whether
+        the provisioned survivor capacity — static or adaptive — is
+        actually holding the workload."""
+        return self.totals["dropped_affine"] / max(self.totals["survivors"],
+                                                   1)

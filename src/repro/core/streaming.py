@@ -66,7 +66,8 @@ def timed(times: dict | None, key: str, t0: float) -> float:
     return t1
 
 
-def stream_map(items: list, phase1, phase2, fetch) -> list:
+def stream_map(items: list, phase1, phase2, fetch,
+               times: dict | None = None) -> list:
     """Double-buffered streaming execution over ``items`` (one per chunk).
 
     phase1(item)   -> state   : host prep + H2D + first async dispatch
@@ -78,6 +79,13 @@ def stream_map(items: list, phase1, phase2, fetch) -> list:
     the device queue during the sync; fetches run on a worker thread so
     D2H copies of chunk i-1 overlap chunk i's compute.  Results come back
     in submission order.
+
+    ``times``, when given (``MapperConfig.profile``), is handed to the
+    ``fetch`` calls only — the dispatch phases stay non-blocking, and the
+    fetch thread records per-stage *completion-time* offsets by blocking
+    on the stage milestone arrays phase2 attached (the stage that the
+    device queue is actually waiting on accrues the time).  It is only
+    ever mutated from the single fetch worker, so no locking is needed.
     """
     n = len(items)
     if n == 0:
@@ -89,7 +97,7 @@ def stream_map(items: list, phase1, phase2, fetch) -> list:
         for i in range(n):
             nxt = phase1(items[i + 1]) if i + 1 < n else None
             outs = phase2(state)
-            futs[i] = pool.submit(fetch, outs)
+            futs[i] = pool.submit(fetch, outs, times)
             state = nxt
         return [f.result() for f in futs]
 

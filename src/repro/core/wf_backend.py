@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .affine_wf import banded_affine, banded_affine_dist
+from .affine_wf import banded_affine, banded_affine_dist, traceback
 from .linear_wf import banded_wf
 
 BACKENDS = ("jnp", "pallas")
@@ -78,3 +78,33 @@ def affine_wf_dirs(s1: jnp.ndarray, s2_window: jnp.ndarray, *, eth: int,
                                  eth=eth, sat=sat, block_r=block_r)
     return (de.reshape(lead), dm.reshape(lead),
             dirs.reshape(lead + (n, band)))
+
+
+def affine_traceback(s1: jnp.ndarray, s2_window: jnp.ndarray, *, eth: int,
+                     sat: int, max_ops: int, backend: str = "jnp",
+                     block_r: int = 256):
+    """Banded affine WF + traceback in one dispatch (the winners-only
+    traceback pass).
+
+    On the pallas backend this runs the *fused* kernel of
+    ``repro.kernels.traceback`` — the (n, band) direction planes live only
+    in VMEM scratch and never reach HBM; on the jnp backend the reference
+    ``banded_affine`` + batched ``traceback`` walk run back to back.  Both
+    produce bit-identical END-aligned ops.
+
+    Returns (dist_end, dist_min, ops (..., max_ops) int32,
+    op_count (...,) int32).
+    """
+    _check(backend)
+    if backend == "jnp":
+        de, dm, dirs = banded_affine(s1, s2_window, eth=eth, sat=sat)
+        ops_, cnt = traceback(dirs, eth, max_ops)
+        return de, dm, ops_, cnt
+    from repro.kernels import ops
+    lead = s1.shape[:-1]
+    de, dm, ops_, cnt = ops.affine_traceback(
+        s1.reshape(-1, s1.shape[-1]),
+        s2_window.reshape(-1, s2_window.shape[-1]),
+        eth=eth, sat=sat, max_ops=max_ops, block_r=block_r)
+    return (de.reshape(lead), dm.reshape(lead),
+            ops_.reshape(lead + (max_ops,)), cnt.reshape(lead))

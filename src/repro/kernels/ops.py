@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from .affine_wf import affine_wf_dist_pallas, affine_wf_pallas
 from .linear_wf import linear_wf_pallas
 from .minimizer import minimizer_pallas
+from .traceback import affine_traceback_pallas
 
 
 def on_tpu() -> bool:
@@ -63,6 +64,26 @@ def affine_wf(s1: jnp.ndarray, s2_window: jnp.ndarray, *, eth: int = 6,
                                     block_r=block_r, interpret=not on_tpu())
     dirs = dirsT[:, :R].T.reshape(R, n, band)
     return dists[0, :R], dists[1, :R], dirs
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eth", "sat", "max_ops", "block_r"))
+def affine_traceback(s1: jnp.ndarray, s2_window: jnp.ndarray, *,
+                     eth: int = 6, sat: int = 32, max_ops: int,
+                     block_r: int = 256):
+    """Fused banded affine WF + on-device traceback via the Pallas kernel
+    (direction planes stay in VMEM scratch — see ``kernels.traceback``).
+
+    s1 (R, n), s2_window (R, n+2*eth) uint8 ->
+    (dist_end (R,), dist_min (R,), ops (R, max_ops) int32 END-aligned,
+    op_count (R,) int32).
+    """
+    s1T, R = _pad_r(s1.astype(jnp.int8).T, block_r)
+    s2T, _ = _pad_r(s2_window.astype(jnp.int8).T, block_r)
+    dists, opsT, cnt = affine_traceback_pallas(
+        s1T, s2T, eth=eth, sat=sat, max_ops=max_ops, block_r=block_r,
+        interpret=not on_tpu())
+    return dists[0, :R], dists[1, :R], opsT[:, :R].T, cnt[0, :R]
 
 
 @functools.partial(jax.jit, static_argnames=("eth", "sat", "block_r"))

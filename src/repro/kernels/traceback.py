@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: fused banded affine WF + on-device traceback.
+
+The staged pipeline materializes the (n * band, R) packed-direction planes
+in HBM (``affine_wf_pallas``), fetches nothing, and then runs a separate
+traceback program over them — the planes round-trip through HBM purely to
+connect two kernels.  This kernel fuses the two: the forward pass writes
+its direction bytes into a VMEM *scratch* buffer, and the traceback walk
+consumes them in-place, so the only O(n * band) array never leaves the
+core.  Outputs are the END-aligned op rows + per-lane op count + the two
+distance rows — exactly the arrays the host needs, nothing else crosses
+D2H.  This is DART-PIM's traceback dataflow (Sec. IV-B: direction bits
+live in auxiliary crossbar rows next to the values and are walked there)
+rather than the paper's CPU-side reconstruction.
+
+Walk layout: the fused-transition step (``repro.core.affine_wf
+.traceback_step``) emits exactly one op per active lane per iteration, so
+all ``block_r`` lanes stay in lockstep and iteration t writes the single
+output row ``(max_ops - 1 - t) % max_ops`` — a masked row update, no
+per-lane scatter.  The op rows are carried in registers/VMEM as a loop
+value and stored once at the end.
+
+VMEM per block (block_r = 256, n = 150, eth = 6, max_ops = 302): inputs
+~78 KiB, three bands ~10 KiB, dirs scratch n*band*block_r = 487 KiB, ops
+carry max_ops*block_r*4 = 302 KiB — comfortably resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.affine_wf import OP_NONE, traceback_step
+
+from .affine_wf import _init_bands, _row_step
+
+
+def _kernel(s1_ref, s2_ref, out_ref, ops_ref, cnt_ref, dirs_ref, *,
+            eth: int, n: int, sat: int, max_ops: int):
+    band = 2 * eth + 1
+    block_r = s1_ref.shape[1]
+    d_col, sat8, D0, M10, M20 = _init_bands(eth, sat, block_r)
+
+    # ---- forward pass: affine band recurrence, dirs -> VMEM scratch
+    def row(i, carry):
+        Dp, M1p, M2p = carry
+        chars = s2_ref[pl.ds(i - 1, band), :]
+        s1c = s1_ref[i - 1, :]
+        Dn, M1n, M2n, bytes_ = _row_step(Dp, M1p, M2p, chars, s1c, d_col, i,
+                                         eth=eth, sat8=sat8, block_r=block_r,
+                                         emit_dirs=True)
+        dirs_ref[pl.ds((i - 1) * band, band), :] = bytes_
+        return (Dn, M1n, M2n)
+
+    D, _, _ = jax.lax.fori_loop(1, n + 1, row, (D0, M10, M20))
+    out_ref[0, :] = D[eth, :].astype(jnp.int32)
+    out_ref[1, :] = jnp.min(D, axis=0).astype(jnp.int32)
+
+    # ---- traceback walk over the scratch planes (never leave VMEM)
+    dirs = dirs_ref[...].astype(jnp.int32)           # (n * band, block_r)
+
+    def cond(c):
+        i, d, _, _, t, _ = c
+        return ((i > 0) | (i + d - eth > 0)).any()
+
+    def body(c):
+        i, d, state, k, t, ops = c
+        cell = jnp.maximum(i - 1, 0) * band + d
+        byte = jnp.take_along_axis(dirs, cell[None, :], axis=0)[0]
+        op, ni, nd, ns, active = traceback_step(i, d, state, byte, eth)
+        ni = jnp.where(active, ni, i)
+        nd = jnp.where(active, nd, d)
+        ns = jnp.where(active, ns, state)
+        rr = jnp.remainder(max_ops - 1 - t, max_ops)
+        cur = jax.lax.dynamic_slice_in_dim(ops, rr, 1, axis=0)[0]
+        ops = jax.lax.dynamic_update_slice_in_dim(
+            ops, jnp.where(active, op, cur)[None], rr, axis=0)
+        return ni, nd, ns, k + active.astype(jnp.int32), t + 1, ops
+
+    init = (jnp.full((block_r,), n, jnp.int32),
+            jnp.full((block_r,), eth, jnp.int32),
+            jnp.zeros((block_r,), jnp.int32),
+            jnp.zeros((block_r,), jnp.int32), jnp.int32(0),
+            jnp.full((max_ops, block_r), OP_NONE, jnp.int32))
+    _, _, _, k, _, ops = jax.lax.while_loop(cond, body, init)
+    ops_ref[...] = ops
+    cnt_ref[0, :] = k
+
+
+@functools.partial(jax.jit, static_argnames=("eth", "sat", "max_ops",
+                                             "block_r", "interpret"))
+def affine_traceback_pallas(s1T: jnp.ndarray, s2T: jnp.ndarray, *,
+                            eth: int = 6, sat: int = 32, max_ops: int,
+                            block_r: int = 256, interpret: bool = True):
+    """s1T (n, R), s2T (n+2*eth, R) int8 -> (dists (2, R) int32,
+    ops (max_ops, R) int32 END-aligned, count (1, R) int32).
+
+    The direction planes live only in VMEM scratch — nothing O(n * band)
+    is allocated in HBM or crosses D2H.
+    """
+    n, R = s1T.shape
+    band = 2 * eth + 1
+    assert s2T.shape == (n + 2 * eth, R)
+    assert R % block_r == 0
+    grid = (R // block_r,)
+    return pl.pallas_call(
+        functools.partial(_kernel, eth=eth, n=n, sat=sat, max_ops=max_ops),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, block_r), lambda r: (0, r)),
+            pl.BlockSpec((n + 2 * eth, block_r), lambda r: (0, r)),
+        ],
+        out_specs=[
+            pl.BlockSpec((2, block_r), lambda r: (0, r)),
+            pl.BlockSpec((max_ops, block_r), lambda r: (0, r)),
+            pl.BlockSpec((1, block_r), lambda r: (0, r)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((2, R), jnp.int32),
+            jax.ShapeDtypeStruct((max_ops, R), jnp.int32),
+            jax.ShapeDtypeStruct((1, R), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n * band, block_r), jnp.uint8)],
+        interpret=interpret,
+    )(s1T, s2T)

@@ -1,0 +1,226 @@
+"""The fused engine (seed -> filter -> linear -> affine -> strand-fold ->
+traceback with no host sync between stages) must be bit-identical to the
+staged compacted engine at every chunk boundary; ``cigar_mode`` lazy/off
+must defer/skip traceback without changing any emitted SAM byte that does
+not depend on it; and the adaptive stage-B survivor capacity must track
+the session's observed survivor history."""
+import numpy as np
+import pytest
+
+from repro.core.mapper import Mapper
+from repro.core.pipeline import MapperConfig, MappingResult
+from repro.core.serving import MappingService
+
+FIELDS = ("position", "distance", "mapped", "ops", "op_count",
+          "n_candidates")
+
+
+@pytest.fixture(scope="module")
+def world():
+    from repro.core.index import build_index
+    from repro.data.genome import make_reference, sample_reads
+    ref = make_reference(8_000, seed=21, repeat_frac=0.03)
+    idx = build_index(ref)
+    rs = sample_reads(ref, 40, seed=23)
+    junk = np.random.default_rng(25).integers(0, 4, (8, 150)).astype(np.uint8)
+    return idx, np.concatenate([rs.reads, junk])
+
+
+def _assert_same(a, b, fields=FIELDS):
+    for f in fields:
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f)
+
+
+def _raw(res, field):
+    """Field access that does NOT trip the lazy-materialization hook."""
+    return object.__getattribute__(res, field)
+
+
+# --------------------------------------------- fused vs staged identity
+
+def test_fused_matches_staged_at_chunk_boundaries(world):
+    """One device dispatch per chunk vs the two-sync staged engine, over
+    dividing, non-dividing, and unchunked chunk shapes.  The fused path
+    drops the intermediate linear distances (they never leave device)."""
+    idx, reads = world
+    ref = Mapper(idx, MapperConfig.from_index(idx)).map(reads)
+    for chunk in (None, 16, 14):
+        cfg = MapperConfig.from_index(idx, engine="fused",
+                                      chunk_reads=chunk)
+        res = Mapper(idx, cfg).map(reads)
+        _assert_same(res, ref)
+        assert _raw(res, "linear_dist") is None
+        assert res.stats["survivors"] == ref.stats["survivors"]
+        assert res.stats.engine == "fused"
+
+
+def test_fused_pallas_backend_matches_jnp(world):
+    idx, reads = world
+    ref = Mapper(idx, MapperConfig.from_index(idx, engine="fused")).map(reads)
+    cfg = MapperConfig.from_index(idx, engine="fused", wf_backend="pallas",
+                                  lin_block_r=128, aff_block_r=64)
+    _assert_same(Mapper(idx, cfg).map(reads), ref)
+
+
+def test_fused_dual_strand_matches_padded(world):
+    """Per-chunk strand stacking + the on-device strand fold vs the
+    fully-eager padded reference, including the strand calls and the
+    reverse-best accounting."""
+    idx, reads = world
+    pad = Mapper(idx, MapperConfig.from_index(
+        idx, engine="padded", both_strands=True)).map(reads)
+    for engine, chunk in (("fused", None), ("fused", 14),
+                          ("compacted", 14)):
+        cfg = MapperConfig.from_index(idx, engine=engine,
+                                      both_strands=True, chunk_reads=chunk)
+        res = Mapper(idx, cfg).map(reads)
+        _assert_same(res, pad)
+        np.testing.assert_array_equal(res.strand, pad.strand)
+        assert res.stats["reverse_best"] == int(np.sum(
+            (np.asarray(pad.strand) == 1) & np.asarray(pad.mapped)))
+
+
+def test_fused_streamed_profile_stage_keys(world):
+    idx, reads = world
+    res = Mapper(idx, MapperConfig.from_index(
+        idx, engine="fused", chunk_reads=16, profile=True)).map(reads)
+    assert set(res.stats["stage_times_s"]) == {"seed", "fused", "d2h"}
+    staged = Mapper(idx, MapperConfig.from_index(
+        idx, chunk_reads=16, profile=True)).map(reads)
+    assert set(staged.stats["stage_times_s"]) == \
+        {"seed", "linear", "affine", "traceback", "d2h"}
+
+
+# ------------------------------------------------------- cigar_mode
+
+def test_lazy_cigar_defers_then_matches_eager(world):
+    idx, reads = world
+    eager = Mapper(idx, MapperConfig.from_index(idx)).map(reads)
+    for engine in ("compacted", "fused"):
+        cfg = MapperConfig.from_index(idx, engine=engine,
+                                      cigar_mode="lazy", chunk_reads=14)
+        res = Mapper(idx, cfg).map(reads)
+        assert _raw(res, "ops") is None
+        assert _raw(res, "lazy_tb") is not None
+        assert res.stats["affine_dirs_instances"] == 0
+        # first access materializes both fields, exactly once
+        np.testing.assert_array_equal(res.ops, eager.ops)
+        np.testing.assert_array_equal(res.op_count, eager.op_count)
+        assert _raw(res, "lazy_tb") is None
+
+
+def test_cigar_off_and_lazy_sam_output(world):
+    """Same SAM records from eager and lazy (lazy materializes inside the
+    writer); ``off`` degrades only the CIGAR/NM-bearing column to '*'
+    semantics — positions, flags, SEQ stay identical."""
+    from repro.io.fasta import Contig, ReferenceMap
+    from repro.io.sam import emit_alignments
+    idx, reads = world
+    reads = reads[:24]
+    rm = ReferenceMap([Contig("c1", 100_000, 0)])
+    names = [f"r{i}" for i in range(len(reads))]
+    quals = np.full(reads.shape, ord("I"), np.uint8)
+
+    def sam(mode):
+        cfg = MapperConfig.from_index(idx, engine="fused", cigar_mode=mode)
+        res = Mapper(idx, cfg).map(reads)
+        return [r.split("\t") for r in
+                emit_alignments(res, names, reads, quals, rm)]
+
+    eager, lazy, off = sam("eager"), sam("lazy"), sam("off")
+    assert eager == lazy
+    assert any(rec[5] not in ("*",) for rec in eager)  # real CIGARs exist
+    for e, o in zip(eager, off):
+        assert o[:3] == e[:3] and o[9] == e[9]
+        assert o[5] == "*"
+        if not int(o[1]) & 4:
+            # without ops the leading-deletion POS shift cannot apply:
+            # positions agree up to the band half-width
+            assert abs(int(o[3]) - int(e[3])) <= 6
+
+
+def test_lazy_survives_service_reassembly(world):
+    """Request reassembly and pair splitting must slice the lazy holder,
+    not materialize it; per-request CIGARs still match the eager service."""
+    idx, reads = world
+
+    def run(mode):
+        svc = MappingService(Mapper(idx, MapperConfig.from_index(
+            idx, cigar_mode=mode)))
+        a = svc.submit(reads[:10])
+        b = svc.submit(reads[10:27])
+        return svc.flush(), a, b
+
+    out_l, a, b = run("lazy")
+    for rid in (a, b):
+        assert _raw(out_l[rid], "ops") is None
+        assert _raw(out_l[rid], "lazy_tb") is not None
+    out_e, ae, be = run("eager")
+    for rl, re_ in ((a, ae), (b, be)):
+        np.testing.assert_array_equal(out_l[rl].ops, out_e[re_].ops)
+        np.testing.assert_array_equal(out_l[rl].op_count,
+                                      out_e[re_].op_count)
+
+
+# ------------------------------------------- adaptive stage-B capacity
+
+def test_stage_b_capacity_frac_override():
+    from repro.core.distributed import stage_b_affine_capacity
+    cfg = MapperConfig(stage_b_survivor_frac=0.5)
+    base = stage_b_affine_capacity(4096, cfg)
+    assert base == stage_b_affine_capacity(4096, cfg, frac=0.5)
+    lo = stage_b_affine_capacity(4096, cfg, frac=0.1)
+    hi = stage_b_affine_capacity(4096, cfg, frac=1.0)
+    assert lo <= base <= hi
+    assert hi <= 4096
+    # alignment contract: capacities stay kernel-lane aligned (or the
+    # full entry count when the fraction saturates)
+    assert lo % cfg.aff_block_r == 0
+
+
+def test_adaptive_capacity_tracks_survivor_history(world):
+    from repro.core.distributed import shard_index
+    from repro.core.mapper import _flat_mesh
+    idx, reads = world
+    mesh, sidx = _flat_mesh(1), shard_index(idx, 1)
+    cfg = MapperConfig.from_index(idx, stage_b_adaptive=True,
+                                  stage_b_quantile=0.9)
+    m = Mapper(sidx, cfg, topology="mesh", mesh=mesh)
+    assert m._stage_b_frac() is None          # no history yet -> static
+    cap0 = m.plan(len(reads)).stage_b_affine_cap
+    ref = m.map(reads)
+    assert len(m._survivor_hist) == 1
+    frac = m._stage_b_frac()
+    assert frac is not None and 0.0 < frac <= 1.0
+    plan1 = m.plan(len(reads))
+    # the adaptively-derived capacity is part of the plan key, so a
+    # changed capacity can never silently reuse a stale compiled program
+    assert plan1.key[-1] == plan1.stage_b_affine_cap
+    # low observed survivor rates shrink the provisioned capacity
+    assert plan1.stage_b_affine_cap <= cap0
+    res = m.run(plan1, reads)
+    _assert_same(res, ref, fields=("position", "distance", "mapped"))
+    assert res.stats["stage_b_affine_dropped"] == 0
+
+
+def test_service_affine_drop_rate(world):
+    idx, reads = world
+    svc = MappingService(Mapper(idx, MapperConfig.from_index(idx)))
+    svc.submit(reads)
+    svc.flush()
+    assert svc.affine_drop_rate == 0.0
+    assert svc.totals["survivors"] > 0
+
+
+# ------------------------------------------------------- config guards
+
+def test_new_config_fields_validated():
+    with pytest.raises(ValueError, match="cigar_mode"):
+        MapperConfig(cigar_mode="sometimes")
+    with pytest.raises(ValueError, match="padded"):
+        MapperConfig(engine="padded", cigar_mode="lazy")
+    with pytest.raises(ValueError, match="stage_b_quantile"):
+        MapperConfig(stage_b_quantile=1.5)
+    with pytest.raises(ValueError, match="stage_b_history"):
+        MapperConfig(stage_b_history=0)
