@@ -23,6 +23,12 @@ REGRESSION_METRIC = "reads_per_s"
 # independently so a regression hiding inside an improved total still fails
 STAGE_ENGINES = ("compacted_pallas_sync", "fused_pallas_sync")
 STAGE_NOISE_FLOOR_S = 0.005  # sub-5ms stages are runner noise, not signal
+# armed-but-idle fault-tolerance tax ceiling: the resilience stack
+# (injector in the fetch thread + watchdog + retry wrapper) may cost at
+# most this fraction of the plain streamed engine's reads/s.  The metric
+# is self-relative (armed vs plain in the *same* fresh run), so it needs
+# no hardware-variance tolerance on top.
+RESILIENCE_OVERHEAD_MAX = 0.05
 
 
 def emit_pipeline_json(path: str, reads: int, chunk_reads: int | None,
@@ -60,6 +66,16 @@ def emit_pipeline_json(path: str, reads: int, chunk_reads: int | None,
               f"{pp['reads_per_s']:.1f} reads/s "
               f"({pp['pairs_per_s']:.1f} pairs/s, proper "
               f"{pp['proper_frac']:.1%}, {pp['rescued']} rescued)")
+    ro = bench.get("resilience_overhead")
+    if ro:
+        if "error" in ro:
+            print(f"resilience_overhead: ERROR {ro['error']}")
+        else:
+            print(f"resilience_overhead (armed-but-idle injector + "
+                  f"watchdog + retry wrapper): "
+                  f"{ro['armed_reads_per_s']:.1f} vs "
+                  f"{ro['plain_reads_per_s']:.1f} plain reads/s "
+                  f"({ro['overhead_frac']:.1%} overhead)")
     print(f"wrote {path}")
     return bench
 
@@ -140,6 +156,24 @@ def check_regression(fresh: dict, baseline_path: str, tolerance: float,
         rc |= _gate_metric("paired_path.reads_per_s",
                            fresh.get("paired_path", {}).get("reads_per_s"),
                            bp, tolerance)
+    ro = fresh.get("resilience_overhead")
+    if base.get("resilience_overhead") is None:
+        print(f"perf-trend: baseline {baseline_path} lacks "
+              f"resilience_overhead; skipping check")
+    elif ro is None or "error" in (ro or {}):
+        why = (ro or {}).get("error", "section missing from fresh run")
+        print(f"perf-trend: FAIL — fresh run has no resilience_overhead "
+              f"({why})")
+        rc |= 1
+    else:
+        of = ro["overhead_frac"]
+        verdict = "OK" if of <= RESILIENCE_OVERHEAD_MAX else "FAIL"
+        print(f"perf-trend: {verdict} — resilience_overhead "
+              f"armed={ro['armed_reads_per_s']:.1f} "
+              f"plain={ro['plain_reads_per_s']:.1f} reads/s "
+              f"overhead={of:.1%} "
+              f"(ceiling {RESILIENCE_OVERHEAD_MAX:.0%})")
+        rc |= of > RESILIENCE_OVERHEAD_MAX
     for engine in STAGE_ENGINES:
         rc |= _gate_stages(fresh, base, engine, stage_tolerance)
     return rc

@@ -4,9 +4,12 @@ The public mapping API is the ``Mapper`` session (``repro.core.mapper``);
 everything else is the stage library it orchestrates.
 """
 from . import (affine_wf, costmodel, distributed, encoding, filtering, index,
-               linear_wf, mapper, minimizers, pipeline, seeding,
+               linear_wf, mapper, minimizers, pipeline, resilience, seeding,
                serving)  # noqa: F401
 from .index import GenomeIndex, build_index  # noqa: F401
 from .mapper import Mapper, MapperStats, MappingPlan  # noqa: F401
 from .pipeline import MapperConfig, MappingResult, map_reads  # noqa: F401
+from .resilience import (AdmissionConfig, FaultInjector,  # noqa: F401
+                         MappingError, ResilientMapper, RetryPolicy,
+                         ShedError)
 from .serving import BatcherConfig, MappingService  # noqa: F401

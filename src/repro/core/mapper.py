@@ -76,7 +76,8 @@ __all__ = ["Mapper", "MapperStats", "MappingPlan", "TOPOLOGIES",
 
 
 _PER_READ_FIELDS = ("position", "distance", "distance2", "mapped", "strand",
-                    "ops", "op_count", "linear_dist", "n_candidates")
+                    "ops", "op_count", "linear_dist", "n_candidates",
+                    "failed")
 
 
 def split_result(res: MappingResult, n: int,
@@ -129,6 +130,8 @@ class MapperStats:
     #                                alignment used the reverse complement
     plan_cache_hits: int = 0       # session cumulative, sampled at run time
     plan_cache_misses: int = 0
+    retries: int = 0               # resilience: block retries this run
+    failed_reads: int = 0          # resilience: reads quarantined this run
     extra: dict = dataclasses.field(default_factory=dict)
 
     # -- dict-compatibility with the legacy stats shapes ------------------
@@ -288,17 +291,32 @@ class Mapper:
     n_shards, send_cap : int, optional
         Mesh topology only: shard count for the default mesh, and a fixed
         send-FIFO capacity (default: scaled from each plan's batch size).
+    injector : FaultInjector, optional
+        Chaos hook threaded into the streaming engine's fetch thread
+        (``core.resilience``).  Runtime state, deliberately NOT part of
+        ``MapperConfig`` — the config is a static jit argument and must
+        stay hashable/value-comparable.
+    watchdog_s : float, optional
+        Streaming fetch watchdog: a chunk fetch exceeding this wall time
+        raises ``streaming.FetchStallError`` instead of hanging the
+        session.  None (default) disables the bound.
     """
 
     def __init__(self, index, cfg: MapperConfig | None = None, *,
                  topology: str = "single", mesh=None,
-                 n_shards: int | None = None, send_cap: int | None = None):
+                 n_shards: int | None = None, send_cap: int | None = None,
+                 injector=None, watchdog_s: float | None = None):
         if topology not in TOPOLOGIES:
             raise ValueError(f"unknown topology {topology!r}; "
                              f"expected one of {TOPOLOGIES}")
+        if watchdog_s is not None and watchdog_s <= 0:
+            raise ValueError(f"watchdog_s={watchdog_s!r} must be > 0 "
+                             f"(or None to disable)")
         self.cfg = cfg or MapperConfig.from_index(index)
         self.topology = topology
         self.send_cap = send_cap
+        self.injector = injector
+        self.watchdog_s = watchdog_s
         self._plan_cache: dict[tuple, object] = {}
         self.plan_cache_hits = 0
         self.plan_cache_misses = 0
@@ -457,11 +475,13 @@ class Mapper:
                 max_workers=1, thread_name_prefix="mapper-session")
         return self._pool.submit(self.map, reads)
 
-    def serve(self, batcher=None):
-        """A ``MappingService`` request batcher wired to this session."""
+    def serve(self, batcher=None, **kwargs):
+        """A ``MappingService`` request batcher wired to this session.
+        ``kwargs`` forward to ``MappingService`` (``admission=``,
+        ``retry=``, ``injector=``)."""
         from .serving import BatcherConfig, MappingService
-        return MappingService(self,
-                              batcher=batcher or BatcherConfig())
+        return MappingService(self, batcher=batcher or BatcherConfig(),
+                              **kwargs)
 
     def close(self):
         """Shut down the ``map_async`` worker (no-op if never used)."""
@@ -528,7 +548,9 @@ class Mapper:
         if cfg.stream:
             times = {} if cfg.profile else None
             fetched = streaming.stream_map(items, pipe.phase1, pipe.phase2,
-                                           pipe.fetch, times=times)
+                                           pipe.fetch, times=times,
+                                           injector=self.injector,
+                                           watchdog_s=self.watchdog_s)
         else:
             times = {}
             fetched = streaming.sync_map(items, pipe.phase1, pipe.phase2,

@@ -355,8 +355,13 @@ def resolve_pairs(res1: MappingResult, res2: MappingResult, *,
            and reads1 is not None and reads2 is not None else None)
     if win is not None:
         max_dist = cfg.eth if rescue_max_dist is None else rescue_max_dist
-        only1 = np.flatnonzero(m1 & ~m2)
-        only2 = np.flatnonzero(m2 & ~m1)
+        # quarantined reads (resilience layer: block failed after retries)
+        # carry synthesized unmapped rows — their bases never went through
+        # the engine, so they must neither anchor a rescue nor be rescued
+        f1 = res1.failed if res1.failed is not None else np.zeros(n, bool)
+        f2 = res2.failed if res2.failed is not None else np.zeros(n, bool)
+        only1 = np.flatnonzero(m1 & ~m2 & ~f1 & ~f2)
+        only2 = np.flatnonzero(m2 & ~m1 & ~f1 & ~f2)
         n_rescued += _rescue(res2, res1, only1, np.asarray(reads2),
                              ref, cfg, win, max_dist, rescue_max_windows,
                              rescued2)

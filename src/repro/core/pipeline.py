@@ -196,6 +196,10 @@ class MappingResult:
     linear_dist: np.ndarray | None = None  # (R, M, P) candidate linear dists
     n_candidates: np.ndarray | None = None  # (R,) valid PLs seeded
     stats: object | None = None  # MapperStats (compacted/mesh) | None
+    failed: np.ndarray | None = None  # (R,) bool quarantine mask set by the
+    #                      resilience layer: True rows exhausted retry +
+    #                      bisection and carry synthesized unmapped values
+    #                      (position=-1, mapped=False); None on healthy runs
     lazy_tb: object | None = None  # LazyTraceback (cigar_mode="lazy") —
     #                      consumed (set back to None) on materialization
 

@@ -25,10 +25,19 @@ accounting.  The session's topology decides where buckets execute:
     repeated buckets hit the compiled shard_map program with **zero**
     recompiles after warm-up (observable via the plan-cache counters in
     ``MapperStats`` / ``Mapper.plan_cache_hits``).
+
+Fault tolerance (``repro.core.resilience``): admission control bounds the
+pending queue at ``submit`` (``AdmissionConfig`` — block or shed, plus
+per-request deadlines), and ``flush`` is **transactional**: every drained
+request id is resolved exactly once, to its results or to a structured
+``MappingError`` — a failed bucket is retried, bisected and quarantined
+by the ``ResilientMapper`` so it takes down only the reads that caused
+it, never the flush.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
@@ -36,6 +45,8 @@ from .compaction import bucket_capacity
 from .mapper import (_PER_READ_FIELDS, Mapper, MapperStats,
                      accumulate_stats, split_result)
 from .pipeline import MapperConfig, MappingResult
+from .resilience import (AdmissionConfig, MappingError, ResilientMapper,
+                         RetryPolicy, ShedError, assemble_segments)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,9 +55,14 @@ class BatcherConfig:
     bucket_max: int = 1024   # largest; == the streaming chunk size (pow2)
 
     def __post_init__(self):
-        for v in (self.bucket_min, self.bucket_max):
-            assert v >= 1 and (v & (v - 1)) == 0, "bucket sizes must be pow2"
-        assert self.bucket_min <= self.bucket_max
+        for name in ("bucket_min", "bucket_max"):
+            v = getattr(self, name)
+            if v < 1 or (v & (v - 1)) != 0:
+                raise ValueError(f"{name}={v!r} must be a positive power "
+                                 f"of two")
+        if self.bucket_min > self.bucket_max:
+            raise ValueError(f"bucket_min={self.bucket_min} must be <= "
+                             f"bucket_max={self.bucket_max}")
 
 
 def pow2_buckets(n: int, *, lo: int, hi: int) -> list[int]:
@@ -65,6 +81,10 @@ class ReadBatcher:
     ``submit`` enqueues a request and returns its id; ``drain`` hands back
     everything pending as one concatenated read block plus the bucket
     cover and per-request spans, and resets the queue.
+
+    Malformed submissions raise ``ValueError`` (not ``assert`` — service
+    callers need recoverable errors, and asserts vanish under
+    ``python -O``).
     """
 
     def __init__(self, read_len: int, cfg: BatcherConfig = BatcherConfig()):
@@ -81,11 +101,13 @@ class ReadBatcher:
 
     def submit(self, reads: np.ndarray) -> int:
         reads = np.asarray(reads)
-        assert reads.ndim == 2 and reads.shape[1] == self.read_len, \
-            f"expected (n, {self.read_len}) reads, got {reads.shape}"
+        if reads.ndim != 2 or reads.shape[1] != self.read_len:
+            raise ValueError(f"expected (n, {self.read_len}) reads, got "
+                             f"{reads.shape}")
         # empty requests are rejected up front: an all-empty flush would
         # otherwise drain the queue without ever resolving their ids
-        assert len(reads) >= 1, "empty read batch"
+        if len(reads) < 1:
+            raise ValueError("empty read batch")
         rid = self._next_id
         self._next_id += 1
         self._pending.append((rid, reads))
@@ -116,9 +138,15 @@ class ReadBatcher:
 # reassembly and pair splitting cannot drift apart
 _RESULT_FIELDS = _PER_READ_FIELDS
 
+# engine accounting accumulated from each flush's merged MapperStats ...
 _TOTAL_FIELDS = ("reads", "candidates", "survivors", "affine_instances",
                  "padded_affine_instances", "dropped_send", "dropped_affine",
                  "reverse_best")
+# ... plus the service-level failure counters maintained by the service
+# itself (these are NOT MapperStats attributes — _accumulate must keep
+# passing fields=_TOTAL_FIELDS explicitly)
+_SERVICE_FIELDS = ("shed_requests", "deadline_misses", "retries",
+                   "failed_reads", "failed_requests")
 
 
 class MappingService:
@@ -134,25 +162,92 @@ class MappingService:
     ``totals`` accumulates the unified ``MapperStats`` accounting across
     flushes — survivors, executed affine instances, drop counters — and
     ``mapper.plan_cache_hits``/``misses`` expose the warm-up behaviour.
+
+    Fault-tolerance knobs:
+
+    admission : AdmissionConfig
+        Bounded pending queue + default deadline.  When a ``submit``
+        would push ``pending_reads`` past ``max_pending_reads``:
+        ``policy="block"`` flushes the queue synchronously first (those
+        results are delivered by the *next* ``flush``) and then accepts;
+        ``policy="shed"`` raises ``ShedError`` and counts
+        ``totals["shed_requests"]``.  A single request larger than the
+        bound is accepted against an empty queue (no livelock).
+    retry : RetryPolicy
+        Block-level retry/bisection/degradation applied inside ``flush``
+        (see ``resilience.ResilientMapper``).
+    injector : FaultInjector
+        Chaos hook: armed sites fire inside ``flush`` and in the
+        session's streaming fetch thread.
+
+    ``flush`` resolves **every** drained request id exactly once — to a
+    ``MappingResult`` (possibly carrying a partial ``failed`` quarantine
+    mask), a ``(res1, res2)`` pair, or a ``MappingError`` — even when a
+    bucket, the injector, or the service itself fails mid-flush.
     """
 
     def __init__(self, index_or_mapper, cfg: MapperConfig | None = None,
-                 batcher: BatcherConfig = BatcherConfig()):
+                 batcher: BatcherConfig = BatcherConfig(), *,
+                 admission: AdmissionConfig = AdmissionConfig(),
+                 retry: RetryPolicy = RetryPolicy(), injector=None):
         if isinstance(index_or_mapper, Mapper):
-            assert cfg is None, "pass cfg via the Mapper session"
+            if cfg is not None:
+                raise ValueError("pass cfg via the Mapper session")
             self.mapper = index_or_mapper
         else:
-            self.mapper = Mapper(index_or_mapper, cfg)
+            self.mapper = Mapper(index_or_mapper, cfg, injector=injector)
         self.index = self.mapper.index
         self.cfg = self.mapper.cfg
         self.batcher = ReadBatcher(self.cfg.read_len, batcher)
-        self.totals = {k: 0 for k in _TOTAL_FIELDS}
+        self.admission = admission
+        self.injector = injector if injector is not None \
+            else self.mapper.injector
+        self.resilient = ResilientMapper(self.mapper, retry,
+                                         injector=self.injector)
+        self.totals = {k: 0 for k in _TOTAL_FIELDS + _SERVICE_FIELDS}
         self._paired: set[int] = set()
+        self._deadlines: dict[int, float] = {}
+        self._ready: dict[int, object] = {}
 
-    def submit(self, reads: np.ndarray) -> int:
-        return self.batcher.submit(reads)
+    # ----------------------------------------------------------- admission
 
-    def submit_paired(self, reads1: np.ndarray, reads2: np.ndarray) -> int:
+    def _admit(self, n_reads: int) -> None:
+        lim = self.admission.max_pending_reads
+        if lim is None:
+            return
+        pending = self.batcher.pending_reads
+        if pending + n_reads <= lim or pending == 0:
+            return  # fits, or single oversize request against empty queue
+        if self.admission.policy == "shed":
+            self.totals["shed_requests"] += 1
+            raise ShedError(
+                f"pending queue full ({pending} + {n_reads} > {lim} "
+                f"reads); resubmit after a flush")
+        # "block": drain synchronously, hold results for the next flush.
+        # flush() swaps self._ready for a fresh dict, so the held results
+        # must be merged into the *post*-flush dict, not the pre-flush one
+        held = self.flush()
+        self._ready.update(held)
+
+    def _arm_deadline(self, rid: int, deadline_s: float | None) -> int:
+        dl = deadline_s if deadline_s is not None \
+            else self.admission.deadline_s
+        if dl is not None:
+            if dl <= 0:
+                raise ValueError(f"deadline_s={dl!r} must be > 0")
+            self._deadlines[rid] = time.monotonic() + dl
+        return rid
+
+    # ---------------------------------------------------------- submission
+
+    def submit(self, reads: np.ndarray, *,
+               deadline_s: float | None = None) -> int:
+        reads = np.asarray(reads)
+        self._admit(len(reads))
+        return self._arm_deadline(self.batcher.submit(reads), deadline_s)
+
+    def submit_paired(self, reads1: np.ndarray, reads2: np.ndarray, *,
+                      deadline_s: float | None = None) -> int:
         """Queue a paired-end request: mates ride the bucket pipeline as
         one stacked block (R1 rows then R2 rows), and ``flush`` hands the
         request back as a ``(res1, res2)`` per-mate tuple instead of one
@@ -162,65 +257,135 @@ class MappingService:
         if reads1.shape != reads2.shape:
             raise ValueError(f"mate batches must align pairwise: "
                              f"{reads1.shape} vs {reads2.shape}")
+        self._admit(2 * len(reads1))
         rid = self.batcher.submit(np.concatenate([reads1, reads2]))
         self._paired.add(rid)
-        return rid
+        return self._arm_deadline(rid, deadline_s)
 
-    def _accumulate(self, parts: list[MappingResult]) -> None:
-        for p in parts:
-            accumulate_stats(self.totals, p.stats)
+    def _accumulate(self, stats) -> None:
+        accumulate_stats(self.totals, stats, fields=_TOTAL_FIELDS)
 
-    def flush(self) -> dict[int, MappingResult]:
+    # --------------------------------------------------------------- flush
+
+    def flush(self) -> dict[int, object]:
+        """Drain and map everything pending.
+
+        Returns ``{request_id: MappingResult | (res1, res2) |
+        MappingError}`` covering every id drained by this call (plus any
+        results held from admission-triggered blocking flushes).  The
+        resolve is transactional: ids are removed from the pending state
+        *first*, then each is resolved exactly once — a failure anywhere
+        in the mapping path turns into per-request ``MappingError``
+        values, never a raise that would strand drained ids.
+        """
+        out, self._ready = self._ready, {}
         reads, buckets, spans = self.batcher.drain()
         if not buckets:
-            return {}
-        parts = []
+            return out
+        paired = {rid for rid in spans if rid in self._paired}
+        self._paired -= paired      # moved out of pending state at drain
+
+        # expire deadlines before spending any compute on the batch
+        now = time.monotonic()
+        live: list[tuple[int, np.ndarray]] = []
+        for rid, (lo, hi_) in spans.items():
+            dl = self._deadlines.pop(rid, None)
+            if dl is not None and now > dl:
+                self.totals["deadline_misses"] += 1
+                out[rid] = MappingError(
+                    "deadline", f"request {rid} missed its deadline by "
+                    f"{now - dl:.3f}s before mapping", n_reads=hi_ - lo)
+            else:
+                live.append((rid, reads[lo:hi_]))
+        if not live:
+            return out
+        if len(live) < len(spans):  # rebuild the batch without the expired
+            spans, off = {}, 0
+            for rid, r in live:
+                spans[rid] = (off, off + len(r))
+                off += len(r)
+            reads = np.concatenate([r for _, r in live])
+            buckets = pow2_buckets(len(reads), lo=self.batcher.cfg.bucket_min,
+                                   hi=self.batcher.cfg.bucket_max)
+        else:
+            spans = {rid: spans[rid] for rid, _ in live}
+
+        try:
+            if self.injector is not None:
+                self.injector.check("flush")
+            segments, counters = self._map_buckets(reads, buckets)
+            res, mask = assemble_segments(segments, self.resilient.cfg,
+                                          counters)
+            self.totals["retries"] += counters["retries"]
+            self.totals["failed_reads"] += counters["failed_reads"]
+            if res is not None:
+                self._accumulate(res.stats)
+            for rid, (lo, hi_) in spans.items():
+                out[rid] = self._resolve(res, mask, lo, hi_,
+                                         paired=rid in paired)
+        except Exception as e:  # noqa: BLE001 — transactional boundary:
+            # every drained id must resolve; an unexpected failure here
+            # becomes a structured per-request error, not a stranded rid
+            for rid, (lo, hi_) in spans.items():
+                if rid not in out:
+                    self.totals["failed_requests"] += 1
+                    out[rid] = MappingError(
+                        "internal", f"{type(e).__name__}: {e}",
+                        n_reads=hi_ - lo)
+        return out
+
+    def _map_buckets(self, reads: np.ndarray, buckets: list[int]):
+        """Route the bucket cover through the resilient mapper ->
+        ``(segments, counters)`` covering ``reads`` in order."""
+        counters = None
+        segments = []
         if self.mapper.topology == "mesh":
             # every bucket is one distributed batch; same-size buckets
             # share a plan key -> the compiled shard_map program
             off = 0
             for b in buckets:
                 block = reads[off : off + b]  # last block may be short
+                seg, counters = self.resilient.map_segments(
+                    block, plan_n=b, base=off, counters=counters)
+                segments += seg
                 off += b
-                parts.append(self.mapper.run(self.mapper.plan(b), block))
         else:
             hi = self.batcher.cfg.bucket_max
             n_full = sum(1 for b in buckets if b == hi)
             if n_full:  # full buckets: one streamed multi-chunk plan
-                plan = self.mapper.plan(n_full * hi, chunk=hi)
-                parts.append(self.mapper.run(plan, reads[: n_full * hi]))
+                seg, counters = self.resilient.map_segments(
+                    reads[: n_full * hi], chunk=hi, counters=counters)
+                segments += seg
             rest = reads[n_full * hi :]
             if len(rest):  # residue: its own pow-2 chunk shape
-                plan = self.mapper.plan(len(rest), chunk=buckets[-1])
-                parts.append(self.mapper.run(plan, rest))
-        self._accumulate(parts)
+                seg, counters = self.resilient.map_segments(
+                    rest, chunk=buckets[-1], base=n_full * hi,
+                    counters=counters)
+                segments += seg
+        return segments, counters
 
-        def cat(field):
-            # raw access: a cigar_mode="lazy" bucket result must not be
+    def _resolve(self, res, mask, lo, hi_, *, paired: bool):
+        """One request's slice of the assembled flush result."""
+        n = hi_ - lo
+        if res is None or mask[lo:hi_].all():
+            self.totals["failed_requests"] += 1
+            return MappingError("execution",
+                                "all reads in this request were "
+                                "quarantined after retries", n_reads=n)
+
+        def raw(f):
+            # raw access: a cigar_mode="lazy" flush result must not be
             # materialized just to be reassembled per request
-            arrs = [object.__getattribute__(p, field) for p in parts]
-            if any(a is None for a in arrs):  # mesh: no traceback fields
-                return None
-            return arrs[0] if len(arrs) == 1 else np.concatenate(arrs)
+            v = object.__getattribute__(res, f)
+            return v[lo:hi_] if v is not None else None
 
-        fields = {f: cat(f) for f in _RESULT_FIELDS}
-        lts = [object.__getattribute__(p, "lazy_tb") for p in parts]
-        lazy = None
-        if all(lt is not None for lt in lts):
-            from .pipeline import LazyTraceback
-            lazy = LazyTraceback.concat(lts)
-        out = {}
-        for rid, (lo, hi_) in spans.items():
-            res = MappingResult(
-                **{f: (v[lo:hi_] if v is not None else None)
-                   for f, v in fields.items()},
-                stats=None,
-                lazy_tb=lazy[lo:hi_] if lazy is not None else None)
-            if rid in self._paired:
-                self._paired.discard(rid)
-                res = split_result(res, (hi_ - lo) // 2)
-            out[rid] = res
-        return out
+        lt = object.__getattribute__(res, "lazy_tb")
+        part = MappingResult(**{f: raw(f) for f in _RESULT_FIELDS},
+                             stats=None,
+                             lazy_tb=lt[lo:hi_] if lt is not None else None)
+        if paired:
+            return split_result(part, n // 2)
+        return part
 
     @property
     def affine_drop_rate(self) -> float:

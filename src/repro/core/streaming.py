@@ -35,10 +35,27 @@ from __future__ import annotations
 
 import time
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeoutError
 
 import jax
 
-__all__ = ["stream_map", "sync_map", "donatable_argnums", "timed"]
+__all__ = ["stream_map", "sync_map", "donatable_argnums", "timed",
+           "FetchStallError"]
+
+
+class FetchStallError(RuntimeError):
+    """The fetch thread exceeded the streaming watchdog (``watchdog_s``).
+
+    A D2H copy that never completes — a wedged device queue, a deadlocked
+    transfer — previously hung ``stream_map`` forever in the final
+    ``f.result()``.  With a watchdog armed, the stall surfaces as this
+    error instead, which the resilience layer treats like any other block
+    failure (retry, then quarantine).
+
+    Defined here (not in ``core.resilience``) so the streaming layer has
+    no upward imports; ``resilience`` re-exports it as part of the error
+    taxonomy.
+    """
 
 
 def donatable_argnums(*argnums: int) -> tuple[int, ...]:
@@ -67,7 +84,8 @@ def timed(times: dict | None, key: str, t0: float) -> float:
 
 
 def stream_map(items: list, phase1, phase2, fetch,
-               times: dict | None = None) -> list:
+               times: dict | None = None, *, injector=None,
+               watchdog_s: float | None = None) -> list:
     """Double-buffered streaming execution over ``items`` (one per chunk).
 
     phase1(item)   -> state   : host prep + H2D + first async dispatch
@@ -86,20 +104,62 @@ def stream_map(items: list, phase1, phase2, fetch,
     on the stage milestone arrays phase2 attached (the stage that the
     device queue is actually waiting on accrues the time).  It is only
     ever mutated from the single fetch worker, so no locking is needed.
+
+    Fault tolerance: a fetch that fails used to surface only at the final
+    ``f.result()`` drain — every later chunk was still dispatched and
+    fetched first.  The dispatch loop now polls completed fetch futures
+    and re-raises the first failure *promptly*, before dispatching more
+    work.  ``watchdog_s`` bounds each fetch's wall time (a wedged fetch
+    thread raises ``FetchStallError`` instead of hanging the caller
+    forever) and ``injector`` is the chaos hook: each fetch first runs
+    ``injector.sleep("fetch_stall")`` / ``injector.check("fetch_error")``
+    on the fetch thread.  Both default off and add one branch per chunk.
     """
     n = len(items)
     if n == 0:
         return []
+
+    if injector is None:
+        run_fetch = fetch
+    else:
+        def run_fetch(outs, times_):
+            injector.sleep("fetch_stall")
+            injector.check("fetch_error")
+            return fetch(outs, times_)
+
     futs = [None] * n
-    with ThreadPoolExecutor(max_workers=1,
-                            thread_name_prefix="stream-fetch") as pool:
+    pool = ThreadPoolExecutor(max_workers=1,
+                              thread_name_prefix="stream-fetch")
+    try:
         state = phase1(items[0])
         for i in range(n):
+            # prompt propagation: if an already-completed fetch failed,
+            # raise now instead of dispatching the rest of the stream
+            for f in futs[:i]:
+                if f is not None and f.done():
+                    f.result()
             nxt = phase1(items[i + 1]) if i + 1 < n else None
             outs = phase2(state)
-            futs[i] = pool.submit(fetch, outs, times)
+            futs[i] = pool.submit(run_fetch, outs, times)
             state = nxt
-        return [f.result() for f in futs]
+        out = []
+        for i, f in enumerate(futs):
+            try:
+                out.append(f.result(timeout=watchdog_s))
+            except FutureTimeoutError:
+                # don't join the wedged worker — cancel what we can and
+                # abandon the pool so the caller gets the error, not a
+                # second hang in shutdown
+                pool.shutdown(wait=False, cancel_futures=True)
+                pool = None
+                raise FetchStallError(
+                    f"fetch of chunk {i}/{n} exceeded the streaming "
+                    f"watchdog ({watchdog_s}s); device queue or fetch "
+                    f"thread is stalled") from None
+        return out
+    finally:
+        if pool is not None:
+            pool.shutdown(wait=True)
 
 
 def sync_map(items: list, phase1, phase2, fetch,

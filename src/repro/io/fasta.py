@@ -126,19 +126,34 @@ class ReferenceMap:
         return c, int(np.clip(pos - c.offset, 0, max(c.length - 1, 0)))
 
 
-def load_reference(path_or_handle, *, spacer: int,
+def load_reference(path_or_handle, *, spacer: int, on_error: str = "strict",
+                   rejected: list | None = None,
                    ) -> tuple[np.ndarray, list[Contig]]:
     """Multi-record FASTA -> (flat uint8 reference, contig table).
 
     Contigs are joined by ``spacer`` SENTINEL bases (size it >= one
     alignment window, ``read_len + 2*eth``, so no read maps across a
-    boundary).  Empty records are rejected — an empty contig would be
-    indistinguishable from its spacer.
+    boundary).  Degenerate records — empty sequence, or *only* non-ACGT
+    bases (an all-SENTINEL contig is indistinguishable from its spacer
+    and can never be mapped onto) — are rejected: ``on_error="strict"``
+    raises naming the contig; ``on_error="permissive"`` skips the contig
+    and appends ``(name, reason)`` to ``rejected`` (when given), so a
+    draft assembly full of N-only scaffolds still loads.
     """
+    if on_error not in ("strict", "permissive"):
+        raise ValueError(f"on_error={on_error!r}; expected 'strict' or "
+                         f"'permissive'")
     parts, contigs, off = [], [], 0
     for name, codes in parse_fasta(path_or_handle):
-        if len(codes) == 0:
-            raise ValueError(f"FASTA contig {name!r} has no sequence")
+        reason = ("no sequence" if len(codes) == 0 else
+                  "only non-ACGT (sentinel) bases"
+                  if (codes == SENTINEL).all() else None)
+        if reason is not None:
+            if on_error == "strict":
+                raise ValueError(f"FASTA contig {name!r} has {reason}")
+            if rejected is not None:
+                rejected.append((name, reason))
+            continue
         if contigs:
             parts.append(np.full(spacer, SENTINEL, dtype=np.uint8))
             off += spacer
@@ -146,5 +161,5 @@ def load_reference(path_or_handle, *, spacer: int,
         parts.append(codes)
         off += len(codes)
     if not contigs:
-        raise ValueError("empty FASTA: no records")
+        raise ValueError("empty FASTA: no records (or none usable)")
     return np.concatenate(parts), contigs

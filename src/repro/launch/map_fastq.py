@@ -35,10 +35,13 @@ import sys
 import time
 
 
-def _open_stream(args):
+def _open_stream(args, injector=None):
     """Build the FASTQ stream per input layout -> (stream, paired)."""
     from repro.io.fastq import FastqStream, PairedFastqStream
 
+    kw = dict(read_len=args.read_len, chunk_reads=args.chunk_reads,
+              on_error=args.on_error, rejects=args.rejects,
+              injector=injector)
     if args.r2 is not None and args.r1 is None:
         raise SystemExit("map_fastq: --r2 needs --r1")
     if args.r1 is not None:
@@ -51,17 +54,13 @@ def _open_stream(args):
         if args.interleaved:
             raise SystemExit("map_fastq: --interleaved takes a single "
                              "positional FASTQ, not --r1/--r2")
-        return PairedFastqStream(args.r1, args.r2, read_len=args.read_len,
-                                 chunk_reads=args.chunk_reads), True
+        return PairedFastqStream(args.r1, args.r2, **kw), True
     if args.reads is None:
         raise SystemExit("map_fastq: no reads given (positional FASTQ or "
                          "--r1/--r2)")
     if args.interleaved:
-        return PairedFastqStream(args.reads, interleaved=True,
-                                 read_len=args.read_len,
-                                 chunk_reads=args.chunk_reads), True
-    return FastqStream(args.reads, read_len=args.read_len,
-                       chunk_reads=args.chunk_reads), False
+        return PairedFastqStream(args.reads, interleaved=True, **kw), True
+    return FastqStream(args.reads, **kw), False
 
 
 def run(args) -> int:
@@ -69,28 +68,50 @@ def run(args) -> int:
     from repro.core.mapper import Mapper, accumulate_stats
     from repro.core.pairing import InsertSizeTracker, resolve_pairs
     from repro.core.pipeline import MapperConfig
+    from repro.core.resilience import FaultInjector, ResilientMapper
     from repro.io.fasta import ReferenceMap, load_reference
+
     from repro.io.sam import (emit_alignments, emit_paired_alignments,
                               sam_header)
 
     t0 = time.perf_counter()
-    stream, paired = _open_stream(args)
+    injector = (FaultInjector.from_spec(args.inject)
+                if args.inject is not None else None)
+    stream, paired = _open_stream(args, injector)
     rl = stream.read_len
     # spacer >= one alignment window: no read can map across a boundary
-    ref, contigs = load_reference(args.reference, spacer=rl + 2 * args.eth)
+    rejected_contigs: list = []
+    ref, contigs = load_reference(args.reference, spacer=rl + 2 * args.eth,
+                                  on_error=args.on_error,
+                                  rejected=rejected_contigs)
+    for cname, why in rejected_contigs:
+        print(f"map_fastq: skipped contig {cname!r}: {why}",
+              file=sys.stderr)
     refmap = ReferenceMap(contigs)
     idx = build_index(ref, read_len=rl, k=args.k, w=args.w, eth=args.eth)
     cfg = MapperConfig.from_index(
         idx, engine=args.engine, wf_backend=args.wf_backend,
         chunk_reads=args.chunk_reads, stream=not args.no_stream,
         both_strands=not args.single_strand)
-    mapper = Mapper(idx, cfg, topology=args.topology, n_shards=args.shards)
+    mapper = Mapper(idx, cfg, topology=args.topology, n_shards=args.shards,
+                    injector=injector, watchdog_s=args.watchdog)
+    # fault containment (retry/bisect/degrade) is armed alongside the
+    # injector or a permissive run; a plain strict run keeps today's
+    # fail-fast behaviour with zero wrapping
+    resilient = (ResilientMapper(mapper, injector=injector)
+                 if injector is not None or args.on_error == "permissive"
+                 else None)
     print(f"map_fastq: {len(contigs)} contig(s), {len(ref)} indexed bases, "
           f"read_len={rl}, topology={mapper.topology}, paired={paired}, "
           f"both_strands={cfg.both_strands}, engine={cfg.engine}, "
           f"wf_backend={cfg.wf_backend}", file=sys.stderr)
 
-    out = sys.stdout if args.output == "-" else open(args.output, "w")
+    # resume-safe atomic output: SAM accumulates in a .partial segment
+    # and lands on the final path in one os.replace only after a clean
+    # finish — an interrupted run can never leave a truncated file that
+    # looks complete
+    partial = None if args.output == "-" else args.output + ".partial"
+    out = sys.stdout if partial is None else open(partial, "w")
     totals = dict(reads=0, mapped=0, reverse_best=0, survivors=0,
                   affine_instances=0, padded_affine_instances=0,
                   dropped_send=0, dropped_affine=0,
@@ -106,7 +127,16 @@ def run(args) -> int:
         for i, chunk in enumerate(stream):
             if paired:
                 c1, c2 = chunk
-                res1, res2 = mapper.map_pairs(c1.reads, c2.reads)
+                if resilient is not None:
+                    res1, res2, _ = resilient.map_pairs(c1.reads, c2.reads)
+                    if res1 is None:  # every block failed after retries
+                        print(f"chunk {i}: all {2 * len(c1)} reads failed "
+                              f"after retries; chunk quarantined",
+                              file=sys.stderr)
+                        totals["reads"] += 2 * len(c1)
+                        continue
+                else:
+                    res1, res2 = mapper.map_pairs(c1.reads, c2.reads)
                 pr = resolve_pairs(res1, res2, cfg=cfg, tracker=tracker,
                                    ref=ref, reads1=c1.reads,
                                    reads2=c2.reads,
@@ -129,7 +159,16 @@ def run(args) -> int:
                          f"{pr.stats['n_pairs']} "
                          f"(insert median {pr.stats['insert_median']})")
             else:
-                res = mapper.map(chunk.reads)
+                if resilient is not None:
+                    res, mask, _ = resilient.map(chunk.reads)
+                    if res is None:  # every block failed after retries
+                        print(f"chunk {i}: all {len(chunk)} reads failed "
+                              f"after retries; chunk quarantined",
+                              file=sys.stderr)
+                        totals["reads"] += len(chunk)
+                        continue
+                else:
+                    res = mapper.map(chunk.reads)
                 for rec in emit_alignments(res, chunk.names, chunk.reads,
                                            chunk.quals, refmap,
                                            seqs=chunk.seqs):
@@ -149,15 +188,26 @@ def run(args) -> int:
                     "survivors", "affine_instances",
                     "padded_affine_instances", "dropped_send",
                     "dropped_affine"))
+            out.flush()  # each chunk's records land in the .partial segment
             rate = totals["reads"] / max(time.perf_counter() - t_map, 1e-9)
             print(f"chunk {i}: {n_new} reads, "
                   f"mapped {n_mapped / max(n_new, 1):.3f} "
                   f"(cumulative {totals['reads']} reads, {rate:.0f} reads/s)"
                   f"{extra}",
                   file=sys.stderr)
+        complete = True
+    except BaseException:
+        complete = False
+        raise
     finally:
         if out is not sys.stdout:
             out.close()
+        if partial is not None:
+            if complete:  # atomic landing: complete output or none
+                os.replace(partial, args.output)
+            else:
+                print(f"map_fastq: run did not complete; partial SAM "
+                      f"left at {partial}", file=sys.stderr)
 
     dt = time.perf_counter() - t0
     skipped = (f", skipped {stream.n_skipped} short" if stream.n_skipped
@@ -168,6 +218,24 @@ def run(args) -> int:
           f"mapped {totals['mapped']} "
           f"({totals['reverse_best']} reverse-strand){skipped}",
           file=sys.stderr)
+    if stream.n_rejected:
+        reasons = dict(getattr(stream, "reject_reasons", {}))
+        subs = {id(s): s for s in (getattr(stream, "_s1", None),
+                                   getattr(stream, "_s2", None))
+                if s is not None}
+        for s in subs.values():  # paired: fold in both mates' counts once
+            for k, v in s.reject_reasons.items():
+                reasons[k] = reasons.get(k, 0) + v
+        where = f" -> {args.rejects}" if args.rejects else ""
+        print(f"quarantined: {stream.n_rejected} malformed record(s) "
+              f"{reasons}{where}", file=sys.stderr)
+    if resilient is not None:
+        rc = resilient.counters
+        if any(rc.values()) or resilient.ladder.degraded:
+            print(f"resilience: {rc['retries']} retries, "
+                  f"{rc['failed_reads']} quarantined reads in "
+                  f"{rc['failed_blocks']} block(s), engine ladder "
+                  f"{resilient.ladder.describe()}", file=sys.stderr)
     if paired:
         lo, hi = tracker.window()
         print(f"pairing: {totals['proper']}/{totals['pairs']} proper, "
@@ -215,10 +283,29 @@ def main():
                     help="forward strand only (reverse-strand reads will "
                          "not map)")
     ap.add_argument("--engine", default="compacted",
-                    choices=("compacted", "padded"))
+                    choices=("compacted", "fused", "padded"))
     ap.add_argument("--wf-backend", default="jnp", choices=("jnp", "pallas"))
     ap.add_argument("--no-stream", action="store_true",
                     help="synchronous debug path (per-stage timings)")
+    ap.add_argument("--on-error", default="strict",
+                    choices=("strict", "permissive"),
+                    help="malformed-input policy: strict raises with "
+                         "file:line context; permissive quarantines bad "
+                         "records (counted; see --rejects) and keeps "
+                         "mapping")
+    ap.add_argument("--rejects", default=None,
+                    help="permissive mode: write quarantined raw FASTQ "
+                         "records to this file (.gz ok)")
+    ap.add_argument("--inject", default=None, metavar="SPEC",
+                    help="deterministic fault injection, e.g. "
+                         "'bucket=0.125,record=0.005,seed=3' (sites: "
+                         "bucket, record, stall, error, flush; plus "
+                         "seed=, stall_s=, poison=r1;r2, "
+                         "engines=fused;pallas) — chaos testing")
+    ap.add_argument("--watchdog", type=float, default=None, metavar="S",
+                    help="streaming fetch watchdog seconds: a stalled "
+                         "chunk fetch fails (and is retried/quarantined) "
+                         "instead of hanging the run")
     ap.add_argument("--k", type=int, default=12)
     ap.add_argument("--w", type=int, default=30)
     ap.add_argument("--eth", type=int, default=6)

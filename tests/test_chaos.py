@@ -1,0 +1,220 @@
+"""Chaos suite (``-m chaos``): deterministic fault injection against the
+full serving stack.  Every test arms a seeded ``FaultInjector`` and
+asserts the containment contract — a fault takes down only the work that
+caused it, every request id resolves exactly once, and the healthy
+fraction of the stream is bit-identical to a fault-free run."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.mapper import Mapper
+from repro.core.pipeline import MapperConfig
+from repro.core.resilience import (FaultInjector, FetchStallError,
+                                   InjectedFault, MappingError,
+                                   ResilientMapper, RetryPolicy)
+from repro.core.serving import BatcherConfig, MappingService
+
+pytestmark = pytest.mark.chaos
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+FAST = RetryPolicy(max_attempts=3, backoff_s=0.0, bisect_min=4,
+                   degrade_after=2)
+
+
+@pytest.fixture(scope="module")
+def world():
+    from repro.core.index import build_index
+    from repro.data.genome import make_reference, sample_reads
+    ref = make_reference(8_000, seed=11, repeat_frac=0.03)
+    idx = build_index(ref)
+    rs = sample_reads(ref, 96, seed=13)
+    return ref, idx, rs.reads
+
+
+@pytest.fixture(scope="module")
+def mesh1(world):
+    from repro.core.distributed import shard_index
+    from repro.core.mapper import _flat_mesh
+    _, idx, _ = world
+    return _flat_mesh(1), shard_index(idx, 1)
+
+
+# ----------------------------------------------------- streaming engine
+
+def test_fetch_stall_trips_watchdog(world):
+    _, idx, reads = world
+    inj = FaultInjector(rates={"fetch_stall": 1.0}, stall_s=2.0)
+    mapper = Mapper(idx, MapperConfig(engine="compacted", chunk_reads=32),
+                    injector=inj, watchdog_s=0.25)
+    with pytest.raises(FetchStallError, match="watchdog"):
+        mapper.map(reads)
+    assert inj.fired["fetch_stall"] >= 1
+
+
+def test_fetch_error_propagates_promptly(world):
+    _, idx, reads = world
+    inj = FaultInjector(rates={"fetch_error": 1.0})
+    mapper = Mapper(idx, MapperConfig(engine="compacted", chunk_reads=32),
+                    injector=inj)
+    with pytest.raises(InjectedFault, match="fetch_error"):
+        mapper.map(reads)
+
+
+def test_stalled_run_contained_by_resilient_mapper(world):
+    _, idx, reads = world
+
+    class StallOnce(FaultInjector):
+        def __init__(self):
+            super().__init__(stall_s=2.0, rates={"fetch_stall": 1.0})
+            self._shots = 1
+
+        def fire(self, site):
+            if site == "fetch_stall" and self._shots > 0:
+                self._shots -= 1
+                return True
+            return False
+
+    inj = StallOnce()
+    mapper = Mapper(idx, MapperConfig(engine="compacted", chunk_reads=32),
+                    injector=inj, watchdog_s=0.25)
+    res, mask, counters = ResilientMapper(mapper, FAST).map(reads)
+    # the wedged run is retried and the retry goes through clean
+    assert not mask.any() and counters["retries"] == 1
+    base = Mapper(idx, MapperConfig(engine="compacted")).map(reads)
+    np.testing.assert_array_equal(res.position, base.position)
+
+
+# ----------------------------------------------------- degrade ladder
+
+def test_fail_engines_forces_degrade_to_compacted(world):
+    _, idx, reads = world
+    inj = FaultInjector(fail_engines=["fused"])
+    mapper = Mapper(idx, MapperConfig(engine="fused", wf_backend="jnp"),
+                    injector=inj)
+    rm = ResilientMapper(mapper, RetryPolicy(max_attempts=2, backoff_s=0.0,
+                                             bisect_min=4, degrade_after=1),
+                         injector=inj)
+    res, mask, counters = rm.map(reads)
+    assert rm.ladder.degraded and rm.cfg.engine == "compacted"
+    assert counters["degraded_steps"] == 1
+    # after the step down, every read still maps — on the fallback rung
+    assert not mask.any()
+    base = Mapper(idx, MapperConfig(engine="compacted",
+                                    wf_backend="jnp")).map(reads)
+    np.testing.assert_array_equal(res.position, base.position)
+    np.testing.assert_array_equal(res.distance, base.distance)
+    # sticky: the next batch goes straight to the fallback, no failures
+    res2, mask2, c2 = rm.map(reads[:32])
+    assert not mask2.any() and c2["retries"] == 0
+
+
+# ------------------------------------------------------- service soak
+
+def _soak(svc, reads, idx, n_flushes=4, seed=0):
+    """Submit random request sizes across flushes; assert the resolve
+    contract and that healthy results match a fault-free session."""
+    clean = Mapper(idx, MapperConfig(engine="compacted"))
+    rng = np.random.default_rng(seed)
+    for _ in range(n_flushes):
+        reqs, rids = [], []
+        for _ in range(int(rng.integers(1, 4))):
+            n = int(rng.integers(3, 33))
+            lo = int(rng.integers(0, len(reads) - n))
+            reqs.append(reads[lo : lo + n])
+            rids.append(svc.submit(reqs[-1]))
+        out = svc.flush()
+        assert sorted(out) == sorted(rids)      # exactly-once resolve
+        for rid, req in zip(rids, reqs):
+            got = out[rid]
+            if isinstance(got, MappingError):
+                assert got.error_type in ("execution", "internal")
+                continue
+            base = clean.map(req)
+            failed = got.failed if got.failed is not None \
+                else np.zeros(len(req), bool)
+            np.testing.assert_array_equal(got.position[~failed],
+                                          base.position[~failed])
+            assert not got.mapped[failed].any()
+        assert svc.flush() == {}                # nothing stranded
+
+
+def test_service_soak_single_topology(world):
+    _, idx, reads = world
+    inj = FaultInjector(seed=5, rates={"bucket": 0.3})
+    svc = MappingService(idx, MapperConfig(engine="compacted"),
+                         BatcherConfig(bucket_min=8, bucket_max=32),
+                         retry=FAST, injector=inj)
+    _soak(svc, reads, idx)
+    assert inj.fired.get("bucket", 0) >= 1      # the chaos was real
+    assert svc.totals["retries"] >= 1
+
+
+def test_service_soak_mesh_topology(world, mesh1):
+    _, idx, reads = world
+    mesh, sidx = mesh1
+    inj = FaultInjector(seed=6, rates={"bucket": 0.3})
+    mapper = Mapper(sidx, topology="mesh", mesh=mesh, injector=inj)
+    svc = MappingService(mapper, batcher=BatcherConfig(bucket_min=8,
+                                                       bucket_max=32),
+                         retry=FAST, injector=inj)
+    _soak(svc, reads, idx)
+    assert inj.fired.get("bucket", 0) >= 1
+
+
+def test_paired_request_quarantine_splits_per_mate(world):
+    _, idx, reads = world
+    # poison a row in the R1 half of the stacked paired block
+    inj = FaultInjector(poison_rows=[2])
+    svc = MappingService(idx, MapperConfig(engine="compacted"),
+                         BatcherConfig(bucket_min=8, bucket_max=32),
+                         retry=FAST, injector=inj)
+    rid = svc.submit_paired(reads[:8], reads[8:16])
+    res1, res2 = svc.flush()[rid]
+    assert res1.failed is not None and res1.failed.any()
+    assert not res1.mapped[res1.failed].any()
+    assert res2.failed is None or not res2.failed.any()
+    base2 = Mapper(idx, MapperConfig(engine="compacted")).map(reads[8:16])
+    np.testing.assert_array_equal(res2.position, base2.position)
+
+
+# ------------------------------------------------------------ CLI e2e
+
+def test_map_fastq_chaos_run_completes_and_validates(world, tmp_path):
+    from repro.data.genome import write_fasta, write_fastq
+    from repro.data.genome import make_reference, sample_reads
+    from repro.io.sam import validate_sam
+    ref = make_reference(8_000, seed=21)
+    rs = sample_reads(ref, 160, seed=22, both_strands=True)
+    names = [f"r{i}" for i in range(160)]
+    fa, fq = str(tmp_path / "ref.fa"), str(tmp_path / "reads.fq")
+    out, rej = str(tmp_path / "out.sam"), str(tmp_path / "rej.fq")
+    write_fasta(fa, [("chr1", ref)])
+    write_fastq(fq, rs, names=names)
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.launch.map_fastq", fa, fq,
+         "-o", out, "--chunk-reads", "64",
+         "--on-error", "permissive", "--rejects", rej,
+         "--inject", "record=0.02,bucket=0.125,seed=3,poison=7"],
+        env={**os.environ, "PYTHONPATH": SRC},
+        capture_output=True, text=True, timeout=480)
+    assert p.returncode == 0, p.stderr[-3000:]
+    assert os.path.exists(out) and not os.path.exists(out + ".partial")
+    text = open(out).read()
+    validate_sam(text)
+    sam_names = [ln.split("\t")[0] for ln in text.splitlines()
+                 if ln and not ln.startswith("@")]
+    rejected = [ln[1:].split()[0] for ln in open(rej).read().splitlines()
+                if ln.startswith("@")]
+    # exactly the injected-corrupt records are quarantined to the rejects
+    # file; every other read made it into the SAM exactly once (poisoned
+    # rows stay in the SAM as synthesized unmapped records)
+    assert rejected and len(rejected) < 20
+    assert sorted(sam_names + rejected) == sorted(names)
+    assert "quarantined:" in p.stderr and "resilience:" in p.stderr
+    unmapped = sum(int(ln.split("\t")[1]) & 4 != 0
+                   for ln in text.splitlines()
+                   if ln and not ln.startswith("@"))
+    assert unmapped >= 16       # the poisoned blocks landed as FLAG 4

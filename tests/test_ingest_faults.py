@@ -1,0 +1,246 @@
+"""Ingestion hardening on truncated/corrupt real-world inputs: every
+fault is exercised on both policies — ``on_error="strict"`` raises with
+file:line context, ``on_error="permissive"`` quarantines the damaged
+record(s) to the rejects sink, resynchronizes and keeps the healthy
+stream flowing — plus the strict/permissive paths of the map_fastq CLI.
+"""
+import gzip
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.io.fasta import load_reference
+from repro.io.fastq import FastqParseError, FastqStream, PairedFastqStream
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _fastq(records) -> str:
+    return "".join(f"@{n}\n{s}\n+\n{q}\n" for n, s, q in records)
+
+
+def _rec(name, seq="ACGTACGT"):
+    return (name, seq, "I" * len(seq))
+
+
+def _names(stream):
+    return [n for chunk in stream for n in chunk.names]
+
+
+def _pair_names(stream):
+    return [(a, b) for c1, c2 in stream
+            for a, b in zip(c1.names, c2.names)]
+
+
+# ---------------------------------------------------------- single-end
+
+def test_qual_len_mismatch_strict_has_file_line_context(tmp_path):
+    p = tmp_path / "reads.fq"
+    p.write_text(_fastq([_rec("r0"), ("r1", "ACGTACGT", "II")]))
+    with pytest.raises(FastqParseError,
+                       match=r"reads\.fq:5: malformed FASTQ record "
+                             r"'@r1': 8 bases but 2 qualities") as ei:
+        list(FastqStream(str(p), chunk_reads=4))
+    assert ei.value.lineno == 5 and ei.value.slug == "qual_len_mismatch"
+
+
+def test_permissive_quarantines_and_resyncs(tmp_path):
+    p = tmp_path / "reads.fq"
+    rej = tmp_path / "rej.fq"
+    # a garbage run at a record boundary, then r1 with mismatched quals
+    p.write_text(_fastq([_rec("r0")])
+                 + "garbage\nmore garbage\n"
+                 + "@r1\nACGTACGT\n+\nII\n"
+                 + _fastq([_rec("r2")]))
+    stream = FastqStream(str(p), chunk_reads=4, on_error="permissive",
+                         rejects=str(rej))
+    assert _names(stream) == ["r0", "r2"]
+    assert stream.n_rejected == 2           # the garbage run + the record
+    assert stream.reject_reasons["bad_header"] == 1
+    assert stream.reject_reasons["qual_len_mismatch"] == 1
+    assert "r1" in stream.rejected_names
+    raw = rej.read_text()
+    assert "@r1" in raw and "garbage" in raw  # raw lines preserved
+
+
+def test_truncated_gzip_strict_and_permissive(tmp_path):
+    full = tmp_path / "full.fastq.gz"
+    with gzip.open(full, "wt") as f:
+        f.write(_fastq([_rec(f"r{i}") for i in range(40)]))
+    cut = tmp_path / "cut.fastq.gz"
+    blob = full.read_bytes()
+    cut.write_bytes(blob[: int(len(blob) * 0.6)])  # ends mid-member
+
+    with pytest.raises(ValueError, match="truncated gzip FASTQ stream"):
+        list(FastqStream(str(cut), chunk_reads=8))
+
+    stream = FastqStream(str(cut), chunk_reads=8, on_error="permissive")
+    names = _names(stream)
+    assert names == [f"r{i}" for i in range(len(names))]  # prefix survives
+    assert stream.reject_reasons == {"truncated_gzip": 1}
+
+
+def test_empty_fastq_still_raises_even_permissive(tmp_path):
+    p = tmp_path / "empty.fq"
+    p.write_text("")
+    with pytest.raises(ValueError, match="empty FASTQ: no records"):
+        FastqStream(str(p), on_error="permissive")
+
+
+# ---------------------------------------------------------- paired-end
+
+def _write_pair(tmp_path, recs1, recs2):
+    p1, p2 = tmp_path / "r1.fq", tmp_path / "r2.fq"
+    p1.write_text(_fastq(recs1))
+    p2.write_text(_fastq(recs2))
+    return str(p1), str(p2)
+
+
+def test_mate_desync_strict_raises(tmp_path):
+    p1, p2 = _write_pair(tmp_path,
+                         [_rec("a/1"), _rec("b/1"), _rec("c/1")],
+                         [_rec("a/2"), _rec("c/2")])  # b/2 lost upstream
+    with pytest.raises(ValueError, match="mate name mismatch: 'b/1' vs "
+                                         "'c/2'"):
+        _pair_names(PairedFastqStream(p1, p2, chunk_reads=4))
+
+
+def test_mate_desync_permissive_repairs_midchunk(tmp_path):
+    rej = tmp_path / "rej.fq"
+    p1, p2 = _write_pair(
+        tmp_path,
+        [_rec("a/1"), _rec("b/1"), _rec("c/1"), _rec("d/1")],
+        [_rec("a/2"), _rec("c/2"), _rec("d/2")])
+    stream = PairedFastqStream(p1, p2, chunk_reads=4,
+                               on_error="permissive", rejects=str(rej))
+    # the lookahead re-pairs at c: only the orphaned b/1 is quarantined
+    assert _pair_names(stream) == [("a", "a"), ("c", "c"), ("d", "d")]
+    assert stream.reject_reasons == {"mate_desync": 1}
+    assert stream.n_rejected == 1 and "b/1" in stream.rejected_names
+    assert "@b/1" in rej.read_text()
+
+
+def test_mate_desync_permissive_drops_both_when_unrepairable(tmp_path):
+    p1, p2 = _write_pair(tmp_path,
+                         [_rec("a/1"), _rec("b/1"), _rec("d/1")],
+                         [_rec("a/2"), _rec("x/2"), _rec("d/2")])
+    stream = PairedFastqStream(p1, p2, chunk_reads=4,
+                               on_error="permissive")
+    assert _pair_names(stream) == [("a", "a"), ("d", "d")]
+    assert stream.reject_reasons == {"mate_desync": 1}
+    assert stream.n_rejected == 1  # one pair-level quarantine (b + x)
+    assert {"b/1", "x/2"} <= set(stream.rejected_names)
+
+
+def test_unpaired_tail(tmp_path):
+    p1, p2 = _write_pair(tmp_path,
+                         [_rec("a/1"), _rec("b/1")], [_rec("a/2")])
+    with pytest.raises(ValueError, match="unpaired FASTQ input: R2 ended"):
+        _pair_names(PairedFastqStream(p1, p2, chunk_reads=4))
+    stream = PairedFastqStream(p1, p2, chunk_reads=4,
+                               on_error="permissive")
+    assert _pair_names(stream) == [("a", "a")]
+    assert stream.reject_reasons == {"unpaired_tail": 1}
+    assert "b/1" in stream.rejected_names
+
+
+def test_corrupt_record_inside_pair_stream(tmp_path):
+    # R2's b-record is malformed: permissive rejects it at parse level,
+    # then pair-level recovery quarantines the orphaned b/1
+    p1, p2 = _write_pair(tmp_path,
+                         [_rec("a/1"), _rec("b/1"), _rec("c/1")],
+                         [_rec("a/2")])
+    with open(p2, "a") as f:
+        f.write("@b/2\nACGTACGT\n+\nII\n")  # bad quals; then c
+        f.write(_fastq([_rec("c/2")]))
+    stream = PairedFastqStream(p1, p2, chunk_reads=4,
+                               on_error="permissive")
+    assert _pair_names(stream) == [("a", "a"), ("c", "c")]
+    assert stream.n_rejected == 2
+    assert stream._s2.reject_reasons == {"qual_len_mismatch": 1}
+    assert stream.reject_reasons == {"mate_desync": 1}
+
+
+# --------------------------------------------------------------- FASTA
+
+def test_fasta_all_sentinel_contig(tmp_path):
+    p = tmp_path / "ref.fa"
+    p.write_text(">good\nACGTACGTACGT\n>nrun\nNNNNNNNN\n>empty\n"
+                 ">good2\nTTTTACGT\n")
+    with pytest.raises(ValueError, match="FASTA contig 'nrun' has only "
+                                         r"non-ACGT \(sentinel\) bases"):
+        load_reference(str(p), spacer=4)
+    rejected = []
+    ref, contigs = load_reference(str(p), spacer=4, on_error="permissive",
+                                  rejected=rejected)
+    assert [c.name for c in contigs] == ["good", "good2"]
+    assert rejected == [("nrun", "only non-ACGT (sentinel) bases"),
+                        ("empty", "no sequence")]
+    assert len(ref) == 12 + 4 + 8       # spacer only between kept contigs
+
+
+def test_fasta_all_contigs_unusable_raises_even_permissive(tmp_path):
+    p = tmp_path / "ref.fa"
+    p.write_text(">n1\nNNNN\n>n2\nNN\n")
+    with pytest.raises(ValueError, match="no records"):
+        load_reference(str(p), spacer=4, on_error="permissive")
+
+
+# ------------------------------------------------------------ CLI e2e
+
+@pytest.fixture(scope="module")
+def cli_world(tmp_path_factory):
+    from repro.data.genome import make_reference, sample_reads, write_fasta
+    d = tmp_path_factory.mktemp("cli")
+    ref = make_reference(6_000, seed=5)
+    rs = sample_reads(ref, 24, seed=7)
+    fa = str(d / "ref.fa")
+    write_fasta(fa, [("chr1", ref)])
+    lines = []
+    for i, row in enumerate(rs.reads):
+        seq = "".join("ACGT"[b] for b in row)
+        if i == 10:  # corrupt one record mid-file (quals too short)
+            lines.append(f"@bad{i}\n{seq}\n+\nIII\n")
+        else:
+            lines.append(f"@r{i}\n{seq}\n+\n{'I' * len(seq)}\n")
+    fq = str(d / "reads.fq")
+    with open(fq, "w") as f:
+        f.write("".join(lines))
+    return d, fa, fq
+
+
+def _run_cli(args):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.map_fastq", *args],
+        env={**os.environ, "PYTHONPATH": SRC},
+        capture_output=True, text=True, timeout=300)
+
+
+def test_cli_strict_fails_with_context_and_no_partial(cli_world):
+    d, fa, fq = cli_world
+    out = str(d / "strict.sam")
+    p = _run_cli([fa, fq, "-o", out, "--chunk-reads", "16"])
+    assert p.returncode != 0
+    assert "reads.fq:" in p.stderr          # file:line context surfaced
+    assert not os.path.exists(out)          # only .partial was written
+    assert os.path.exists(out + ".partial")
+
+
+def test_cli_permissive_quarantines_and_completes(cli_world):
+    from repro.io.sam import validate_sam
+    d, fa, fq = cli_world
+    out, rej = str(d / "perm.sam"), str(d / "rej.fq")
+    p = _run_cli([fa, fq, "-o", out, "--chunk-reads", "16",
+                  "--on-error", "permissive", "--rejects", rej])
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "quarantined: 1 malformed record(s)" in p.stderr
+    assert os.path.exists(out) and not os.path.exists(out + ".partial")
+    text = open(out).read()
+    validate_sam(text)
+    qnames = {ln.split("\t")[0] for ln in text.splitlines()
+              if ln and not ln.startswith("@")}
+    assert qnames == {f"r{i}" for i in range(24) if i != 10}
+    assert "@bad10" in open(rej).read()
