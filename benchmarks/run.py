@@ -66,6 +66,18 @@ def emit_pipeline_json(path: str, reads: int, chunk_reads: int | None,
               f"{pp['reads_per_s']:.1f} reads/s "
               f"({pp['pairs_per_s']:.1f} pairs/s, proper "
               f"{pp['proper_frac']:.1%}, {pp['rescued']} rescued)")
+    ib = bench.get("index_build")
+    if ib:
+        if "error" in ib:
+            print(f"index_build: ERROR {ib['error']}")
+        else:
+            print(f"index_build (out-of-core sharded build -> mmap "
+                  f"reload -> routed mapping): "
+                  f"{ib['build_bases_per_s']:.0f} bases/s build, "
+                  f"{ib['reload_ms']:.1f}ms reload, "
+                  f"{ib['routed_reads_per_s']:.1f} routed vs "
+                  f"{ib['flat_reads_per_s']:.1f} flat reads/s "
+                  f"({ib['routed_overhead_frac']:.1%} overhead)")
     ro = bench.get("resilience_overhead")
     if ro:
         if "error" in ro:
@@ -174,6 +186,17 @@ def check_regression(fresh: dict, baseline_path: str, tolerance: float,
               f"overhead={of:.1%} "
               f"(ceiling {RESILIENCE_OVERHEAD_MAX:.0%})")
         rc |= of > RESILIENCE_OVERHEAD_MAX
+    bi = base.get("index_build", {})
+    if bi.get("build_bases_per_s") is None:
+        print(f"perf-trend: baseline {baseline_path} lacks "
+              f"index_build.build_bases_per_s; skipping check")
+    else:
+        fi = fresh.get("index_build") or {}
+        fresh_val = (None if "error" in fi
+                     else fi.get("build_bases_per_s"))
+        rc |= _gate_metric("index_build.build_bases_per_s", fresh_val,
+                           bi["build_bases_per_s"], tolerance,
+                           missing_reason=fi.get("error"))
     for engine in STAGE_ENGINES:
         rc |= _gate_stages(fresh, base, engine, stage_tolerance)
     return rc

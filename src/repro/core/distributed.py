@@ -110,6 +110,38 @@ class ShardedIndex:
         return (jnp.asarray(self.uniq_kmers), jnp.asarray(self.offsets),
                 jnp.asarray(self.positions), jnp.asarray(self.segments))
 
+    @classmethod
+    def from_partitions(cls, parts, *, read_len: int, k: int, w: int,
+                        eth: int, seg_len: int) -> "ShardedIndex":
+        """Stack pre-partitioned per-shard CSRs into the padded layout.
+
+        ``parts`` is a sequence of ``(kmers, offsets, positions,
+        segments)`` tuples, one per shard, already assigned by the
+        ``hash32(kmer) % n_shards`` crossbar rule (e.g. the partitions of
+        a ``repro.index.ShardedGenomeIndex`` built offline).  This is the
+        zero-re-hash path onto the mesh: no flat index is rebuilt and no
+        runtime ``shard_index`` scan runs — the padding conventions here
+        (uniq padded with 0xFFFFFFFF, offsets padded with the last
+        offset) are exactly ``shard_index``'s, so the stacked arrays are
+        bit-identical to sharding the equivalent flat index.
+        """
+        n_shards = len(parts)
+        u_cap = max(max((len(p[0]) for p in parts), default=0), 1)
+        o_cap = max(max((len(p[2]) for p in parts), default=0), 1)
+        uq = np.full((n_shards, u_cap), 0xFFFFFFFF, dtype=np.uint32)
+        of = np.zeros((n_shards, u_cap + 1), dtype=np.int32)
+        po = np.zeros((n_shards, o_cap), dtype=np.int32)
+        sg = np.zeros((n_shards, o_cap, seg_len), dtype=np.uint8)
+        for s, (kmers, offsets, positions, segments) in enumerate(parts):
+            nu, no = len(kmers), len(positions)
+            uq[s, :nu] = kmers
+            of[s, : nu + 1] = offsets
+            of[s, nu + 1:] = offsets[-1] if nu else 0
+            po[s, :no] = positions
+            sg[s, :no] = segments
+        return cls(uniq_kmers=uq, offsets=of, positions=po, segments=sg,
+                   n_shards=n_shards, read_len=read_len, k=k, w=w, eth=eth)
+
 
 def shard_index(index: GenomeIndex, n_shards: int) -> ShardedIndex:
     """Assign each unique minimizer to shard hash32(kmer) % n_shards."""

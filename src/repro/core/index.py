@@ -28,6 +28,28 @@ import jax.numpy as jnp
 SENTINEL = 4  # "N"-like base, never equal to a read base
 
 
+def validate_geometry(*, read_len: int, k: int, w: int, eth: int) -> None:
+    """Reject impossible index/mapper geometry at construction time.
+
+    The one home of the (read_len, k, w, eth) sanity rules, shared by
+    ``MapperConfig``, ``build_index``, ``repro.index.build_sharded_index``
+    and ``repro.index.ShardedGenomeIndex`` — so a bad geometry fails here
+    with the field named, not deep inside jit tracing with a shape error.
+    """
+    if read_len < 1:
+        raise ValueError(f"read_len={read_len!r}: read length must be >= 1")
+    if not 1 <= k <= 16:
+        raise ValueError(f"k={k!r}: k-mer length must be within [1, 16] — "
+                         f"k-mer codes are 2-bit packed into uint32")
+    if k > read_len:
+        raise ValueError(f"k={k} exceeds read_len={read_len}: reads "
+                         f"shorter than k produce no k-mers to seed")
+    if w < 1:
+        raise ValueError(f"w={w!r}: minimizer window length must be >= 1")
+    if eth < 0:
+        raise ValueError(f"eth={eth!r}: band half-width must be >= 0")
+
+
 @dataclasses.dataclass(frozen=True)
 class GenomeIndex:
     uniq_kmers: np.ndarray
@@ -49,12 +71,25 @@ class GenomeIndex:
         return self.read_len + self.eth - self.k
 
     def storage_bytes(self) -> dict:
-        """Footprint accounting, mirroring the paper's 800MB -> 13.3GB note."""
-        hash_table = self.positions.nbytes + self.uniq_kmers.nbytes
+        """Footprint accounting, mirroring the paper's 800MB -> 13.3GB note.
+
+        Reports the *true on-disk* bytes of the persistent format
+        (``repro.index.format``): segments are 2-bit packed per base —
+        ``ceil(seg_len/4)`` bytes per occurrence row, not
+        ``nbytes // 4`` (which undercounted rows whose length is not a
+        multiple of 4) — plus a 1-bit-per-base sentinel mask, and the
+        hash table includes the CSR offsets it is stored with.
+        """
+        n_occ = len(self.positions)
+        seg_bytes = n_occ * ((self.seg_len + 3) // 4
+                             + (self.seg_len + 7) // 8)
+        hash_table = (self.uniq_kmers.nbytes + self.offsets.nbytes
+                      + self.positions.nbytes)
         return {
             "hash_table_bytes": hash_table,
-            "materialized_segments_bytes": self.segments.nbytes // 4,  # 2-bit
-            "blowup": (self.segments.nbytes // 4) / max(hash_table, 1),
+            "materialized_segments_bytes": seg_bytes,
+            "total_bytes": hash_table + seg_bytes,
+            "blowup": seg_bytes / max(hash_table, 1),
         }
 
 
@@ -67,6 +102,7 @@ def build_index(ref: np.ndarray, read_len: int = 150, k: int = 12,
     bounds these via the Reads-FIFO / lowTh mechanisms; capping PLs is the
     standard minimap2-style guard and keeps shapes static downstream).
     """
+    validate_geometry(read_len=read_len, k=k, w=w, eth=eth)
     _, kmers, pos = minimizers(jnp.asarray(ref), k=k, w=w)
     kmers = np.asarray(kmers)
     pos = np.asarray(pos)

@@ -72,7 +72,7 @@ from .pipeline import (LazyTraceback, MapperConfig, MappingResult,
 TOPOLOGIES = ("single", "mesh")
 
 __all__ = ["Mapper", "MapperStats", "MappingPlan", "TOPOLOGIES",
-           "split_result"]
+           "accumulate_partition_stats", "split_result"]
 
 
 _PER_READ_FIELDS = ("position", "distance", "distance2", "mapped", "strand",
@@ -149,6 +149,36 @@ class MapperStats:
 
     def as_dict(self) -> dict:
         return dict(self.extra)
+
+
+_PART_SUM_KEYS = ("chunks_routed", "partition_loads", "partition_evictions",
+                  "h2d_bytes", "minis_routed_per_partition",
+                  "minis_found_per_partition", "survivors_per_partition")
+
+
+def accumulate_partition_stats(totals: dict, stats) -> dict:
+    """Merge a run's per-partition accounting (``stats["partitions"]``,
+    present on sharded-index sessions, single and mesh) into
+    ``totals["partitions"]``.  Counters and per-partition count vectors
+    sum across runs; static descriptors (arena size, occurrence layout,
+    current residency) take the latest run's value."""
+    if not isinstance(stats, MapperStats):
+        return totals
+    part = stats.get("partitions")
+    if not part:
+        return totals
+    acc = totals.setdefault("partitions", {})
+    for k, v in part.items():
+        if k in _PART_SUM_KEYS:
+            if isinstance(v, list):
+                prev = acc.get(k)
+                acc[k] = ([a + b for a, b in zip(prev, v)] if prev
+                          else list(v))
+            else:
+                acc[k] = acc.get(k, 0) + v
+        else:
+            acc[k] = v
+    return totals
 
 
 def accumulate_stats(totals: dict, stats, fields=None) -> dict:
@@ -300,12 +330,24 @@ class Mapper:
         Streaming fetch watchdog: a chunk fetch exceeding this wall time
         raises ``streaming.FetchStallError`` instead of hanging the
         session.  None (default) disables the bound.
+    memory_budget_bytes : int, optional
+        Single topology with a ``repro.index.ShardedGenomeIndex`` only:
+        device budget for the partition arena.  Partitions are loaded
+        lazily per chunk and LRU-evicted under this bound
+        (``repro.index.residency``).  None keeps every partition
+        resident (the budget is the full index).
+
+    Both topologies also accept a ``repro.index.ShardedGenomeIndex``:
+    on ``"single"`` chunks are shard-routed through the residency arena;
+    on ``"mesh"`` partition *i* is placed on shard *i* directly — the
+    on-disk partitioning IS the mesh placement, no runtime re-hashing.
     """
 
     def __init__(self, index, cfg: MapperConfig | None = None, *,
                  topology: str = "single", mesh=None,
                  n_shards: int | None = None, send_cap: int | None = None,
-                 injector=None, watchdog_s: float | None = None):
+                 injector=None, watchdog_s: float | None = None,
+                 memory_budget_bytes: int | None = None):
         if topology not in TOPOLOGIES:
             raise ValueError(f"unknown topology {topology!r}; "
                              f"expected one of {TOPOLOGIES}")
@@ -326,21 +368,64 @@ class Mapper:
         from collections import deque
         self._survivor_hist = deque(maxlen=self.cfg.stage_b_history)
 
+        from ..index.sharded import ShardedGenomeIndex
+        self.part_index = index if isinstance(index, ShardedGenomeIndex) \
+            else None
+        self.router = None
+        if memory_budget_bytes is not None and not (
+                topology == "single" and self.part_index is not None):
+            raise ValueError(
+                "memory_budget_bytes only applies to topology=\"single\" "
+                "with a repro.index.ShardedGenomeIndex — the mesh topology "
+                "places one whole partition per device, and a flat "
+                "GenomeIndex is always fully resident")
+
         if topology == "single":
             if isinstance(index, ShardedIndex):
                 raise ValueError('topology="single" needs a GenomeIndex, '
                                  "not a ShardedIndex")
-            self.index = index
             self.sharded_index = None
             self.mesh = None
-            self._dev = (jnp.asarray(index.uniq_kmers),
-                         jnp.asarray(index.offsets),
-                         jnp.asarray(index.positions),
-                         jnp.asarray(index.segments))
+            if self.part_index is not None:
+                if self.cfg.engine == "padded":
+                    raise ValueError(
+                        'engine="padded" needs the whole index resident as '
+                        "one flat array; use the compacted/fused engines "
+                        "with a ShardedGenomeIndex, or "
+                        "index.to_genome_index() to flatten it")
+                if self.cfg.cigar_mode == "lazy":
+                    raise ValueError(
+                        'cigar_mode="lazy" defers traceback past the run, '
+                        "but the residency arena may evict the segment "
+                        "rows a deferred traceback would read; use "
+                        'cigar_mode="eager" or "off" with a '
+                        "ShardedGenomeIndex")
+                from ..index.residency import DeviceResidency, ShardRouter
+                self.index = None
+                self._dev = None
+                self.router = ShardRouter(
+                    index, DeviceResidency(index, memory_budget_bytes),
+                    self.cfg)
+            else:
+                self.index = index
+                self._dev = (jnp.asarray(index.uniq_kmers),
+                             jnp.asarray(index.offsets),
+                             jnp.asarray(index.positions),
+                             jnp.asarray(index.segments))
         else:
             self.mesh = mesh if mesh is not None else _flat_mesh(n_shards)
             S = int(self.mesh.devices.size)
-            if isinstance(index, ShardedIndex):
+            if self.part_index is not None:
+                if index.num_partitions != S:
+                    raise ValueError(
+                        f"sharded index has {index.num_partitions} "
+                        f"partitions but the mesh has {S} devices — mesh "
+                        f"placement maps partition i onto shard i, so "
+                        f"rebuild the index with num_partitions={S} or "
+                        f"map over a {index.num_partitions}-device mesh")
+                sidx = index.to_mesh_shards()
+                self.index = None
+            elif isinstance(index, ShardedIndex):
                 if index.n_shards != S:
                     raise ValueError(
                         f"ShardedIndex has {index.n_shards} shards but the "
@@ -432,6 +517,9 @@ class Mapper:
                                    plan.send_cap, plan.stage_b_affine_cap)
         elif plan.engine == "padded":
             entry = map_reads_jax
+        elif self.router is not None:
+            from ..index.residency import _RoutedChunkPipeline
+            entry = _RoutedChunkPipeline(self.router, self.cfg)
         else:
             entry = _ChunkPipeline(self._dev, self.cfg)
         self._plan_cache[plan.key] = entry
@@ -482,6 +570,17 @@ class Mapper:
         from .serving import BatcherConfig, MappingService
         return MappingService(self, batcher=batcher or BatcherConfig(),
                               **kwargs)
+
+    def index_storage(self) -> dict | None:
+        """Footprint accounting of the session's index — the flat
+        ``storage_bytes`` dict, or the sharded one with its
+        ``per_partition`` breakdown (``repro.index``).  None when the
+        session holds only pre-placed device shards (a raw
+        ``ShardedIndex``) with no host-side source index."""
+        src = self.part_index if self.part_index is not None else self.index
+        if src is None:
+            return None
+        return src.storage_bytes()
 
     def close(self):
         """Shut down the ``map_async`` worker (no-op if never used)."""
@@ -562,6 +661,8 @@ class Mapper:
             raw["both_strands"] = True
         if times is not None:
             raw["stage_times_s"] = {k: round(v, 4) for k, v in times.items()}
+        if getattr(pipe, "router", None) is not None:
+            raw["partitions"] = pipe.router.drain_stats()
 
         def cat(k):
             if k not in parts[0]:
@@ -624,7 +725,16 @@ class Mapper:
                    stage_b_affine_dropped=n_aff_drop,
                    send_dropped=int(dropped.sum()),
                    send_dropped_per_shard=dropped,
+                   stage_b_survivors_per_shard=np.asarray(n_surv),
                    padded_reads=plan.padded_reads)
+        if self.part_index is not None:
+            # partition i IS shard i: the on-disk partitioning routed the
+            # mesh, so per-shard counters are per-partition counters
+            raw["partitions"] = dict(
+                num_partitions=S,
+                occurrences_per_partition=[p.n_occurrences
+                                           for p in self.part_index.parts],
+                survivors_per_partition=np.asarray(n_surv).tolist())
         stats = MapperStats(
             topology="mesh", engine=self.cfg.engine, reads=n,
             candidates=entries, survivors=surv,

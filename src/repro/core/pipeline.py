@@ -62,7 +62,7 @@ from . import wf_backend as wfb
 from .compaction import bucket_capacity, compact_indices, scatter_to
 from .encoding import revcomp
 from .filtering import collapse_candidates, gather_windows, linear_wf_filter
-from .index import GenomeIndex
+from .index import GenomeIndex, validate_geometry
 from .linear_wf import banded_wf
 from .seeding import SeedParams, seed_reads
 
@@ -117,6 +117,8 @@ class MapperConfig:
         """Reject invalid configurations at construction time, with errors
         that name the field — instead of failing deep inside jit tracing
         (or worse, silently misaligning kernel lanes)."""
+        validate_geometry(read_len=self.read_len, k=self.k, w=self.w,
+                          eth=self.eth)
         if self.engine not in self.ENGINES:
             raise ValueError(f"unknown engine {self.engine!r}; expected one "
                              f"of {self.ENGINES}")
@@ -681,9 +683,18 @@ class _ChunkPipeline:
             c = c + jnp.sum(arr[half : half + n_real])
         return int(c)
 
+    def chunk_index(self, seeds):
+        """Device ``(positions, segments)`` that this chunk's ``occ_idx``
+        rows point into.  The flat pipeline has one session-lifetime
+        pair; the shard-routed pipeline (``repro.index.residency``)
+        overrides this to return the per-chunk arena snapshot its host
+        seeding stage routed the occurrence rows against."""
+        return self.dev[2], self.dev[3]
+
     def phase2(self, state, times=None):
         reads, seeds, n_real = state
-        cfg, (_, _, positions, segments) = self.cfg, self.dev
+        cfg = self.cfg
+        positions, segments = self.chunk_index(seeds)
         R = reads.shape[0]          # rows: 2*chunk when both_strands
         M, P = cfg.max_minis, cfg.max_pls
         occ_idx, occ_valid = seeds["occ_idx"], seeds["occ_valid"]

@@ -15,6 +15,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .minimizers import unique_read_minimizers
 
@@ -62,3 +63,68 @@ def seed_reads(uniq_kmers: jnp.ndarray, offsets: jnp.ndarray,
     out = jax.vmap(per_read)(reads)
     out["n_valid"] = jnp.sum(out["occ_valid"]).astype(jnp.int32)
     return out
+
+
+def seed_reads_routed(index, reads: np.ndarray, params: SeedParams, ensure):
+    """Host-side seeding against a partitioned index — the shard-routed
+    twin of :func:`seed_reads`.
+
+    ``index`` is a ``repro.index.ShardedGenomeIndex`` (duck-typed: needs
+    ``route(kmers)`` and ``parts[p].kmers/.offsets/.n_occurrences``).
+    ``ensure(partition_ids)`` is the residency hook: it makes the listed
+    partitions device-resident and returns ``{p: arena_base_row}`` —
+    emitted ``occ_idx`` rows are *arena* rows (partition base + local CSR
+    row), pointing into the device snapshot the caller pairs them with.
+
+    Semantics match ``seed_reads`` exactly for every masked-visible
+    value: the same minimizer extraction (bit-identical numpy port), the
+    same per-kmer occurrence lists (each k-mer lives wholly in one
+    partition), ``occ_idx`` zeroed where invalid, and ``n_valid``
+    counted over the full padded batch.  Routing the lookup host-side is
+    what lets the single-host topology know *which* partitions a chunk
+    touches before any device dispatch.
+
+    Returns ``(seeds, routed_per_part, found_per_part)`` — the numpy
+    seeds dict plus per-partition routing/hit counts for
+    ``MapperStats``.
+    """
+    from ..index.npscan import np_unique_read_minimizers  # lazy: no cycle
+
+    M, P = params.max_minis, params.max_pls
+    reads = np.asarray(reads)
+    kmers, pos, valid = np_unique_read_minimizers(reads, params.k,
+                                                  params.w, M)
+    part = np.asarray(index.route(kmers))
+    R = len(reads)
+    n_parts = index.num_partitions
+    routed = np.bincount(part[valid], minlength=n_parts).astype(np.int64)
+    touched = [int(p) for p in np.nonzero(routed)[0]
+               if index.parts[p].n_occurrences > 0]
+    bases = ensure(touched)
+    occ = np.zeros((R, M, P), dtype=np.int32)
+    occ_valid = np.zeros((R, M, P), dtype=bool)
+    mini_valid = np.zeros((R, M), dtype=bool)
+    found_per_part = np.zeros(n_parts, dtype=np.int64)
+    lanes = np.arange(P, dtype=np.int32)
+    for p in touched:
+        pk = index.parts[p]
+        sel = (part == p) & valid
+        if not sel.any():
+            continue
+        kk = kmers[sel]
+        pk_kmers = np.asarray(pk.kmers)
+        i = np.minimum(np.searchsorted(pk_kmers, kk), pk.n_kmers - 1)
+        found = pk_kmers[i] == kk
+        offs = np.asarray(pk.offsets)
+        start = offs[i].astype(np.int32)
+        count = (offs[i + 1] - offs[i]).astype(np.int32)
+        rows = (np.int32(bases[p]) + start[:, None] + lanes[None, :])
+        ov = (lanes[None, :] < count[:, None]) & found[:, None]
+        occ[sel] = np.where(ov, rows, 0)
+        occ_valid[sel] = ov
+        mini_valid[sel] = found
+        found_per_part[p] = int(found.sum())
+    seeds = dict(mini_kmers=kmers, mini_pos=pos, mini_valid=mini_valid,
+                 occ_idx=occ, occ_valid=occ_valid,
+                 n_valid=int(occ_valid.sum()))
+    return seeds, routed, found_per_part

@@ -43,7 +43,8 @@ import numpy as np
 
 from .compaction import bucket_capacity
 from .mapper import (_PER_READ_FIELDS, Mapper, MapperStats,
-                     accumulate_stats, split_result)
+                     accumulate_partition_stats, accumulate_stats,
+                     split_result)
 from .pipeline import MapperConfig, MappingResult
 from .resilience import (AdmissionConfig, MappingError, ResilientMapper,
                          RetryPolicy, ShedError, assemble_segments)
@@ -264,6 +265,7 @@ class MappingService:
 
     def _accumulate(self, stats) -> None:
         accumulate_stats(self.totals, stats, fields=_TOTAL_FIELDS)
+        accumulate_partition_stats(self.totals, stats)
 
     # --------------------------------------------------------------- flush
 

@@ -1,0 +1,46 @@
+"""repro.index — sharded, out-of-core genome index.
+
+The flat ``repro.core.index.GenomeIndex`` (one array + one CSR) assumes
+the whole pre-materialized index fits in host memory during build and on
+one device at runtime.  This package drops both assumptions:
+
+* :func:`build_sharded_index` — streamed, tile-by-tile out-of-core
+  construction with bounded peak memory, partitioned by the crossbar
+  rule ``hash32(kmer) % num_partitions``;
+* a persistent on-disk format (versioned JSON manifest + per-partition
+  memmap CSR files + 2-bit packed reference) with integrity checking —
+  :func:`open_index` / :func:`load_index` / :func:`verify_index`;
+* shard-routed execution — :class:`ShardedGenomeIndex` plugs into
+  ``Mapper(topology="single")`` under a device-memory budget (lazy/LRU
+  partition residency, ``repro.index.residency``) and into
+  ``Mapper(topology="mesh")`` with partition *i* placed on shard *i*
+  (zero runtime re-hashing).
+
+:func:`shard_flat_index` partitions an in-memory ``GenomeIndex`` without
+touching disk — the equivalence bridge used by tests and by callers
+migrating incrementally.
+"""
+from .build import build_sharded_index
+from .format import (FORMAT_VERSION, IndexFormatError, IndexIntegrityError,
+                     MANIFEST_NAME, PackedReference, load_manifest,
+                     pack_codes, unpack_codes)
+from .sharded import (Partition, ShardedGenomeIndex, load_index, open_index,
+                      shard_flat_index, verify_index)
+
+__all__ = [
+    "FORMAT_VERSION",
+    "MANIFEST_NAME",
+    "IndexFormatError",
+    "IndexIntegrityError",
+    "PackedReference",
+    "Partition",
+    "ShardedGenomeIndex",
+    "build_sharded_index",
+    "load_index",
+    "load_manifest",
+    "open_index",
+    "pack_codes",
+    "shard_flat_index",
+    "unpack_codes",
+    "verify_index",
+]

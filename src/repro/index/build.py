@@ -1,0 +1,368 @@
+"""Streamed out-of-core construction of the sharded genome index.
+
+Two phases, both with peak memory bounded by the tile size (plus one
+partition's occurrence list), never by the genome:
+
+**Phase 1 — scan.**  The FASTA streams in bounded chunks
+(``io.fasta.stream_fasta``); contigs are virtually concatenated with
+``spacer`` SENTINEL bases exactly as ``io.fasta.load_reference`` does,
+so minimizer positions and segment contents match the flat in-memory
+path bit for bit.  A rolling buffer walks the virtual sequence in
+``tile_bp`` tiles with a ``w-1``-base left halo and ``w+k-2``-base
+right halo: every window whose minimizer lands in the tile is
+evaluated, and occurrences are kept only when their position falls
+inside the tile — tiles partition the position axis, so the union over
+tiles is exactly the flat occurrence set with no duplicates.  Each
+occurrence is routed to partition ``hash32(kmer) % P`` (the crossbar
+rule) and appended to that partition's spill file as a packed
+``uint64 (kmer << 32) | pos`` key; the 2-bit-packed reference is
+written incrementally alongside.
+
+**Phase 2 — finalize.**  Per partition: read the spill, ``np.unique``
+the packed keys (one shot = dedup + (kmer, pos) sort, the same order
+``core.index.build_index`` produces), cap hyper-repetitive minimizers
+at ``max_pls_per_minimizer`` occurrences (first by position, same rule
+as the flat build), emit the CSR, and extract segments in bounded
+batches from the packed reference (out-of-range bases read as
+SENTINEL, matching the flat build's padded slicing).
+
+The minimizer scan is the pure-numpy ``npscan`` port: no jax in the
+loop means no per-tile retracing, and the builder's entire footprint
+is visible to ``tracemalloc`` — which is how the bounded-RSS property
+is asserted in tests.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from ..core.index import SENTINEL, validate_geometry
+from ..io.fasta import Contig, stream_fasta
+from . import format as fmt
+from .npscan import np_hash32, np_minimizers
+
+_INT32_MAX = 2**31 - 1
+
+
+def _validate_partitions(num_partitions: int) -> None:
+    p = num_partitions
+    if not isinstance(p, (int, np.integer)) or p < 1 or (p & (p - 1)):
+        raise ValueError(
+            f"num_partitions={p!r}: partition count must be a power of two "
+            f">= 1 — partitions map onto mesh shards and pow-2 request "
+            f"buckets, and hash32(kmer) % P only spreads hash bits evenly "
+            f"for pow-2 P")
+
+
+class _PackedRefWriter:
+    """Incremental 2-bit + sentinel-bit reference writer.
+
+    Accepts arbitrary-length code chunks; packs and flushes in
+    8-base-aligned blocks (8 = lcm of the 4-codes/byte and 8-bits/byte
+    layouts) with a small carry, so the byte image equals
+    ``format.pack_codes`` over the whole sequence.
+    """
+
+    def __init__(self, codes_path: str, sent_path: str):
+        self._fc = open(codes_path, "wb")
+        self._fs = open(sent_path, "wb")
+        self._pending = np.zeros(0, np.uint8)
+        self.length = 0
+
+    def write(self, codes: np.ndarray) -> None:
+        codes = np.asarray(codes, np.uint8)
+        self.length += len(codes)
+        buf = (np.concatenate([self._pending, codes])
+               if len(self._pending) else codes)
+        n8 = (len(buf) // 8) * 8
+        if n8:
+            packed, sent = fmt.pack_codes(buf[:n8])
+            self._fc.write(packed.tobytes())
+            self._fs.write(sent.tobytes())
+        self._pending = buf[n8:].copy()
+
+    def close(self) -> None:
+        if len(self._pending):
+            packed, sent = fmt.pack_codes(self._pending)
+            self._fc.write(packed.tobytes())
+            self._fs.write(sent.tobytes())
+            self._pending = np.zeros(0, np.uint8)
+        self._fc.close()
+        self._fs.close()
+
+
+def _finalize_npy(payload_path: str, out_path: str, dtype,
+                  shape: tuple) -> None:
+    """Wrap a raw little-endian payload file as a valid ``.npy``."""
+    header = {"descr": np.lib.format.dtype_to_descr(np.dtype(dtype)),
+              "fortran_order": False, "shape": shape}
+    with open(out_path, "wb") as out:
+        np.lib.format.write_array_header_1_0(out, header)
+        with open(payload_path, "rb") as src:
+            while True:
+                block = src.read(1 << 20)
+                if not block:
+                    break
+                out.write(block)
+    os.remove(payload_path)
+
+
+class _TileScanner:
+    """Rolling-buffer tile walk over the virtual concatenated reference."""
+
+    def __init__(self, *, k: int, w: int, tile_bp: int, emit):
+        self.k, self.w, self.tile = k, w, tile_bp
+        self.emit = emit                      # emit(packed_u64_occurrences)
+        self.buf = np.zeros(0, np.uint8)
+        self.buf_start = 0                    # global pos of buf[0]
+        self.t0 = 0                           # next tile start
+        self.tiles = 0
+
+    def _buf_end(self) -> int:
+        return self.buf_start + len(self.buf)
+
+    def _scan(self, t1: int) -> None:
+        k, w = self.k, self.w
+        lo = max(0, self.t0 - (w - 1))
+        hi = min(self._buf_end(), t1 + w + k - 2)
+        window = self.buf[lo - self.buf_start: hi - self.buf_start]
+        if len(window) >= w + k - 1:
+            _, kmer, pos = np_minimizers(window, k, w)
+            pos_g = pos.astype(np.int64) + lo
+            keep = (pos_g >= self.t0) & (pos_g < t1)
+            packed = ((kmer[keep].astype(np.uint64) << np.uint64(32))
+                      | pos_g[keep].astype(np.uint64))
+            self.emit(np.unique(packed))
+        self.tiles += 1
+        self.t0 = t1
+        # drop bases the next tile's left halo no longer needs
+        keep_from = max(0, self.t0 - (w - 1))
+        if keep_from > self.buf_start:
+            self.buf = self.buf[keep_from - self.buf_start:].copy()
+            self.buf_start = keep_from
+
+    def feed(self, codes: np.ndarray) -> None:
+        if len(codes):
+            self.buf = (np.concatenate([self.buf, codes])
+                        if len(self.buf) else np.asarray(codes, np.uint8))
+        # a tile is ready once its right halo is fully buffered
+        while self._buf_end() >= self.t0 + self.tile + self.w + self.k - 2:
+            self._scan(self.t0 + self.tile)
+
+    def finish(self, total_len: int) -> None:
+        while self.t0 < total_len:
+            self._scan(min(self.t0 + self.tile, total_len))
+
+
+def build_sharded_index(fasta, out_dir: str, *, num_partitions: int = 4,
+                        tile_bp: int = 1 << 20, read_len: int = 150,
+                        k: int = 12, w: int = 30, eth: int = 6,
+                        max_pls_per_minimizer: int = 256,
+                        spacer: int | None = None, overwrite: bool = False,
+                        progress=None):
+    """Build a persistent sharded index directory from a FASTA, streamed.
+
+    Returns the built index opened via ``repro.index.open_index`` (mmap).
+    ``spacer`` defaults to ``read_len + 2*eth``, the same inter-contig
+    gap ``launch.map_fastq`` uses, so on-disk and in-memory mappings
+    agree byte for byte.
+    """
+    validate_geometry(read_len=read_len, k=k, w=w, eth=eth)
+    _validate_partitions(num_partitions)
+    if tile_bp < w + k - 1:
+        raise ValueError(
+            f"tile_bp={tile_bp}: a tile must cover at least one minimizer "
+            f"window (w + k - 1 = {w + k - 1} bases)")
+    if spacer is None:
+        spacer = read_len + 2 * eth
+    if spacer < 0:
+        raise ValueError(f"spacer={spacer} must be >= 0")
+    P = int(num_partitions)
+    say = progress if progress is not None else (lambda _msg: None)
+
+    os.makedirs(out_dir, exist_ok=True)
+    if not overwrite and os.path.isfile(
+            os.path.join(out_dir, fmt.MANIFEST_NAME)):
+        raise ValueError(
+            f"{out_dir!r} already holds an index (manifest.json exists); "
+            f"pass overwrite=True / --force to rebuild in place")
+
+    t_start = time.perf_counter()
+    spill_paths = [os.path.join(out_dir, f".spill{p:04d}.u64")
+                   for p in range(P)]
+    spills = [open(sp, "wb") for sp in spill_paths]
+    n_spilled = np.zeros(P, dtype=np.int64)
+
+    def emit(packed_occ: np.ndarray) -> None:
+        if not len(packed_occ):
+            return
+        part = (np_hash32((packed_occ >> np.uint64(32)).astype(np.uint32))
+                % np.uint32(P)).astype(np.int64)
+        order = np.argsort(part, kind="stable")
+        sorted_occ, sorted_part = packed_occ[order], part[order]
+        counts = np.bincount(sorted_part, minlength=P)
+        bounds = np.concatenate([[0], np.cumsum(counts)])
+        for p in np.nonzero(counts)[0]:
+            spills[p].write(sorted_occ[bounds[p]: bounds[p + 1]].tobytes())
+        n_spilled[:] += counts   # in-place: n_spilled is closed over
+
+    ref_codes_payload = os.path.join(out_dir, ".reference.2bit.payload")
+    ref_sent_payload = os.path.join(out_dir, ".reference.sent.payload")
+    writer = _PackedRefWriter(ref_codes_payload, ref_sent_payload)
+    scanner = _TileScanner(k=k, w=w, tile_bp=tile_bp, emit=emit)
+
+    def feed(codes: np.ndarray) -> None:
+        writer.write(codes)
+        scanner.feed(codes)
+
+    # -- phase 1: stream contigs through the scanner ----------------------
+    contigs: list[Contig] = []
+    cur_name, cur_len, cur_has_acgt = None, 0, False
+
+    def close_contig() -> None:
+        nonlocal cur_name, cur_len, cur_has_acgt
+        if cur_len == 0:
+            raise ValueError(f"FASTA contig {cur_name!r} has no sequence")
+        if not cur_has_acgt:
+            raise ValueError(f"FASTA contig {cur_name!r} has only non-ACGT "
+                             f"(sentinel) bases")
+        contigs.append(Contig(name=cur_name, length=cur_len,
+                              offset=writer.length - cur_len))
+        say(f"contig {cur_name}: {cur_len} bp "
+            f"(genome so far {writer.length} bp, {scanner.tiles} tiles)")
+        cur_name, cur_len, cur_has_acgt = None, 0, False
+
+    chunk_bp = max(tile_bp, w + k)
+    for name, codes, is_last in stream_fasta(fasta, max_chunk=chunk_bp):
+        if cur_name is None:
+            if contigs:          # inter-contig spacer, as load_reference
+                feed(np.full(spacer, SENTINEL, dtype=np.uint8))
+            cur_name = name
+        cur_len += len(codes)
+        cur_has_acgt |= bool((codes != SENTINEL).any())
+        feed(codes)
+        if is_last:
+            close_contig()
+    if not contigs:
+        raise ValueError("empty FASTA: no records (or none usable)")
+    ref_len = writer.length
+    if ref_len > _INT32_MAX:
+        raise ValueError(
+            f"reference is {ref_len} bases after spacer concatenation; "
+            f"index format v1 stores int32 positions (max {_INT32_MAX}). "
+            f"Split the reference or wait for the int64 format revision.")
+    scanner.finish(ref_len)
+    writer.close()
+    for f in spills:
+        f.close()
+    _finalize_npy(ref_codes_payload,
+                  os.path.join(out_dir, fmt.REFERENCE_FILES["packed"]),
+                  np.uint8, (fmt.packed_cols(ref_len),))
+    _finalize_npy(ref_sent_payload,
+                  os.path.join(out_dir, fmt.REFERENCE_FILES["sentinel"]),
+                  np.uint8, (fmt.sentinel_cols(ref_len),))
+    say(f"scan done: {ref_len} bp, {scanner.tiles} tiles, "
+        f"{int(n_spilled.sum())} spilled occurrences")
+
+    # -- phase 2: finalize partitions from spills --------------------------
+    man_ref = {role: fmt.file_digest(os.path.join(out_dir, fname))
+               for role, fname in fmt.REFERENCE_FILES.items()}
+    packed_ref = fmt.load_reference(
+        out_dir, {"ref_len": ref_len}, mmap=True)
+    pad = read_len + eth - k
+    seg_len = 2 * (read_len + eth) - k
+    seg_batch = max(16, tile_bp // max(seg_len, 1))
+    parts_meta = []
+    total_occ = 0
+    dropped_pls = 0
+    for p in range(P):
+        data = np.fromfile(spill_paths[p], dtype=np.uint64)
+        os.remove(spill_paths[p])
+        u = np.unique(data)       # dedup (defensive) + (kmer, pos) sort
+        del data
+        kmers = (u >> np.uint64(32)).astype(np.uint32)
+        pos = (u & np.uint64(0xFFFFFFFF)).astype(np.int64)
+        del u
+        # cap hyper-repetitive minimizers: keep the first
+        # max_pls_per_minimizer occurrences by position (flat-build rule)
+        uniq, starts, counts = np.unique(kmers, return_index=True,
+                                         return_counts=True)
+        cap = max_pls_per_minimizer
+        keep = np.ones(len(kmers), dtype=bool)
+        for s, c in zip(starts[counts > cap], counts[counts > cap]):
+            keep[s + cap: s + c] = False
+        dropped_pls += int((~keep).sum())
+        kmers, pos = kmers[keep], pos[keep]
+        uniq, counts = np.unique(kmers, return_counts=True)
+        offsets = np.zeros(len(uniq) + 1, dtype=np.int32)
+        offsets[1:] = np.cumsum(counts)
+        n_occ = len(pos)
+        total_occ += n_occ
+
+        names = fmt.part_filenames(p)
+        np.save(os.path.join(out_dir, names["kmers"]),
+                uniq.astype(np.uint32))
+        np.save(os.path.join(out_dir, names["offsets"]), offsets)
+        np.save(os.path.join(out_dir, names["positions"]),
+                pos.astype(np.int32))
+        seg_shape = (n_occ, fmt.packed_cols(seg_len))
+        sent_shape = (n_occ, fmt.sentinel_cols(seg_len))
+        seg_path = os.path.join(out_dir, names["seg2bit"])
+        sent_path = os.path.join(out_dir, names["segsent"])
+        if n_occ == 0:
+            np.save(seg_path, np.zeros(seg_shape, np.uint8))
+            np.save(sent_path, np.zeros(sent_shape, np.uint8))
+        else:
+            seg_mm = np.lib.format.open_memmap(
+                seg_path, mode="w+", dtype=np.uint8, shape=seg_shape)
+            sent_mm = np.lib.format.open_memmap(
+                sent_path, mode="w+", dtype=np.uint8, shape=sent_shape)
+            span = np.arange(seg_len, dtype=np.int64)[None, :]
+            for b0 in range(0, n_occ, seg_batch):
+                b1 = min(b0 + seg_batch, n_occ)
+                idx = (pos[b0:b1, None] - pad) + span
+                codes = packed_ref.gather(idx)
+                pk, sb = fmt.pack_codes(codes)
+                seg_mm[b0:b1] = pk
+                sent_mm[b0:b1] = sb
+            seg_mm.flush()
+            sent_mm.flush()
+            del seg_mm, sent_mm
+        parts_meta.append({
+            "id": p,
+            "n_kmers": int(len(uniq)),
+            "n_occurrences": int(n_occ),
+            "files": {role: fmt.file_digest(os.path.join(out_dir, fname))
+                      for role, fname in names.items()},
+        })
+        say(f"partition {p}/{P}: {len(uniq)} kmers, {n_occ} occurrences")
+
+    wall_s = time.perf_counter() - t_start
+    manifest = {
+        "format": fmt.FORMAT_VERSION,
+        "read_len": read_len, "k": k, "w": w, "eth": eth,
+        "spacer": spacer,
+        "max_pls_per_minimizer": max_pls_per_minimizer,
+        "num_partitions": P,
+        "ref_len": int(ref_len),
+        "seg_len": int(seg_len),
+        "contigs": [{"name": c.name, "length": c.length, "offset": c.offset}
+                    for c in contigs],
+        "reference": man_ref,
+        "partitions": parts_meta,
+        "build": {
+            "tile_bp": int(tile_bp),
+            "tiles": int(scanner.tiles),
+            "n_occurrences": int(total_occ),
+            "spilled_occurrences": int(n_spilled.sum()),
+            "dropped_pls": int(dropped_pls),
+            "wall_s": wall_s,
+        },
+    }
+    fmt.write_manifest(out_dir, manifest)
+    say(f"wrote {out_dir}: {P} partitions, {total_occ} occurrences, "
+        f"{wall_s:.2f}s ({ref_len / max(wall_s, 1e-9):.0f} bases/s)")
+    from .sharded import open_index
+    return open_index(out_dir)

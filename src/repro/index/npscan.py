@@ -1,0 +1,104 @@
+"""Pure-numpy minimizer scan — the out-of-core builder's substrate.
+
+Bit-identical ports of ``repro.core.minimizers`` (``hash32``,
+``kmer_codes``, ``sliding_argmin``, ``minimizers``,
+``unique_read_minimizers``): every operation is exact integer arithmetic,
+so the numpy and jax implementations agree value-for-value (locked by a
+parity test in ``tests/test_index_sharded.py``).
+
+Two consumers need the host-side twin:
+
+* ``repro.index.build`` scans reference tiles with **no jax in the
+  loop** — no per-tile-shape retracing, no device transfers of tile
+  buffers, and the whole builder's peak RSS is visible to
+  ``tracemalloc`` (the bounded-memory assertion of the out-of-core
+  build);
+* the shard-routed single-host mapper extracts read minimizers on the
+  host to decide which index partitions a chunk touches *before* any
+  device dispatch (``repro.index.residency``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def np_hash32(x: np.ndarray) -> np.ndarray:
+    """Invertible 32-bit integer mix — ``core.minimizers.hash32`` twin."""
+    x = np.asarray(x, dtype=np.uint32)
+    x = (x ^ (x >> np.uint32(16))) * np.uint32(0x7FEB352D)
+    x = (x ^ (x >> np.uint32(15))) * np.uint32(0x846CA68B)
+    return x ^ (x >> np.uint32(16))
+
+
+def np_kmer_codes(seq: np.ndarray, k: int) -> np.ndarray:
+    """All k-mer integer codes along the last axis -> (..., L-k+1) uint32."""
+    assert k <= 16, "k-mer code must fit 32 bits"
+    n = seq.shape[-1] - k + 1
+    acc = np.zeros(seq.shape[:-1] + (n,), dtype=np.uint32)
+    for j in range(k):
+        acc |= seq[..., j : j + n].astype(np.uint32) << np.uint32(
+            2 * (k - 1 - j))
+    return acc
+
+
+def np_sliding_argmin(values: np.ndarray, window: int):
+    """Sliding-window (min, leftmost argmin) by (value, index) doubling —
+    the same step schedule as ``core.minimizers.sliding_argmin``, so tie
+    resolution is identical, not merely equivalent."""
+    n = values.shape[-1] - window + 1
+    idx = np.broadcast_to(
+        np.arange(values.shape[-1], dtype=np.int32), values.shape)
+    val, pos = values, idx
+    span = 1
+    while span < window:
+        step = min(span, window - span)
+        a_v, a_p = val[..., : val.shape[-1] - step], \
+            pos[..., : pos.shape[-1] - step]
+        b_v, b_p = val[..., step:], pos[..., step:]
+        take_b = (b_v < a_v) | ((b_v == a_v) & (b_p < a_p))
+        val = np.where(take_b, b_v, a_v)
+        pos = np.where(take_b, b_p, a_p)
+        span += step
+    return val[..., :n], pos[..., :n]
+
+
+def np_minimizers(seq: np.ndarray, k: int, w: int):
+    """Window minimizers -> (min_hash, min_kmer, min_pos), each
+    (..., n_windows); ``min_pos`` is the k-mer start within ``seq``."""
+    codes = np_kmer_codes(seq, k)
+    minh, min_pos = np_sliding_argmin(np_hash32(codes), w)
+    min_kmer = np.take_along_axis(codes, min_pos, axis=-1)
+    return minh, min_kmer, min_pos
+
+
+def np_unique_read_minimizers(reads: np.ndarray, k: int, w: int,
+                              max_uniq: int):
+    """Batched unique minimizers per read, static-shape padded.
+
+    reads: (R, rl).  Returns (kmers (R, max_uniq) uint32,
+    positions (R, max_uniq) int32, valid (R, max_uniq) bool) — the host
+    twin of ``vmap(unique_read_minimizers)``: stable sort by kmer, keep
+    the first occurrence of each, compact to the front.
+    """
+    _, kmer, pos = np_minimizers(reads, k, w)
+    R, n_win = kmer.shape
+    order = np.argsort(kmer, axis=-1, kind="stable")
+    ks = np.take_along_axis(kmer, order, -1)
+    ps = np.take_along_axis(pos, order, -1)
+    first = np.concatenate(
+        [np.ones((R, 1), dtype=bool), ks[:, 1:] != ks[:, :-1]], axis=1)
+    rank = np.cumsum(first, axis=-1) - 1
+    slots = np.where(first, rank, n_win)
+    out_k = np.zeros((R, n_win + 1), dtype=ks.dtype)
+    out_p = np.zeros((R, n_win + 1), dtype=np.int32)
+    np.put_along_axis(out_k, slots, ks, axis=-1)
+    np.put_along_axis(out_p, slots, ps.astype(np.int32), axis=-1)
+    n_uniq = first.sum(axis=-1)
+    valid = np.arange(max_uniq)[None, :] < np.minimum(n_uniq,
+                                                      max_uniq)[:, None]
+    m = min(max_uniq, n_win + 1)
+    kmers = np.zeros((R, max_uniq), dtype=ks.dtype)
+    positions = np.zeros((R, max_uniq), dtype=np.int32)
+    kmers[:, :m] = out_k[:, :m]
+    positions[:, :m] = out_p[:, :m]
+    return kmers, positions, valid

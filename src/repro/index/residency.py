@@ -1,0 +1,271 @@
+"""Lazy/LRU device residency + shard-routed single-host execution.
+
+The single-host topology cannot assume the whole partitioned index fits
+on the device (that assumption is what the sharded index exists to
+drop).  Instead the ``Mapper`` owns a fixed-capacity **device arena** —
+one ``(cap_rows, seg_len)`` segments array and one ``(cap_rows,)``
+positions array sized by ``memory_budget_bytes`` — and partitions move
+in and out of it at chunk granularity:
+
+* ``seed_reads_routed`` (host, numpy) extracts each chunk's minimizers
+  and routes them by the crossbar rule, so the set of partitions the
+  chunk touches is known *before* any device dispatch;
+* ``DeviceResidency.ensure`` makes those partitions resident — cache
+  hits just touch the LRU, misses upload the partition's segments +
+  positions into a free extent, evicting least-recently-used partitions
+  (never ones the current chunk needs) when the budget is tight, and
+  compacting the arena when free space is fragmented;
+* emitted ``occ_idx`` rows are arena rows, and the chunk carries a
+  *snapshot* of the arena device arrays: updates are functional
+  (``.at[].set`` builds a new array), so a chunk in flight on the
+  streaming engine keeps its own consistent buffers even while the next
+  chunk's ``phase1`` evicts and reloads partitions underneath it.
+
+Everything downstream — linear/affine WF, filter, traceback — is the
+unmodified flat pipeline: ``_RoutedChunkPipeline`` only replaces where
+``occ_idx`` rows come from and which device arrays they point into.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import streaming
+from ..core.pipeline import MapperConfig, _ChunkPipeline
+from ..core.seeding import seed_reads_routed
+
+import time
+
+
+class DeviceResidency:
+    """Partition-granular device arena under a byte budget."""
+
+    def __init__(self, index, memory_budget_bytes: int | None = None):
+        self.index = index
+        seg_len = index.seg_len
+        # one occurrence row = seg_len segment bytes + 4 position bytes
+        self.row_bytes = seg_len + 4
+        rows = [p.n_occurrences for p in index.parts]
+        total = sum(rows)
+        biggest = max(rows, default=0)
+        if memory_budget_bytes is None:
+            cap_rows = max(total, 1)
+        else:
+            cap_rows = max(int(memory_budget_bytes) // self.row_bytes, 0)
+            if cap_rows < max(biggest, 1):
+                need = max(biggest, 1) * self.row_bytes
+                raise ValueError(
+                    f"memory_budget_bytes={memory_budget_bytes} holds "
+                    f"{cap_rows} occurrence rows ({self.row_bytes} B/row) "
+                    f"but the largest partition needs {max(biggest, 1)} "
+                    f"rows; raise the budget to >= {need} bytes or rebuild "
+                    f"the index with more partitions")
+        self.cap_rows = cap_rows
+        self.budget_bytes = memory_budget_bytes
+        self.segments_dev = jnp.zeros((cap_rows, seg_len), dtype=jnp.uint8)
+        self.positions_dev = jnp.zeros((cap_rows,), dtype=jnp.int32)
+        self._alloc: dict[int, tuple[int, int]] = {}   # p -> (lo, rows)
+        self._lru: OrderedDict[int, None] = OrderedDict()
+        self.loads = 0
+        self.evictions = 0
+        self.h2d_bytes = 0
+
+    # ------------------------------------------------------------- queries
+    @property
+    def resident(self) -> list:
+        return sorted(self._alloc)
+
+    @property
+    def resident_rows(self) -> int:
+        return sum(r for _, r in self._alloc.values())
+
+    def snapshot(self):
+        """The arena device arrays as of now.  Chunks must pair their
+        ``occ_idx`` rows with the snapshot taken at routing time —
+        functional updates make later loads produce *new* arrays, so a
+        snapshot can never change under an in-flight chunk."""
+        return self.positions_dev, self.segments_dev
+
+    # ----------------------------------------------------------- residency
+    def ensure(self, parts: list) -> dict:
+        """Make ``parts`` resident; returns ``{p: arena_base_row}``."""
+        pinned = set(parts)
+        bases = {}
+        for p in parts:
+            if p in self._alloc:
+                self._lru.move_to_end(p)
+                bases[p] = self._alloc[p][0]
+        for p in parts:
+            if p not in bases:
+                bases[p] = self._load(p, pinned)
+        return bases
+
+    def _free_extents(self):
+        used = sorted(self._alloc.values())
+        extents, cursor = [], 0
+        for lo, rows in used:
+            if lo > cursor:
+                extents.append((cursor, lo - cursor))
+            cursor = lo + rows
+        if cursor < self.cap_rows:
+            extents.append((cursor, self.cap_rows - cursor))
+        return extents
+
+    def _find_gap(self, rows: int):
+        for lo, size in self._free_extents():
+            if size >= rows:
+                return lo
+        return None
+
+    def _evict_one(self, pinned: set) -> None:
+        victim = next((q for q in self._lru if q not in pinned), None)
+        if victim is None:
+            need = sum(self.index.parts[p].n_occurrences for p in pinned)
+            raise ValueError(
+                f"one chunk touches partitions needing {need} occurrence "
+                f"rows but the arena holds {self.cap_rows}; raise "
+                f"memory_budget_bytes (>= {need * self.row_bytes} bytes) "
+                f"or shrink chunk_reads so fewer partitions are touched "
+                f"at once")
+        del self._alloc[victim]
+        del self._lru[victim]
+        self.evictions += 1
+
+    def _compact(self) -> None:
+        """Repack resident partitions to the arena front (functional
+        slice moves; sorted ascending, so every move is leftward into
+        space already vacated)."""
+        cursor = 0
+        for p, (lo, rows) in sorted(self._alloc.items(),
+                                    key=lambda kv: kv[1][0]):
+            if lo != cursor:
+                self.segments_dev = self.segments_dev.at[
+                    cursor:cursor + rows].set(self.segments_dev[lo:lo + rows])
+                self.positions_dev = self.positions_dev.at[
+                    cursor:cursor + rows].set(
+                        self.positions_dev[lo:lo + rows])
+                self._alloc[p] = (cursor, rows)
+            cursor += rows
+
+    def _load(self, p: int, pinned: set) -> int:
+        part = self.index.parts[p]
+        rows = part.n_occurrences
+        while True:
+            lo = self._find_gap(rows)
+            if lo is not None:
+                break
+            if (self.cap_rows - self.resident_rows) >= rows:
+                self._compact()     # space exists but is fragmented
+                continue
+            self._evict_one(pinned)
+        segs = part.read_segments()
+        self.segments_dev = self.segments_dev.at[lo:lo + rows].set(
+            jnp.asarray(segs))
+        self.positions_dev = self.positions_dev.at[lo:lo + rows].set(
+            jnp.asarray(np.asarray(part.positions, dtype=np.int32)))
+        self._alloc[p] = (lo, rows)
+        self._lru[p] = None
+        self._lru.move_to_end(p)
+        self.loads += 1
+        self.h2d_bytes += rows * self.row_bytes
+        return lo
+
+    # ------------------------------------------------------------- stats
+    def stats_summary(self, *, reset: bool = True) -> dict:
+        out = {
+            "partition_loads": self.loads,
+            "partition_evictions": self.evictions,
+            "h2d_bytes": self.h2d_bytes,
+            "resident_partitions": self.resident,
+            "resident_rows": self.resident_rows,
+            "arena_rows": self.cap_rows,
+            "arena_bytes": self.cap_rows * self.row_bytes,
+        }
+        if reset:
+            self.loads = self.evictions = self.h2d_bytes = 0
+        return out
+
+
+class ShardRouter:
+    """Per-session routing front-end: host seeding + residency + stats."""
+
+    def __init__(self, index, residency: DeviceResidency,
+                 cfg: MapperConfig):
+        self.index = index
+        self.residency = residency
+        self.cfg = cfg
+        P = index.num_partitions
+        self._routed = np.zeros(P, dtype=np.int64)
+        self._found = np.zeros(P, dtype=np.int64)
+        self._chunks = 0
+
+    def seed(self, reads: np.ndarray):
+        """Route + seed one (padded, possibly strand-stacked) chunk.
+        Returns ``(numpy seeds, arena snapshot)``."""
+        seeds, routed, found = seed_reads_routed(
+            self.index, reads, self.cfg.seed_params, self.residency.ensure)
+        self._routed += routed
+        self._found += found
+        self._chunks += 1
+        return seeds, self.residency.snapshot()
+
+    def drain_stats(self) -> dict:
+        """Per-partition accounting since the last drain (one run)."""
+        out = {
+            "chunks_routed": self._chunks,
+            "minis_routed_per_partition": self._routed.tolist(),
+            "minis_found_per_partition": self._found.tolist(),
+            **self.residency.stats_summary(),
+        }
+        self._routed[:] = 0
+        self._found[:] = 0
+        self._chunks = 0
+        return out
+
+
+class _RoutedChunkPipeline(_ChunkPipeline):
+    """``_ChunkPipeline`` with shard-routed host seeding.
+
+    phase1 replaces the device ``seed_reads`` dispatch with the host
+    router (minimizer extraction + per-partition CSR lookup + residency)
+    and uploads the finished static-shape seed tensors; phase2/fetch are
+    inherited unchanged — ``chunk_index`` hands them the arena snapshot
+    this chunk's ``occ_idx`` rows were routed against.
+    """
+
+    def __init__(self, router: ShardRouter, cfg: MapperConfig):
+        super().__init__(None, cfg)
+        self.router = router
+
+    def phase1(self, item, times=None):
+        sub, chunk = item
+        n_real = len(sub)
+        t0 = time.perf_counter()
+        if n_real < chunk:
+            sub = np.concatenate(
+                [sub, np.zeros((chunk - n_real, sub.shape[1]), sub.dtype)])
+        if self.cfg.both_strands:
+            from ..core.encoding import revcomp
+            sub = np.concatenate([sub, np.asarray(revcomp(sub))])
+        t0 = streaming.timed(times, "host_prep", t0)
+        seeds_np, (positions_dev, segments_dev) = self.router.seed(sub)
+        t0 = streaming.timed(times, "seed", t0)
+        reads = jnp.asarray(sub)
+        seeds = {
+            "mini_pos": jnp.asarray(seeds_np["mini_pos"]),
+            "occ_idx": jnp.asarray(seeds_np["occ_idx"]),
+            "occ_valid": jnp.asarray(seeds_np["occ_valid"]),
+            "n_valid": seeds_np["n_valid"],
+            "_chunk_positions": positions_dev,
+            "_chunk_segments": segments_dev,
+        }
+        if times is not None:
+            reads.block_until_ready()
+            seeds["occ_idx"].block_until_ready()
+        streaming.timed(times, "h2d", t0)
+        return reads, seeds, n_real
+
+    def chunk_index(self, seeds):
+        return seeds.pop("_chunk_positions"), seeds.pop("_chunk_segments")

@@ -98,6 +98,57 @@ def parse_fasta(path_or_handle) -> Iterator[tuple[str, np.ndarray]]:
             f.close()
 
 
+def stream_fasta(path_or_handle, *,
+                 max_chunk: int = 1 << 20,
+                 ) -> Iterator[tuple[str, np.ndarray, bool]]:
+    """Yield ``(name, codes_chunk, is_last)`` streaming each contig in
+    bounded pieces, never holding a whole contig.
+
+    Unlike :func:`parse_fasta` (which concatenates a record before
+    yielding it), this caps resident sequence at ~``max_chunk`` bases —
+    the ingestion contract the out-of-core index builder
+    (``repro.index.build``) needs so a chromosome-sized contig costs
+    tile-sized memory.  ``is_last`` marks the final chunk of a record;
+    a record with no sequence lines yields one empty last chunk so
+    callers can reject it by name.
+    """
+    f, owned = _open(path_or_handle)
+    try:
+        name, parts, buffered = None, [], 0
+
+        def flush(last: bool):
+            nonlocal parts, buffered
+            chunk = (np.concatenate(parts) if parts else
+                     np.zeros(0, np.uint8))
+            parts, buffered = [], 0
+            return name, chunk, last
+
+        for raw in f:
+            line = raw.strip()
+            if not line:
+                continue
+            if line.startswith(">"):
+                if name is not None:
+                    yield flush(True)
+                name = line[1:].split()[0] if len(line) > 1 else ""
+                if not name:
+                    raise ValueError("FASTA record with empty header name")
+            else:
+                if name is None:
+                    raise ValueError("FASTA sequence data before any "
+                                     "'>' header line")
+                codes = encode_ref_line(line)
+                parts.append(codes)
+                buffered += len(codes)
+                if buffered >= max_chunk:
+                    yield flush(False)
+        if name is not None:
+            yield flush(True)
+    finally:
+        if owned:
+            f.close()
+
+
 class ReferenceMap:
     """Global (concatenated) position <-> per-contig coordinates."""
 

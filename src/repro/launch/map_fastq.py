@@ -65,7 +65,8 @@ def _open_stream(args, injector=None):
 
 def run(args) -> int:
     from repro.core.index import build_index
-    from repro.core.mapper import Mapper, accumulate_stats
+    from repro.core.mapper import (Mapper, accumulate_partition_stats,
+                                   accumulate_stats)
     from repro.core.pairing import InsertSizeTracker, resolve_pairs
     from repro.core.pipeline import MapperConfig
     from repro.core.resilience import FaultInjector, ResilientMapper
@@ -77,34 +78,69 @@ def run(args) -> int:
     t0 = time.perf_counter()
     injector = (FaultInjector.from_spec(args.inject)
                 if args.inject is not None else None)
+    sharded = None
+    if args.index_dir is not None:
+        from repro.index import open_index
+        sharded = open_index(args.index_dir)
+        if args.read_len is not None and args.read_len != sharded.read_len:
+            raise SystemExit(
+                f"map_fastq: --read-len {args.read_len} conflicts with the "
+                f"index's read_len={sharded.read_len} — segment geometry "
+                f"is fixed at build time; rebuild with "
+                f"repro.launch.build_index --read-len {args.read_len}")
+        args.read_len = sharded.read_len
+        for name in ("k", "w", "eth"):
+            if getattr(args, name) != getattr(sharded, name):
+                print(f"map_fastq: --{name} {getattr(args, name)} ignored; "
+                      f"index manifest has {name}="
+                      f"{getattr(sharded, name)}", file=sys.stderr)
+                setattr(args, name, getattr(sharded, name))
     stream, paired = _open_stream(args, injector)
     rl = stream.read_len
-    # spacer >= one alignment window: no read can map across a boundary
-    rejected_contigs: list = []
-    ref, contigs = load_reference(args.reference, spacer=rl + 2 * args.eth,
-                                  on_error=args.on_error,
-                                  rejected=rejected_contigs)
-    for cname, why in rejected_contigs:
-        print(f"map_fastq: skipped contig {cname!r}: {why}",
-              file=sys.stderr)
-    refmap = ReferenceMap(contigs)
-    idx = build_index(ref, read_len=rl, k=args.k, w=args.w, eth=args.eth)
+    if sharded is not None:
+        contigs = sharded.contigs
+        refmap = sharded.reference_map()
+        # only the paired-end mate-rescue scan needs the genome itself;
+        # single-end runs stay on the mmap'd packed reference
+        ref = sharded.reference_codes() if paired else None
+        n_indexed = sharded.ref_len
+        idx = sharded
+    else:
+        # spacer >= one alignment window: no read can map across a boundary
+        rejected_contigs: list = []
+        ref, contigs = load_reference(args.reference,
+                                      spacer=rl + 2 * args.eth,
+                                      on_error=args.on_error,
+                                      rejected=rejected_contigs)
+        for cname, why in rejected_contigs:
+            print(f"map_fastq: skipped contig {cname!r}: {why}",
+                  file=sys.stderr)
+        refmap = ReferenceMap(contigs)
+        n_indexed = len(ref)
+        idx = build_index(ref, read_len=rl, k=args.k, w=args.w,
+                          eth=args.eth)
     cfg = MapperConfig.from_index(
         idx, engine=args.engine, wf_backend=args.wf_backend,
         chunk_reads=args.chunk_reads, stream=not args.no_stream,
         both_strands=not args.single_strand)
+    budget = (int(args.index_budget_mb * (1 << 20))
+              if args.index_budget_mb is not None else None)
     mapper = Mapper(idx, cfg, topology=args.topology, n_shards=args.shards,
-                    injector=injector, watchdog_s=args.watchdog)
+                    injector=injector, watchdog_s=args.watchdog,
+                    memory_budget_bytes=budget)
     # fault containment (retry/bisect/degrade) is armed alongside the
     # injector or a permissive run; a plain strict run keeps today's
     # fail-fast behaviour with zero wrapping
     resilient = (ResilientMapper(mapper, injector=injector)
                  if injector is not None or args.on_error == "permissive"
                  else None)
-    print(f"map_fastq: {len(contigs)} contig(s), {len(ref)} indexed bases, "
-          f"read_len={rl}, topology={mapper.topology}, paired={paired}, "
-          f"both_strands={cfg.both_strands}, engine={cfg.engine}, "
-          f"wf_backend={cfg.wf_backend}", file=sys.stderr)
+    src = (f"index {args.index_dir} ({sharded.num_partitions} partitions)"
+           if sharded is not None else "in-memory index")
+    print(f"map_fastq: {len(contigs)} contig(s), {n_indexed} indexed bases "
+          f"({src}), read_len={rl}, topology={mapper.topology}, "
+          f"paired={paired}, both_strands={cfg.both_strands}, "
+          f"engine={cfg.engine}, wf_backend={cfg.wf_backend}",
+          file=sys.stderr)
 
     # resume-safe atomic output: SAM accumulates in a .partial segment
     # and lands on the final path in one os.replace only after a clean
@@ -188,6 +224,7 @@ def run(args) -> int:
                     "survivors", "affine_instances",
                     "padded_affine_instances", "dropped_send",
                     "dropped_affine"))
+                accumulate_partition_stats(totals, res.stats)
             out.flush()  # each chunk's records land in the .partial segment
             rate = totals["reads"] / max(time.perf_counter() - t_map, 1e-9)
             print(f"chunk {i}: {n_new} reads, "
@@ -255,12 +292,24 @@ def main():
         prog="repro.launch.map_fastq",
         description="Map a FASTQ read set against a FASTA reference; "
                     "emit SAM.")
-    ap.add_argument("reference", help="FASTA reference (multi-contig ok; "
-                                      "N -> never-matching sentinel)")
+    ap.add_argument("reference", nargs="?", default=None,
+                    help="FASTA reference (multi-contig ok; N -> "
+                         "never-matching sentinel); omit when mapping "
+                         "against a prebuilt --index-dir")
     ap.add_argument("reads", nargs="?", default=None,
                     help="FASTQ reads (4-line records; .gz ok) — "
                          "single-end, or interleaved pairs with "
                          "--interleaved")
+    ap.add_argument("--index-dir", default=None, metavar="DIR",
+                    help="prebuilt sharded index directory "
+                         "(repro.launch.build_index) instead of indexing "
+                         "a FASTA at startup; geometry comes from the "
+                         "manifest")
+    ap.add_argument("--index-budget-mb", type=float, default=None,
+                    metavar="MB",
+                    help="--index-dir + single topology: device budget "
+                         "for the partition arena; partitions load "
+                         "lazily and LRU-evict under this bound")
     ap.add_argument("--r1", default=None,
                     help="paired-end R1 FASTQ (.gz ok); requires --r2")
     ap.add_argument("--r2", default=None,
@@ -310,6 +359,17 @@ def main():
     ap.add_argument("--w", type=int, default=30)
     ap.add_argument("--eth", type=int, default=6)
     args = ap.parse_args()
+    if args.index_dir is not None:
+        if args.reference is not None and args.reads is None:
+            # `map_fastq --index-dir DIR reads.fq`: the sole positional
+            # is the FASTQ — no FASTA on this path
+            args.reference, args.reads = None, args.reference
+        if args.reference is not None:
+            raise SystemExit("map_fastq: pass either a FASTA reference or "
+                             "--index-dir, not both")
+    elif args.reference is None:
+        raise SystemExit("map_fastq: a FASTA reference (positional) or "
+                         "--index-dir is required")
     if args.topology == "mesh" and args.shards and \
             "XLA_FLAGS" not in os.environ:
         os.environ["XLA_FLAGS"] = (

@@ -239,3 +239,99 @@ def test_map_fastq_interleaved_matches_two_file(paired_world):
     inter_sam, _ = _run_map_fastq(d, "inter.sam", str(inter),
                                   "--interleaved", chunk_reads=10)
     assert body(inter_sam) == body(two)
+
+
+# ------------------------------------------------------------ --index-dir
+
+def _run_index_cli(d, out_name, *argv, chunk_reads=16):
+    """map_fastq against a prebuilt --index-dir (no FASTA positional)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..",
+                                      "src") +
+                         os.pathsep + env.get("PYTHONPATH", ""))
+    cmd = [sys.executable, "-m", "repro.launch.map_fastq",
+           "--index-dir", str(d / "idx"), str(d / "reads.fq"),
+           *argv, "-o", str(d / out_name),
+           "--chunk-reads", str(chunk_reads)]
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    return (d / out_name).read_text(), proc.stderr
+
+
+def _sam_body(text):
+    # @PG carries the command line, which legitimately differs
+    return [ln for ln in text.splitlines() if not ln.startswith("@PG")]
+
+
+@pytest.fixture(scope="module")
+def index_dir(fastq_world):
+    d, _ = fastq_world
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..",
+                                      "src") +
+                         os.pathsep + env.get("PYTHONPATH", ""))
+    cmd = [sys.executable, "-m", "repro.launch.build_index",
+           str(d / "ref.fa"), "-o", str(d / "idx"), "--partitions", "2",
+           "--tile-bp", "1024", "--read-len", str(READ_LEN), "--verify"]
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert "integrity check passed" in proc.stderr
+    return d / "idx"
+
+
+def test_index_dir_single_byte_identical(fastq_world, index_dir):
+    """Golden e2e: mapping from the on-disk sharded index produces the
+    byte-identical SAM to indexing the FASTA in memory (multi-contig,
+    dual-strand), single topology."""
+    d, truth = fastq_world
+    mem, _ = _run_cli(d, "mem_single.sam")
+    disk, err = _run_index_cli(d, "disk_single.sam")
+    assert _sam_body(disk) == _sam_body(mem)
+    _check_sam(disk, truth, expect_cigars=True)
+    assert "partitions: routed" in err
+    assert "index storage:" in err
+
+
+def test_index_dir_single_budget_byte_identical(fastq_world, index_dir):
+    d, _ = fastq_world
+    mem, _ = _run_cli(d, "mem_single2.sam")
+    disk, err = _run_index_cli(d, "disk_budget.sam",
+                               "--index-budget-mb", "64")
+    assert _sam_body(disk) == _sam_body(mem)
+
+
+def test_index_dir_mesh_byte_identical(fastq_world, index_dir):
+    """Mesh topology consumes the pre-partitioned index (partition i on
+    shard i) and still byte-matches the in-memory mesh run."""
+    d, truth = fastq_world
+    mem, _ = _run_cli(d, "mem_mesh.sam", "--topology", "mesh",
+                      "--shards", "2")
+    disk, err = _run_index_cli(d, "disk_mesh.sam", "--topology", "mesh",
+                               "--shards", "2")
+    assert _sam_body(disk) == _sam_body(mem)
+    _check_sam(disk, truth, expect_cigars=False)
+    assert "partitions: 2 mesh-placed" in err
+
+
+def test_index_dir_cli_validation(fastq_world, index_dir):
+    d, _ = fastq_world
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..",
+                                      "src") +
+                         os.pathsep + env.get("PYTHONPATH", ""))
+
+    def run_cli(*argv):
+        return subprocess.run(
+            [sys.executable, "-m", "repro.launch.map_fastq", *argv],
+            env=env, capture_output=True, text=True, timeout=600)
+
+    p = run_cli(str(d / "ref.fa"), str(d / "reads.fq"),
+                "--index-dir", str(d / "idx"))
+    assert p.returncode != 0 and "not both" in p.stderr
+    p = run_cli(str(d / "reads.fq"))  # looks like a reference, none given
+    assert p.returncode != 0
+    p = run_cli("--index-dir", str(d / "idx"), str(d / "reads.fq"),
+                "--read-len", str(READ_LEN + 1))
+    assert p.returncode != 0 and "conflicts with the index" in p.stderr

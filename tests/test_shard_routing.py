@@ -1,0 +1,196 @@
+"""Shard-routed execution: ``ShardedGenomeIndex`` through the ``Mapper``.
+
+The contract under test: plugging the partitioned index into either
+topology changes *where* occurrence rows live (single: a budgeted LRU
+device arena fed per chunk; mesh: partition i pre-placed on shard i)
+but never changes a single mapped result — positions, distances,
+strands, CIGARs all byte-match the flat-index session.  Plus the
+residency mechanics (LRU eviction, compaction, budget errors), the
+session validation errors, per-partition stats, and the mesh
+plan-cache-hit-after-warm-up guarantee with zero runtime re-hashing.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.index import build_index
+from repro.core.mapper import Mapper, accumulate_partition_stats
+from repro.core.pipeline import MapperConfig
+from repro.data.genome import make_reference, sample_reads
+from repro.index import shard_flat_index
+from repro.index.residency import DeviceResidency
+
+READ_LEN, K, W, ETH = 60, 10, 12, 4
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+_RESULT_FIELDS = ("position", "distance", "distance2", "mapped", "strand",
+                  "ops", "op_count", "linear_dist", "n_candidates")
+
+
+@pytest.fixture(scope="module")
+def world():
+    ref = make_reference(20_000, seed=21, repeat_frac=0.02)
+    flat = build_index(ref, read_len=READ_LEN, k=K, w=W, eth=ETH)
+    sidx = shard_flat_index(flat, 4)
+    rs = sample_reads(ref, 48, read_len=READ_LEN, seed=5,
+                      both_strands=True)
+    return ref, flat, sidx, rs
+
+
+def _assert_same_results(a, b):
+    for f in _RESULT_FIELDS:
+        va, vb = getattr(a, f), getattr(b, f)
+        assert (va is None) == (vb is None), f
+        if va is not None:
+            assert np.array_equal(va, vb), f
+
+
+def test_routed_single_matches_flat(world):
+    ref, flat, sidx, rs = world
+    cfg = MapperConfig.from_index(flat, chunk_reads=16, both_strands=True)
+    res_flat = Mapper(flat, cfg).map(rs.reads)
+    m = Mapper(sidx, cfg)
+    res = m.map(rs.reads)
+    _assert_same_results(res_flat, res)
+    part = res.stats["partitions"]
+    assert sum(part["minis_routed_per_partition"]) > 0
+    assert part["partition_loads"] == 4
+    assert part["arena_rows"] == sum(p.n_occurrences for p in sidx.parts)
+    # accuracy sanity on top of equality
+    mapped = res.mapped
+    assert (np.abs(res.position[mapped] - rs.true_pos[mapped]) <= ETH).all()
+
+
+def test_routed_single_under_budget_matches_flat(world):
+    ref, flat, sidx, rs = world
+    cfg = MapperConfig.from_index(flat, chunk_reads=16)
+    res_flat = Mapper(flat, cfg).map(rs.reads)
+    total = sum(p.n_occurrences for p in sidx.parts) * (sidx.seg_len + 4)
+    m = Mapper(sidx, cfg, memory_budget_bytes=total)
+    res = m.map(rs.reads)
+    _assert_same_results(res_flat, res)
+    part = res.stats["partitions"]
+    assert part["h2d_bytes"] > 0
+    # a second run reuses resident partitions: no new loads
+    res2 = m.map(rs.reads)
+    assert res2.stats["partitions"]["partition_loads"] == 0
+    _assert_same_results(res_flat, res2)
+
+
+def test_residency_lru_eviction_and_contents(world):
+    _, _, sidx, _ = world
+    rows = [p.n_occurrences for p in sidx.parts]
+    row_b = sidx.seg_len + 4
+    res = DeviceResidency(sidx, (max(rows) * 2 + max(rows) // 2) * row_b)
+    for p in (0, 1, 2, 3, 0):
+        res.ensure([p])
+    assert res.evictions >= 2
+    assert 0 in res.resident           # just touched — not evicted
+    for p in res.resident:             # arena rows match partition data
+        lo, nr = res._alloc[p]
+        assert np.array_equal(np.asarray(res.segments_dev[lo:lo + nr]),
+                              sidx.parts[p].read_segments())
+        assert np.array_equal(np.asarray(res.positions_dev[lo:lo + nr]),
+                              np.asarray(sidx.parts[p].positions))
+    # pinned partitions of the current chunk are never victims
+    need = res.resident[:1]
+    res.ensure(need)
+    assert need[0] in res.resident
+
+
+def test_budget_too_small_errors(world):
+    _, _, sidx, _ = world
+    biggest = max(p.n_occurrences for p in sidx.parts)
+    with pytest.raises(ValueError, match="largest partition"):
+        DeviceResidency(sidx, (biggest - 1) * (sidx.seg_len + 4))
+    cfg = MapperConfig.from_index(sidx)
+    with pytest.raises(ValueError, match="memory_budget_bytes"):
+        Mapper(sidx, cfg, memory_budget_bytes=16)
+
+
+def test_mapper_session_validation(world):
+    _, flat, sidx, _ = world
+    with pytest.raises(ValueError, match='engine="padded"'):
+        Mapper(sidx, MapperConfig.from_index(sidx, engine="padded"))
+    with pytest.raises(ValueError, match='cigar_mode="lazy"'):
+        Mapper(sidx, MapperConfig.from_index(sidx, cigar_mode="lazy"))
+    with pytest.raises(ValueError, match="memory_budget_bytes only"):
+        Mapper(flat, MapperConfig.from_index(flat),
+               memory_budget_bytes=1 << 20)
+    with pytest.raises(ValueError, match="4 partitions but the mesh has"):
+        Mapper(sidx, MapperConfig.from_index(sidx), topology="mesh",
+               n_shards=1)
+
+
+def test_to_mesh_shards_matches_shard_index(world):
+    from repro.core.distributed import shard_index
+    _, flat, sidx, _ = world
+    a = shard_index(flat, 4)
+    b = sidx.to_mesh_shards()
+    assert a.n_shards == b.n_shards and a.read_len == b.read_len
+    for f in ("uniq_kmers", "offsets", "positions", "segments"):
+        assert np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f))), f
+
+
+def test_index_storage_and_stats_accumulation(world):
+    _, flat, sidx, rs = world
+    cfg = MapperConfig.from_index(flat, chunk_reads=16)
+    m = Mapper(sidx, cfg)
+    assert m.index_storage()["num_partitions"] == 4
+    assert Mapper(flat, cfg).index_storage()["total_bytes"] > 0
+    totals = {}
+    for _ in range(2):
+        accumulate_partition_stats(totals, m.map(rs.reads).stats)
+    part = totals["partitions"]
+    assert part["chunks_routed"] == 2 * -(-len(rs.reads) // 16)
+    assert part["partition_loads"] == 4   # loaded once, reused after
+
+
+MESH_SCRIPT = r"""
+import numpy as np
+from repro.core.index import build_index
+from repro.core.mapper import Mapper
+from repro.core.pipeline import MapperConfig
+from repro.data.genome import make_reference, sample_reads
+from repro.index import shard_flat_index
+
+READ_LEN, K, W, ETH = 60, 10, 12, 4
+ref = make_reference(20_000, seed=21, repeat_frac=0.02)
+flat = build_index(ref, read_len=READ_LEN, k=K, w=W, eth=ETH)
+sidx = shard_flat_index(flat, 4)
+rs = sample_reads(ref, 48, read_len=READ_LEN, seed=5)
+cfg = MapperConfig.from_index(flat)
+
+res_flat = Mapper(flat, cfg, topology="mesh", n_shards=4).map(rs.reads)
+m = Mapper(sidx, cfg, topology="mesh", n_shards=4)
+res = m.map(rs.reads)
+assert np.array_equal(res.position, res_flat.position)
+assert np.array_equal(res.distance, res_flat.distance)
+part = res.stats["partitions"]
+assert part["num_partitions"] == 4
+assert len(part["survivors_per_partition"]) == 4
+assert part["occurrences_per_partition"] == \
+    [p.n_occurrences for p in sidx.parts]
+
+# pre-partitioned shards: repeated same-size batches hit the plan cache
+# (no recompile, zero runtime re-hashing after placement)
+res2 = m.map(rs.reads)
+assert m.plan_cache_hits >= 1, (m.plan_cache_hits, m.plan_cache_misses)
+assert m.plan_cache_misses == 1
+assert np.array_equal(res2.position, res_flat.position)
+print("MESH-OK")
+"""
+
+
+def test_mesh_prepartitioned(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    proc = subprocess.run([sys.executable, "-c", MESH_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert "MESH-OK" in proc.stdout
