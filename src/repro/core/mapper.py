@@ -152,6 +152,7 @@ class MapperStats:
 
 
 _PART_SUM_KEYS = ("chunks_routed", "partition_loads", "partition_evictions",
+                  "partition_compactions",
                   "h2d_bytes", "minis_routed_per_partition",
                   "minis_found_per_partition", "survivors_per_partition")
 

@@ -70,6 +70,7 @@ class DeviceResidency:
         self._lru: OrderedDict[int, None] = OrderedDict()
         self.loads = 0
         self.evictions = 0
+        self.compactions = 0
         self.h2d_bytes = 0
 
     # ------------------------------------------------------------- queries
@@ -92,15 +93,16 @@ class DeviceResidency:
     def ensure(self, parts: list) -> dict:
         """Make ``parts`` resident; returns ``{p: arena_base_row}``."""
         pinned = set(parts)
-        bases = {}
         for p in parts:
             if p in self._alloc:
                 self._lru.move_to_end(p)
-                bases[p] = self._alloc[p][0]
         for p in parts:
-            if p not in bases:
-                bases[p] = self._load(p, pinned)
-        return bases
+            if p not in self._alloc:
+                self._load(p, pinned)
+        # Bases must come from the allocation table only after every
+        # load: a late ``_load`` may ``_compact`` and relocate
+        # partitions that were already resident when ensure() started.
+        return {p: self._alloc[p][0] for p in parts}
 
     def _free_extents(self):
         used = sorted(self._alloc.values())
@@ -137,6 +139,7 @@ class DeviceResidency:
         """Repack resident partitions to the arena front (functional
         slice moves; sorted ascending, so every move is leftward into
         space already vacated)."""
+        self.compactions += 1
         cursor = 0
         for p, (lo, rows) in sorted(self._alloc.items(),
                                     key=lambda kv: kv[1][0]):
@@ -177,6 +180,7 @@ class DeviceResidency:
         out = {
             "partition_loads": self.loads,
             "partition_evictions": self.evictions,
+            "partition_compactions": self.compactions,
             "h2d_bytes": self.h2d_bytes,
             "resident_partitions": self.resident,
             "resident_rows": self.resident_rows,
@@ -184,7 +188,8 @@ class DeviceResidency:
             "arena_bytes": self.cap_rows * self.row_bytes,
         }
         if reset:
-            self.loads = self.evictions = self.h2d_bytes = 0
+            self.loads = self.evictions = self.compactions = 0
+            self.h2d_bytes = 0
         return out
 
 

@@ -264,9 +264,16 @@ def shard_flat_index(index: GenomeIndex, num_partitions: int, *,
             seg_len=index.seg_len,
             segments_raw=index.segments[idx]))
     if contigs is None:
-        ref_len = (len(ref) if ref is not None
-                   else (int(index.positions.max()) + 1
-                         if len(index.positions) else 0))
+        if ref is not None:
+            ref_len = len(ref)
+        elif len(index.positions):
+            # positions are minimizer k-mer starts; the farthest one can
+            # sit up to w+k-2 bases short of the reference end (leftmost
+            # k-mer of the final window), so use the geometric upper
+            # bound.  Pass ref=/contigs= when exact lengths matter.
+            ref_len = int(index.positions.max()) + index.w + index.k - 1
+        else:
+            ref_len = 0
         contigs = [Contig(name="ref", length=ref_len, offset=0)]
     packed = None
     if ref is not None:

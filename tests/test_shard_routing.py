@@ -12,6 +12,7 @@ plan-cache-hit-after-warm-up guarantee with zero runtime re-hashing.
 import os
 import subprocess
 import sys
+import types
 
 import numpy as np
 import pytest
@@ -22,6 +23,7 @@ from repro.core.pipeline import MapperConfig
 from repro.data.genome import make_reference, sample_reads
 from repro.index import shard_flat_index
 from repro.index.residency import DeviceResidency
+from repro.index.sharded import Partition
 
 READ_LEN, K, W, ETH = 60, 10, 12, 4
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -99,6 +101,48 @@ def test_residency_lru_eviction_and_contents(world):
     need = res.resident[:1]
     res.ensure(need)
     assert need[0] in res.resident
+
+
+def _synthetic_parts(sizes, seg_len):
+    rng = np.random.default_rng(7)
+    parts = []
+    for i, n in enumerate(sizes):
+        parts.append(Partition(
+            kmers=np.arange(n, dtype=np.uint32),
+            offsets=np.arange(n + 1, dtype=np.int32),
+            positions=(1000 * (i + 1) + np.arange(n)).astype(np.int32),
+            seg_len=seg_len,
+            segments_raw=rng.integers(0, 4, (n, seg_len), dtype=np.uint8)))
+    return parts
+
+
+def test_compaction_relocates_pinned_and_bases_stay_authoritative():
+    # Arena of 100 rows, partitions of 20/30/30/60 rows.  After
+    # ensure([0, 1, 2]) packs the front, ensure([1, 3]) must evict 0
+    # and 2, find free space fragmented ((0,20)+(50,50): 70 rows free
+    # but no 60-row extent), compact — relocating still-resident pinned
+    # partition 1 from row 20 to row 0 — and return partition 1's
+    # *post-compaction* base, not the base it had when ensure() started.
+    seg_len = 8
+    parts = _synthetic_parts([20, 30, 30, 60], seg_len)
+    idx = types.SimpleNamespace(parts=parts, seg_len=seg_len)
+    res = DeviceResidency(idx, 100 * (seg_len + 4))
+    assert res.ensure([0, 1, 2]) == {0: 0, 1: 20, 2: 50}
+    bases = res.ensure([1, 3])
+    assert res.evictions == 2 and res.compactions == 1
+    assert res.resident == [1, 3]
+    assert bases == {p: res._alloc[p][0] for p in bases}
+    assert bases == {1: 0, 3: 30}
+    # routed occ_idx rows are base + local CSR row: the arena contents
+    # under every returned base must byte-match the source partition,
+    # which is what keeps routed mappings identical to the flat index
+    # across relocations.
+    for p, base in bases.items():
+        nr = parts[p].n_occurrences
+        assert np.array_equal(np.asarray(res.segments_dev[base:base + nr]),
+                              parts[p].read_segments())
+        assert np.array_equal(np.asarray(res.positions_dev[base:base + nr]),
+                              np.asarray(parts[p].positions))
 
 
 def test_budget_too_small_errors(world):
