@@ -105,6 +105,9 @@ def bench_pipeline(R: int = 4096, genome: int = 30_000,
         if res.stats:
             st = dict(res.stats)
             st.pop("stream", None)
+            if "stage_times_s" in st:  # full precision lives in the stats
+                st["stage_times_s"] = {k: round(v, 4) for k, v
+                                       in st["stage_times_s"].items()}
             entry.update(st)
         out["engines"][name] = entry
     # the real-data boundary: same mapping work fed through FASTQ/SAM
@@ -125,6 +128,14 @@ def bench_pipeline(R: int = 4096, genome: int = 30_000,
     except Exception as e:  # noqa: BLE001 — report, keep the others
         out["resilience_overhead"] = {
             "error": f"{type(e).__name__}: {e}"}
+    # the always-on instrumentation tax: armed-but-idle metrics registry
+    # + span tracer vs both disarmed (gated < 5% in perf-trend)
+    try:
+        out["obs_overhead"] = bench_obs_overhead(
+            R=min(R, 2048), genome=genome, chunk_reads=chunk_reads,
+            world=(ref, idx))
+    except Exception as e:  # noqa: BLE001 — report, keep the others
+        out["obs_overhead"] = {"error": f"{type(e).__name__}: {e}"}
     # the out-of-core index path: streamed sharded build + mmap reload
     try:
         out["index_build"] = bench_index_build()
@@ -354,6 +365,63 @@ def bench_resilience_overhead(R: int = 2048, genome: int = 30_000,
     }
 
 
+def bench_obs_overhead(R: int = 2048, genome: int = 30_000,
+                       chunk_reads: int | None = 1024,
+                       iters: int = 3, world=None) -> dict:
+    """Armed-but-idle observability tax on the streamed Pallas engine.
+
+    The metrics registry and the span tracer are always-on in an
+    instrumented deployment, so their enabled cost is a first-class
+    metric: the same streamed run once with both disarmed (the default:
+    every hook is one attribute load + an ``is None`` branch) and once
+    with a live registry + tracer installed — counters increment per
+    run/chunk, spans record wherever stage times flow.  ``overhead_frac``
+    is the perf-trend gate's ``obs_overhead`` metric (< 5% = pass); like
+    ``resilience_overhead`` it is self-relative and interleaved
+    best-of-``iters``, so machine drift lands on both sides instead of
+    masquerading as overhead.
+    """
+    from repro.obs import registry as obs_registry
+    from repro.obs import tracing as obs_tracing
+
+    ref, idx = world or _make_world(genome)
+    rs = sample_reads(ref, R, seed=3)
+    chunk = min(chunk_reads or R, R)
+    cfg = MapperConfig(engine="compacted", wf_backend="pallas",
+                       chunk_reads=chunk)
+    mapper = Mapper(idx, cfg)
+    mapper.map(rs.reads)  # compile
+
+    reg = obs_registry.MetricsRegistry()
+    tr = obs_tracing.Tracer()
+    plain_ts, armed_ts = [], []
+    try:
+        for _ in range(iters):
+            obs_tracing.disable_tracing()
+            obs_registry.disable_metrics()
+            t0 = time.perf_counter()
+            mapper.map(rs.reads)
+            plain_ts.append(time.perf_counter() - t0)
+            obs_registry.enable_metrics(reg)
+            obs_tracing.enable_tracing(tracer_=tr)
+            t0 = time.perf_counter()
+            mapper.map(rs.reads)
+            armed_ts.append(time.perf_counter() - t0)
+    finally:
+        obs_tracing.disable_tracing()
+        obs_registry.disable_metrics()
+    plain_dt, armed_dt = min(plain_ts), min(armed_ts)
+
+    return {
+        "R": R, "chunk_reads": chunk,
+        "plain_reads_per_s": round(R / plain_dt, 1),
+        "armed_reads_per_s": round(R / armed_dt, 1),
+        "overhead_frac": round(max(armed_dt - plain_dt, 0.0) / armed_dt, 4),
+        "spans_recorded": len(tr),
+        "counter_series": len(reg.snapshot()["counters"]),
+    }
+
+
 def chunk_sweep(R: int = 4096, genome: int = 30_000,
                 sizes=(512, 1024, 2048), wf_backend: str = "pallas",
                 world=None) -> list[dict]:
@@ -376,8 +444,10 @@ def chunk_sweep(R: int = 4096, genome: int = 30_000,
             key = "stream" if stream else "sync"
             row[f"{key}_reads_per_s"] = round(R / dt, 1)
             row[f"{key}_wall_s"] = round(dt, 4)
-            if not stream:
-                row["stage_times_s"] = res.stats["stage_times_s"]
+            if not stream:  # rounded for display; stats keep full precision
+                row["stage_times_s"] = {
+                    k: round(v, 4)
+                    for k, v in res.stats["stage_times_s"].items()}
         row["stream_speedup"] = round(row["sync_wall_s"]
                                       / row["stream_wall_s"], 2)
         out.append(row)

@@ -29,6 +29,10 @@ STAGE_NOISE_FLOOR_S = 0.005  # sub-5ms stages are runner noise, not signal
 # is self-relative (armed vs plain in the *same* fresh run), so it needs
 # no hardware-variance tolerance on top.
 RESILIENCE_OVERHEAD_MAX = 0.05
+# armed-but-idle observability tax ceiling: a live metrics registry +
+# span tracer may cost at most this fraction of the disarmed streamed
+# engine's reads/s.  Self-relative like the resilience gate.
+OBS_OVERHEAD_MAX = 0.05
 
 
 def emit_pipeline_json(path: str, reads: int, chunk_reads: int | None,
@@ -88,6 +92,17 @@ def emit_pipeline_json(path: str, reads: int, chunk_reads: int | None,
                   f"{ro['armed_reads_per_s']:.1f} vs "
                   f"{ro['plain_reads_per_s']:.1f} plain reads/s "
                   f"({ro['overhead_frac']:.1%} overhead)")
+    oo = bench.get("obs_overhead")
+    if oo:
+        if "error" in oo:
+            print(f"obs_overhead: ERROR {oo['error']}")
+        else:
+            print(f"obs_overhead (armed-but-idle metrics registry + "
+                  f"span tracer): {oo['armed_reads_per_s']:.1f} vs "
+                  f"{oo['plain_reads_per_s']:.1f} plain reads/s "
+                  f"({oo['overhead_frac']:.1%} overhead, "
+                  f"{oo['spans_recorded']} spans, "
+                  f"{oo['counter_series']} counter series)")
     print(f"wrote {path}")
     return bench
 
@@ -186,6 +201,22 @@ def check_regression(fresh: dict, baseline_path: str, tolerance: float,
               f"overhead={of:.1%} "
               f"(ceiling {RESILIENCE_OVERHEAD_MAX:.0%})")
         rc |= of > RESILIENCE_OVERHEAD_MAX
+    oo = fresh.get("obs_overhead")
+    if base.get("obs_overhead") is None:
+        print(f"perf-trend: baseline {baseline_path} lacks "
+              f"obs_overhead; skipping check")
+    elif oo is None or "error" in (oo or {}):
+        why = (oo or {}).get("error", "section missing from fresh run")
+        print(f"perf-trend: FAIL — fresh run has no obs_overhead ({why})")
+        rc |= 1
+    else:
+        of = oo["overhead_frac"]
+        verdict = "OK" if of <= OBS_OVERHEAD_MAX else "FAIL"
+        print(f"perf-trend: {verdict} — obs_overhead "
+              f"armed={oo['armed_reads_per_s']:.1f} "
+              f"plain={oo['plain_reads_per_s']:.1f} reads/s "
+              f"overhead={of:.1%} (ceiling {OBS_OVERHEAD_MAX:.0%})")
+        rc |= of > OBS_OVERHEAD_MAX
     bi = base.get("index_build", {})
     if bi.get("build_bases_per_s") is None:
         print(f"perf-trend: baseline {baseline_path} lacks "

@@ -55,12 +55,15 @@ that forward here and stay bit-identical.
 from __future__ import annotations
 
 import dataclasses
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import registry as _metrics
+from ..obs import tracing as _tracing
 from . import streaming
 from .distributed import (AXIS, ShardedIndex, _cached_mapper, shard_index,
                           stage_b_affine_capacity)
@@ -72,7 +75,8 @@ from .pipeline import (LazyTraceback, MapperConfig, MappingResult,
 TOPOLOGIES = ("single", "mesh")
 
 __all__ = ["Mapper", "MapperStats", "MappingPlan", "TOPOLOGIES",
-           "accumulate_partition_stats", "split_result"]
+           "accumulate_partition_stats", "split_result",
+           "totals_from_registry"]
 
 
 _PER_READ_FIELDS = ("position", "distance", "distance2", "mapped", "strand",
@@ -192,6 +196,43 @@ def accumulate_stats(totals: dict, stats, fields=None) -> dict:
         for k in (fields if fields is not None else tuple(totals)):
             totals[k] = totals.get(k, 0) + getattr(stats, k)
     return totals
+
+
+# MapperStats fields mirrored into the metrics registry per run, and the
+# fields ``totals_from_registry`` re-derives — keep the two in lockstep
+# so registry-sourced closing stats byte-match the legacy accumulation
+_METRIC_RUN_FIELDS = ("reads", "candidates", "survivors",
+                      "affine_instances", "padded_affine_instances",
+                      "dropped_send", "dropped_affine", "reverse_best")
+
+
+def _record_run_metrics(stats: MapperStats) -> None:
+    """Mirror one run's ``MapperStats`` into the active registry (no-op
+    when metrics are disabled).  Summing these counters across runs is
+    exactly ``accumulate_stats`` over the same fields, which is what
+    lets the launchers re-emit their closing stats from the registry."""
+    reg = _metrics.ACTIVE
+    if reg is None:
+        return
+    lab = dict(topology=stats.topology)
+    reg.counter("repro_runs_total", **lab).inc()
+    for f in _METRIC_RUN_FIELDS:
+        v = int(getattr(stats, f))
+        if v:
+            reg.counter(f"repro_{f}_total", **lab).inc(v)
+
+
+def totals_from_registry(topology: str, reg=None) -> dict | None:
+    """The engine-accounting totals dict re-derived from the metrics
+    registry (None when metrics are disabled).  With a clean run this
+    byte-matches the ``accumulate_stats`` path (property-tested); under
+    faults the registry is the truthful one — it counts every engine
+    run including retried and bisected blocks."""
+    reg = reg if reg is not None else _metrics.ACTIVE
+    if reg is None:
+        return None
+    return {f: reg.counter(f"repro_{f}_total", topology=topology).value
+            for f in _METRIC_RUN_FIELDS}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -508,11 +549,18 @@ class Mapper:
         the mesh mapper.  Repeated same-key plans therefore reuse the
         exact compiled programs — a cache hit cannot recompile.
         """
+        reg = _metrics.ACTIVE
         entry = self._plan_cache.get(plan.key)
         if entry is not None:
             self.plan_cache_hits += 1
+            if reg is not None:
+                reg.counter("repro_plan_cache_hits_total",
+                            topology=self.topology).inc()
             return entry
         self.plan_cache_misses += 1
+        if reg is not None:
+            reg.counter("repro_plan_cache_misses_total",
+                        topology=self.topology).inc()
         if plan.topology == "mesh":
             entry = _cached_mapper(self.mesh, self.cfg, plan.n_shards,
                                    plan.send_cap, plan.stage_b_affine_cap)
@@ -661,7 +709,10 @@ class Mapper:
         if cfg.both_strands:
             raw["both_strands"] = True
         if times is not None:
-            raw["stage_times_s"] = {k: round(v, 4) for k, v in times.items()}
+            # full precision: stage times feed a 5 ms-noise-floor CI gate
+            # and the trace-agreement check; rounding happens only at
+            # display/serialization (benchmarks, logs)
+            raw["stage_times_s"] = dict(times)
         if getattr(pipe, "router", None) is not None:
             raw["partitions"] = pipe.router.drain_stats()
 
@@ -689,6 +740,7 @@ class Mapper:
             reverse_best=raw.get("reverse_best", 0),
             plan_cache_hits=self.plan_cache_hits,
             plan_cache_misses=self.plan_cache_misses, extra=raw)
+        _record_run_metrics(stats)
         return MappingResult(position=cat("position"),
                              distance=cat("distance"),
                              distance2=cat("distance2"),
@@ -708,12 +760,23 @@ class Mapper:
                            reads.dtype)
             reads = np.concatenate([reads, pad])
         fn, aff_cap = entry
-        pos, dist, dist2, dropped, n_surv, aff_drop = fn(*self._dev,
-                                                         jnp.asarray(reads))
+        # the mesh path has no chunk pipeline, so its stage accounting is
+        # the two host-visible boundaries: the async dispatch enqueue and
+        # the blocking D2H fetch.  Same ``streaming.timed`` hook as the
+        # single topology: when tracing is armed the spans and the
+        # ``stage_times_s`` values come from identical clock reads.
+        times = ({} if (self.cfg.profile or _tracing.ACTIVE is not None)
+                 else None)
+        t0 = time.perf_counter()
+        with _tracing.annotate("mesh_dispatch"):
+            pos, dist, dist2, dropped, n_surv, aff_drop = fn(
+                *self._dev, jnp.asarray(reads))
+        t0 = streaming.timed(times, "dispatch", t0)
         pos = np.asarray(pos)[:n]
         dist = np.asarray(dist)[:n]
         dist2 = np.asarray(dist2)[:n]
         dropped = np.asarray(dropped)
+        streaming.timed(times, "d2h", t0)
         S = plan.n_shards
         surv = int(np.asarray(n_surv).sum())
         n_aff_drop = int(np.asarray(aff_drop).sum())
@@ -728,6 +791,8 @@ class Mapper:
                    send_dropped_per_shard=dropped,
                    stage_b_survivors_per_shard=np.asarray(n_surv),
                    padded_reads=plan.padded_reads)
+        if times is not None:
+            raw["stage_times_s"] = dict(times)
         if self.part_index is not None:
             # partition i IS shard i: the on-disk partitioning routed the
             # mesh, so per-shard counters are per-partition counters
@@ -743,5 +808,6 @@ class Mapper:
             dropped_send=int(dropped.sum()), dropped_affine=n_aff_drop,
             plan_cache_hits=self.plan_cache_hits,
             plan_cache_misses=self.plan_cache_misses, extra=raw)
+        _record_run_metrics(stats)
         return MappingResult(position=pos, distance=dist, distance2=dist2,
                              mapped=pos >= 0, stats=stats)

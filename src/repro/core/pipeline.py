@@ -59,6 +59,7 @@ import numpy as np
 from . import affine_wf
 from . import streaming
 from . import wf_backend as wfb
+from ..obs.tracing import annotate as _annotate
 from .compaction import bucket_capacity, compact_indices, scatter_to
 from .encoding import revcomp
 from .filtering import collapse_candidates, gather_windows, linear_wf_filter
@@ -664,8 +665,9 @@ class _ChunkPipeline:
         if times is not None:
             reads.block_until_ready()
         t0 = streaming.timed(times, "h2d", t0)
-        seeds = seed_reads(self.dev[0], self.dev[1], reads,
-                           self.cfg.seed_params)
+        with _annotate("seed_dispatch"):
+            seeds = seed_reads(self.dev[0], self.dev[1], reads,
+                               self.cfg.seed_params)
         if times is not None:
             jax.block_until_ready(seeds)
         streaming.timed(times, "seed", t0)
@@ -712,9 +714,10 @@ class _ChunkPipeline:
         if cfg.engine == "fused":
             n_valid_real = self._real_count(occ_valid, n_valid, n_real, R)
             aff_cap = fused_affine_capacity(n_valid, R, cfg)
-            out = _fused_stage(segments, positions, reads, occ_idx,
-                               occ_valid, mini_pos, jnp.int32(n_real), cfg,
-                               lin_cap, aff_cap)
+            with _annotate("fused_dispatch"):
+                out = _fused_stage(segments, positions, reads, occ_idx,
+                                   occ_valid, mini_pos, jnp.int32(n_real),
+                                   cfg, lin_cap, aff_cap)
             if times is not None:
                 out["position"].block_until_ready()
             streaming.timed(times, "fused", t0)
@@ -734,8 +737,9 @@ class _ChunkPipeline:
             return out, stats, n_real
 
         n_valid_real = self._real_count(occ_valid, n_valid, n_real, R)
-        lin_end, best_pl, pass_filter, n_cand = self.lin_jit(
-            segments, reads, occ_idx, occ_valid, mini_pos, cfg, lin_cap)
+        with _annotate("linear_dispatch"):
+            lin_end, best_pl, pass_filter, n_cand = self.lin_jit(
+                segments, reads, occ_idx, occ_valid, mini_pos, cfg, lin_cap)
         if times is not None:
             pass_filter.block_until_ready()
         t0 = streaming.timed(times, "linear", t0)
@@ -744,10 +748,11 @@ class _ChunkPipeline:
         n_surv_real = self._real_count(pass_filter, n_surv, n_real, R)
         aff_cap = bucket_capacity(n_surv, align=cfg.aff_block_r,
                                   cap_max=R * M)
-        (best_aff, mapped, position, best_m, distance2, occ_w,
-         mpos_w) = self.aff_jit(segments, positions, reads, occ_idx,
-                                mini_pos, best_pl, pass_filter, lin_end,
-                                cfg, aff_cap)
+        with _annotate("affine_dispatch"):
+            (best_aff, mapped, position, best_m, distance2, occ_w,
+             mpos_w) = self.aff_jit(segments, positions, reads, occ_idx,
+                                    mini_pos, best_pl, pass_filter, lin_end,
+                                    cfg, aff_cap)
         reads_w, strand, reverse_best = reads, None, None
         if cfg.both_strands:
             fold = _strand_stage(best_aff, mapped, position, distance2,
@@ -771,8 +776,9 @@ class _ChunkPipeline:
             out["strand"] = strand
         tb_mark = position
         if cfg.cigar_mode == "eager":
-            out["ops"], out["op_count"] = _traceback_stage(
-                segments, reads_w, occ_w, mpos_w, mapped, cfg)
+            with _annotate("traceback_dispatch"):
+                out["ops"], out["op_count"] = _traceback_stage(
+                    segments, reads_w, occ_w, mpos_w, mapped, cfg)
             tb_mark = out["ops"]
             if times is not None:
                 tb_mark.block_until_ready()

@@ -49,6 +49,7 @@ import zlib
 
 import numpy as np
 
+from ..obs import registry as _metrics
 from . import affine_wf
 from .mapper import _PER_READ_FIELDS, Mapper, MapperStats
 from .pipeline import LazyTraceback, MapperConfig, MappingResult
@@ -58,6 +59,14 @@ from .streaming import FetchStallError  # noqa: F401  (re-export: the
 __all__ = ["MappingError", "RetryPolicy", "AdmissionConfig",
            "DegradeLadder", "FaultInjector", "ResilientMapper",
            "InjectedFault", "ShedError", "FetchStallError"]
+
+
+def _obs_inc(name: str, n=1) -> None:
+    """Bump a resilience counter in the active metrics registry (no-op
+    when metrics are disabled)."""
+    reg = _metrics.ACTIVE
+    if reg is not None:
+        reg.counter(name).inc(n)
 
 
 class InjectedFault(RuntimeError):
@@ -560,15 +569,18 @@ class ResilientMapper:
                 if attempts < pol.max_attempts:
                     counters["retries"] += 1
                     self.counters["retries"] += 1
+                    _obs_inc("repro_retries_total")
                     if pol.backoff_s > 0:
                         time.sleep(pol.backoff_s
                                    * pol.backoff_mult ** (attempts - 1))
         if self.ladder.fail():
             counters["degraded_steps"] += 1
             self.counters["degraded_steps"] += 1
+            _obs_inc("repro_degradations_total")
         if n > max(pol.bisect_min, 1):
             # quarantine by bisection: each half retries independently,
             # so the poisoned half shrinks while the healthy half maps
+            _obs_inc("repro_bisections_total")
             mid = n // 2
             left, _ = self.map_segments(reads[:mid], base=base,
                                         counters=counters)
@@ -579,6 +591,8 @@ class ResilientMapper:
         counters["failed_blocks"] += 1
         self.counters["failed_reads"] += n
         self.counters["failed_blocks"] += 1
+        _obs_inc("repro_quarantined_reads_total", n)
+        _obs_inc("repro_failed_blocks_total")
         msg = f"{type(last_exc).__name__}: {last_exc}"
         return [(n, BlockFailure(message=msg, attempts=attempts))], counters
 

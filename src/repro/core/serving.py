@@ -41,6 +41,7 @@ import time
 
 import numpy as np
 
+from ..obs import registry as _metrics
 from .compaction import bucket_capacity
 from .mapper import (_PER_READ_FIELDS, Mapper, MapperStats,
                      accumulate_partition_stats, accumulate_stats,
@@ -82,6 +83,12 @@ class ReadBatcher:
     ``submit`` enqueues a request and returns its id; ``drain`` hands back
     everything pending as one concatenated read block plus the bucket
     cover and per-request spans, and resets the queue.
+
+    ``stats`` is safe for long-lived serving: the counters are scalars and
+    ``bucket_hist`` is keyed by bucket size — a power of two in
+    ``[bucket_min, bucket_max]`` — so it holds at most
+    ``log2(bucket_max / bucket_min) + 1`` entries no matter how many
+    requests pass through.
 
     Malformed submissions raise ``ValueError`` (not ``assert`` — service
     callers need recoverable errors, and asserts vanish under
@@ -149,6 +156,11 @@ _TOTAL_FIELDS = ("reads", "candidates", "survivors", "affine_instances",
 _SERVICE_FIELDS = ("shed_requests", "deadline_misses", "retries",
                    "failed_reads", "failed_requests")
 
+# distinct tenant label values tracked per service; extra tenants share a
+# single "_other" bucket so the depth gauges (and the registry label sets
+# behind them) stay bounded under long-lived serving
+_MAX_TENANTS = 64
+
 
 class MappingService:
     """Mapping service: request batcher + a ``Mapper`` session.
@@ -209,6 +221,13 @@ class MappingService:
         self._paired: set[int] = set()
         self._deadlines: dict[int, float] = {}
         self._ready: dict[int, object] = {}
+        # per-request observability state, drained with the request: both
+        # dicts are keyed by pending rids only, so they are bounded by the
+        # admission queue, and the tenant label space is capped at
+        # _MAX_TENANTS (+ "_other")
+        self._submit_ts: dict[int, float] = {}
+        self._tenants: dict[int, str] = {}
+        self._tenant_pending: dict[str, int] = {}
 
     # ----------------------------------------------------------- admission
 
@@ -221,6 +240,9 @@ class MappingService:
             return  # fits, or single oversize request against empty queue
         if self.admission.policy == "shed":
             self.totals["shed_requests"] += 1
+            reg = _metrics.ACTIVE
+            if reg is not None:
+                reg.counter("repro_shed_requests_total").inc()
             raise ShedError(
                 f"pending queue full ({pending} + {n_reads} > {lim} "
                 f"reads); resubmit after a flush")
@@ -242,13 +264,17 @@ class MappingService:
     # ---------------------------------------------------------- submission
 
     def submit(self, reads: np.ndarray, *,
-               deadline_s: float | None = None) -> int:
+               deadline_s: float | None = None,
+               tenant: str | None = None) -> int:
         reads = np.asarray(reads)
         self._admit(len(reads))
-        return self._arm_deadline(self.batcher.submit(reads), deadline_s)
+        rid = self._arm_deadline(self.batcher.submit(reads), deadline_s)
+        self._track_submit(rid, tenant)
+        return rid
 
     def submit_paired(self, reads1: np.ndarray, reads2: np.ndarray, *,
-                      deadline_s: float | None = None) -> int:
+                      deadline_s: float | None = None,
+                      tenant: str | None = None) -> int:
         """Queue a paired-end request: mates ride the bucket pipeline as
         one stacked block (R1 rows then R2 rows), and ``flush`` hands the
         request back as a ``(res1, res2)`` per-mate tuple instead of one
@@ -261,7 +287,53 @@ class MappingService:
         self._admit(2 * len(reads1))
         rid = self.batcher.submit(np.concatenate([reads1, reads2]))
         self._paired.add(rid)
-        return self._arm_deadline(rid, deadline_s)
+        rid = self._arm_deadline(rid, deadline_s)
+        self._track_submit(rid, tenant)
+        return rid
+
+    # ------------------------------------------------- per-request tracking
+
+    def _tenant_key(self, tenant: str | None) -> str:
+        t = tenant if tenant is not None else "default"
+        if t in self._tenant_pending or len(self._tenant_pending) \
+                < _MAX_TENANTS:
+            return t
+        return "_other"
+
+    def _track_submit(self, rid: int, tenant: str | None) -> None:
+        self._submit_ts[rid] = time.perf_counter()
+        t = self._tenant_key(tenant)
+        self._tenants[rid] = t
+        depth = self._tenant_pending.get(t, 0) + 1
+        self._tenant_pending[t] = depth
+        reg = _metrics.ACTIVE
+        if reg is not None:
+            reg.counter("repro_requests_total", tenant=t).inc()
+            reg.gauge("repro_tenant_queue_depth", tenant=t).set(depth)
+
+    def _drain_tracking(self, spans) -> None:
+        """Close out per-request tracking for every drained rid: observe
+        queue-wait latency and decrement the owning tenant's depth."""
+        now = time.perf_counter()
+        reg = _metrics.ACTIVE
+        for rid in spans:
+            ts = self._submit_ts.pop(rid, None)
+            if ts is not None and reg is not None:
+                reg.histogram(
+                    "repro_request_queue_wait_seconds").observe(now - ts)
+            t = self._tenants.pop(rid, None)
+            if t is not None:
+                depth = max(self._tenant_pending.get(t, 1) - 1, 0)
+                self._tenant_pending[t] = depth
+                if reg is not None:
+                    reg.gauge("repro_tenant_queue_depth",
+                              tenant=t).set(depth)
+
+    @property
+    def tenant_queue_depth(self) -> dict[str, int]:
+        """Pending request count per tenant label (bounded at
+        ``_MAX_TENANTS`` distinct tenants plus ``"_other"``)."""
+        return {t: d for t, d in self._tenant_pending.items() if d}
 
     def _accumulate(self, stats) -> None:
         accumulate_stats(self.totals, stats, fields=_TOTAL_FIELDS)
@@ -280,8 +352,19 @@ class MappingService:
         in the mapping path turns into per-request ``MappingError``
         values, never a raise that would strand drained ids.
         """
+        t0 = time.perf_counter()
+        try:
+            return self._flush()
+        finally:
+            reg = _metrics.ACTIVE
+            if reg is not None:
+                reg.histogram("repro_flush_seconds").observe(
+                    time.perf_counter() - t0)
+
+    def _flush(self) -> dict[int, object]:
         out, self._ready = self._ready, {}
         reads, buckets, spans = self.batcher.drain()
+        self._drain_tracking(spans)
         if not buckets:
             return out
         paired = {rid for rid in spans if rid in self._paired}
@@ -294,6 +377,9 @@ class MappingService:
             dl = self._deadlines.pop(rid, None)
             if dl is not None and now > dl:
                 self.totals["deadline_misses"] += 1
+                reg = _metrics.ACTIVE
+                if reg is not None:
+                    reg.counter("repro_deadline_misses_total").inc()
                 out[rid] = MappingError(
                     "deadline", f"request {rid} missed its deadline by "
                     f"{now - dl:.3f}s before mapping", n_reads=hi_ - lo)
@@ -331,6 +417,9 @@ class MappingService:
             for rid, (lo, hi_) in spans.items():
                 if rid not in out:
                     self.totals["failed_requests"] += 1
+                    reg = _metrics.ACTIVE
+                    if reg is not None:
+                        reg.counter("repro_failed_requests_total").inc()
                     out[rid] = MappingError(
                         "internal", f"{type(e).__name__}: {e}",
                         n_reads=hi_ - lo)
@@ -341,13 +430,24 @@ class MappingService:
         ``(segments, counters)`` covering ``reads`` in order."""
         counters = None
         segments = []
+
+        def timed_map(*a, **kw):
+            t0 = time.perf_counter()
+            try:
+                return self.resilient.map_segments(*a, **kw)
+            finally:
+                reg = _metrics.ACTIVE
+                if reg is not None:
+                    reg.histogram("repro_bucket_execute_seconds").observe(
+                        time.perf_counter() - t0)
+
         if self.mapper.topology == "mesh":
             # every bucket is one distributed batch; same-size buckets
             # share a plan key -> the compiled shard_map program
             off = 0
             for b in buckets:
                 block = reads[off : off + b]  # last block may be short
-                seg, counters = self.resilient.map_segments(
+                seg, counters = timed_map(
                     block, plan_n=b, base=off, counters=counters)
                 segments += seg
                 off += b
@@ -355,12 +455,12 @@ class MappingService:
             hi = self.batcher.cfg.bucket_max
             n_full = sum(1 for b in buckets if b == hi)
             if n_full:  # full buckets: one streamed multi-chunk plan
-                seg, counters = self.resilient.map_segments(
+                seg, counters = timed_map(
                     reads[: n_full * hi], chunk=hi, counters=counters)
                 segments += seg
             rest = reads[n_full * hi :]
             if len(rest):  # residue: its own pow-2 chunk shape
-                seg, counters = self.resilient.map_segments(
+                seg, counters = timed_map(
                     rest, chunk=buckets[-1], base=n_full * hi,
                     counters=counters)
                 segments += seg
@@ -371,6 +471,9 @@ class MappingService:
         n = hi_ - lo
         if res is None or mask[lo:hi_].all():
             self.totals["failed_requests"] += 1
+            reg = _metrics.ACTIVE
+            if reg is not None:
+                reg.counter("repro_failed_requests_total").inc()
             return MappingError("execution",
                                 "all reads in this request were "
                                 "quarantined after retries", n_reads=n)

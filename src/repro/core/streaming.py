@@ -39,6 +39,9 @@ from concurrent.futures import TimeoutError as FutureTimeoutError
 
 import jax
 
+from ..obs import registry as _metrics
+from ..obs import tracing as _tracing
+
 __all__ = ["stream_map", "sync_map", "donatable_argnums", "timed",
            "FetchStallError"]
 
@@ -76,10 +79,22 @@ def timed(times: dict | None, key: str, t0: float) -> float:
     No-op (beyond the clock read) when ``times`` is None, so the phase
     functions can share one code path between the streamed and the
     synchronous engines.
+
+    This is also the observability layer's stage hook: when the
+    ``repro.obs`` tracer/registry are armed, the *same two clock reads*
+    emit a span (with the calling thread's chunk context) and accrue the
+    per-stage seconds counter — so the exported trace, the metrics
+    snapshots and ``stage_times_s`` can never disagree on a duration.
     """
     t1 = time.perf_counter()
     if times is not None:
         times[key] = times.get(key, 0.0) + (t1 - t0)
+        tr = _tracing.ACTIVE
+        if tr is not None:
+            tr.add(key, t0, t1)
+        reg = _metrics.ACTIVE
+        if reg is not None:
+            reg.counter("repro_stage_seconds_total", stage=key).inc(t1 - t0)
     return t1
 
 
@@ -127,10 +142,26 @@ def stream_map(items: list, phase1, phase2, fetch,
             injector.check("fetch_error")
             return fetch(outs, times_)
 
+    # chunk attribution for span tracing: each phase call stamps the
+    # in-flight chunk index on whichever thread runs it, so overlapping
+    # chunks untangle in the exported trace
+    tracing_on = _tracing.ACTIVE is not None
+
+    def fetch_job(i, outs):
+        if tracing_on:
+            _tracing.set_ctx(chunk=i)
+        return run_fetch(outs, times)
+
+    reg = _metrics.ACTIVE
+    if reg is not None:
+        reg.counter("repro_chunks_total", mode="stream").inc(n)
+
     futs = [None] * n
     pool = ThreadPoolExecutor(max_workers=1,
                               thread_name_prefix="stream-fetch")
     try:
+        if tracing_on:
+            _tracing.set_ctx(chunk=0)
         state = phase1(items[0])
         for i in range(n):
             # prompt propagation: if an already-completed fetch failed,
@@ -138,9 +169,13 @@ def stream_map(items: list, phase1, phase2, fetch,
             for f in futs[:i]:
                 if f is not None and f.done():
                     f.result()
+            if tracing_on:
+                _tracing.set_ctx(chunk=i + 1)
             nxt = phase1(items[i + 1]) if i + 1 < n else None
+            if tracing_on:
+                _tracing.set_ctx(chunk=i)
             outs = phase2(state)
-            futs[i] = pool.submit(run_fetch, outs, times)
+            futs[i] = pool.submit(fetch_job, i, outs)
             state = nxt
         out = []
         for i, f in enumerate(futs):
@@ -171,8 +206,14 @@ def sync_map(items: list, phase1, phase2, fetch,
     per-stage wall seconds into it (host_prep / h2d / seed / linear /
     affine / traceback / d2h).
     """
+    reg = _metrics.ACTIVE
+    if reg is not None:
+        reg.counter("repro_chunks_total", mode="sync").inc(len(items))
+    tracing_on = _tracing.ACTIVE is not None
     out = []
-    for item in items:
+    for i, item in enumerate(items):
+        if tracing_on:
+            _tracing.set_ctx(chunk=i)
         out.append(fetch(phase2(phase1(item, times=times), times=times),
                          times=times))
     return out

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import streaming
+from ..obs import registry as _metrics
 from ..core.pipeline import MapperConfig, _ChunkPipeline
 from ..core.seeding import seed_reads_routed
 
@@ -93,12 +94,23 @@ class DeviceResidency:
     def ensure(self, parts: list) -> dict:
         """Make ``parts`` resident; returns ``{p: arena_base_row}``."""
         pinned = set(parts)
+        hits = misses = 0
         for p in parts:
             if p in self._alloc:
                 self._lru.move_to_end(p)
+                hits += 1
         for p in parts:
             if p not in self._alloc:
+                misses += 1
                 self._load(p, pinned)
+        reg = _metrics.ACTIVE
+        if reg is not None:
+            if hits:
+                reg.counter("repro_partition_hits_total").inc(hits)
+            if misses:
+                reg.counter("repro_partition_misses_total").inc(misses)
+            reg.gauge("repro_partition_resident_rows").set(
+                self.resident_rows)
         # Bases must come from the allocation table only after every
         # load: a late ``_load`` may ``_compact`` and relocate
         # partitions that were already resident when ensure() started.
@@ -134,12 +146,18 @@ class DeviceResidency:
         del self._alloc[victim]
         del self._lru[victim]
         self.evictions += 1
+        reg = _metrics.ACTIVE
+        if reg is not None:
+            reg.counter("repro_partition_evictions_total").inc()
 
     def _compact(self) -> None:
         """Repack resident partitions to the arena front (functional
         slice moves; sorted ascending, so every move is leftward into
         space already vacated)."""
         self.compactions += 1
+        reg = _metrics.ACTIVE
+        if reg is not None:
+            reg.counter("repro_partition_compactions_total").inc()
         cursor = 0
         for p, (lo, rows) in sorted(self._alloc.items(),
                                     key=lambda kv: kv[1][0]):
@@ -173,6 +191,11 @@ class DeviceResidency:
         self._lru.move_to_end(p)
         self.loads += 1
         self.h2d_bytes += rows * self.row_bytes
+        reg = _metrics.ACTIVE
+        if reg is not None:
+            reg.counter("repro_partition_loads_total").inc()
+            reg.counter("repro_partition_h2d_bytes_total").inc(
+                rows * self.row_bytes)
         return lo
 
     # ------------------------------------------------------------- stats

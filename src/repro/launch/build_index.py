@@ -22,25 +22,58 @@ import time
 
 def run(args) -> int:
     from repro.index import build_sharded_index, verify_index
+    from repro.launch.map_fastq import _metrics_snapshot
+    from repro.obs import logjson
+    from repro.obs import registry as _metrics
+    from repro.obs import tracing as _tracing
 
-    t0 = time.perf_counter()
-    say = (lambda msg: print(f"build_index: {msg}", file=sys.stderr))
-    idx = build_sharded_index(
-        args.reference, args.output, num_partitions=args.partitions,
-        tile_bp=args.tile_bp, read_len=args.read_len, k=args.k, w=args.w,
-        eth=args.eth, max_pls_per_minimizer=args.max_pls,
-        overwrite=args.force, progress=say)
-    if args.verify:
-        verify_index(args.output)
-        say("full integrity check passed")
-    stor = idx.storage_bytes()
-    dt = time.perf_counter() - t0
-    print(f"build_index: {args.output}: {idx.num_partitions} partitions, "
-          f"{len(idx.contigs)} contig(s), {idx.ref_len} bases, "
-          f"{idx.n_occurrences} occurrences, {stor['total_bytes']} B "
-          f"on disk ({stor['blowup']:.1f}x segment blowup) in {dt:.1f}s",
-          file=sys.stderr)
-    return 0
+    trace_out = getattr(args, "trace_out", None)
+    metrics_out = getattr(args, "metrics_out", None)
+    log_on = getattr(args, "log_json", False) and not logjson.enabled()
+    metrics_on = metrics_out is not None and _metrics.ACTIVE is None
+    tracing_on = trace_out is not None and _tracing.ACTIVE is None
+    if log_on:
+        logjson.enable("build_index")
+    if metrics_on:
+        _metrics.enable_metrics()
+    if tracing_on:
+        _tracing.enable_tracing()
+    try:
+        t0 = time.perf_counter()
+        say = (lambda msg: logjson.say(f"build_index: {msg}",
+                                       event="progress"))
+        idx = build_sharded_index(
+            args.reference, args.output, num_partitions=args.partitions,
+            tile_bp=args.tile_bp, read_len=args.read_len, k=args.k,
+            w=args.w, eth=args.eth, max_pls_per_minimizer=args.max_pls,
+            overwrite=args.force, progress=say)
+        if args.verify:
+            verify_index(args.output)
+            say("full integrity check passed")
+        stor = idx.storage_bytes()
+        dt = time.perf_counter() - t0
+        logjson.say(
+            f"build_index: {args.output}: {idx.num_partitions} "
+            f"partitions, {len(idx.contigs)} contig(s), {idx.ref_len} "
+            f"bases, {idx.n_occurrences} occurrences, "
+            f"{stor['total_bytes']} B on disk ({stor['blowup']:.1f}x "
+            f"segment blowup) in {dt:.1f}s",
+            event="done", partitions=idx.num_partitions,
+            ref_len=idx.ref_len, occurrences=idx.n_occurrences,
+            bytes_on_disk=stor["total_bytes"], wall_s=round(dt, 3))
+        return 0
+    finally:
+        if metrics_out is not None and _metrics.ACTIVE is not None:
+            open(metrics_out, "w").close()
+            _metrics_snapshot(metrics_out, seq=0)
+        if trace_out is not None and _tracing.ACTIVE is not None:
+            _tracing.ACTIVE.export(trace_out)
+        if tracing_on:
+            _tracing.disable_tracing()
+        if metrics_on:
+            _metrics.disable_metrics()
+        if log_on:
+            logjson.disable()
 
 
 def main():
@@ -69,6 +102,15 @@ def main():
     ap.add_argument("--verify", action="store_true",
                     help="re-read and digest-check every file after the "
                          "build")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export the build as Chrome trace-event JSON "
+                         "(scan + per-partition finalize spans)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a final JSONL metrics snapshot (schema: "
+                         "schemas/metrics_snapshot.schema.json)")
+    ap.add_argument("--log-json", action="store_true",
+                    help="structured one-object-per-line JSON progress "
+                         "on stderr")
     return run(ap.parse_args())
 
 

@@ -30,6 +30,8 @@ pipes clean SAM to stdout.
 from __future__ import annotations
 
 import argparse
+import contextlib
+import json
 import os
 import sys
 import time
@@ -63,10 +65,91 @@ def _open_stream(args, injector=None):
     return FastqStream(args.reads, **kw), False
 
 
+def _ingest(stream):
+    """Enumerate FASTQ chunks, stamping the span context with the chunk
+    index and recording each chunk's host-side parse as an ``ingest``
+    span when tracing is armed."""
+    from repro.obs import tracing as _tracing
+    it = iter(stream)
+    i = 0
+    while True:
+        if _tracing.ACTIVE is not None:
+            _tracing.set_ctx(chunk=i)
+        t0 = time.perf_counter()
+        try:
+            chunk = next(it)
+        except StopIteration:
+            return
+        tr = _tracing.ACTIVE
+        if tr is not None:
+            tr.add("ingest", t0, time.perf_counter())
+        yield i, chunk
+        i += 1
+
+
+def _span(name):
+    from repro.obs import tracing as _tracing
+    tr = _tracing.ACTIVE
+    return tr.span(name) if tr is not None else contextlib.nullcontext()
+
+
+def _metrics_snapshot(path, seq: int) -> None:
+    """Append one registry snapshot line to the ``--metrics-out`` JSONL
+    (schema: ``schemas/metrics_snapshot.schema.json``)."""
+    from repro.obs import registry as _metrics
+    reg = _metrics.ACTIVE
+    if path is None or reg is None:
+        return
+    rec = dict(kind="metrics_snapshot", seq=seq, ts_unix_s=time.time())
+    rec.update(reg.snapshot())
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
 def run(args) -> int:
+    """Entry point: arms the ``--log-json``/``--metrics-out``/
+    ``--trace-out`` surfaces around the mapping run and always tears
+    them down — the trace is exported even when the run fails, so a
+    crash still leaves an inspectable timeline."""
+    from repro.obs import logjson
+    from repro.obs import registry as _metrics
+    from repro.obs import tracing as _tracing
+
+    trace_out = getattr(args, "trace_out", None)
+    metrics_out = getattr(args, "metrics_out", None)
+    log_on = getattr(args, "log_json", False) and not logjson.enabled()
+    metrics_on = metrics_out is not None and _metrics.ACTIVE is None
+    tracing_on = trace_out is not None and _tracing.ACTIVE is None
+    if log_on:
+        logjson.enable("map_fastq")
+    if metrics_on:
+        _metrics.enable_metrics()
+    if tracing_on:
+        _tracing.enable_tracing()
+    # the closing stats are re-derived from the registry only when this
+    # run owns a fresh one (counters from an inherited registry would
+    # include earlier runs)
+    args.obs_fresh_registry = metrics_on
+    if metrics_out is not None:
+        open(metrics_out, "w").close()   # truncate; snapshots append
+    try:
+        return _run(args)
+    finally:
+        if trace_out is not None and _tracing.ACTIVE is not None:
+            _tracing.ACTIVE.export(trace_out)
+        if tracing_on:
+            _tracing.disable_tracing()
+        if metrics_on:
+            _metrics.disable_metrics()
+        if log_on:
+            logjson.disable()
+
+
+def _run(args) -> int:
     from repro.core.index import build_index
     from repro.core.mapper import (Mapper, accumulate_partition_stats,
-                                   accumulate_stats)
+                                   accumulate_stats, totals_from_registry)
+    from repro.obs import logjson
     from repro.core.pairing import InsertSizeTracker, resolve_pairs
     from repro.core.pipeline import MapperConfig
     from repro.core.resilience import FaultInjector, ResilientMapper
@@ -122,7 +205,11 @@ def run(args) -> int:
     cfg = MapperConfig.from_index(
         idx, engine=args.engine, wf_backend=args.wf_backend,
         chunk_reads=args.chunk_reads, stream=not args.no_stream,
-        both_strands=not args.single_strand)
+        both_strands=not args.single_strand,
+        # --trace-out needs per-stage times on the streamed path: spans
+        # are emitted from the same perf_counter reads that build
+        # stage_times_s, so the trace and the stats agree by construction
+        profile=getattr(args, "trace_out", None) is not None)
     budget = (int(args.index_budget_mb * (1 << 20))
               if args.index_budget_mb is not None else None)
     mapper = Mapper(idx, cfg, topology=args.topology, n_shards=args.shards,
@@ -136,11 +223,14 @@ def run(args) -> int:
                  else None)
     src = (f"index {args.index_dir} ({sharded.num_partitions} partitions)"
            if sharded is not None else "in-memory index")
-    print(f"map_fastq: {len(contigs)} contig(s), {n_indexed} indexed bases "
-          f"({src}), read_len={rl}, topology={mapper.topology}, "
-          f"paired={paired}, both_strands={cfg.both_strands}, "
-          f"engine={cfg.engine}, wf_backend={cfg.wf_backend}",
-          file=sys.stderr)
+    logjson.say(
+        f"map_fastq: {len(contigs)} contig(s), {n_indexed} indexed bases "
+        f"({src}), read_len={rl}, topology={mapper.topology}, "
+        f"paired={paired}, both_strands={cfg.both_strands}, "
+        f"engine={cfg.engine}, wf_backend={cfg.wf_backend}",
+        event="start", contigs=len(contigs), indexed_bases=n_indexed,
+        read_len=rl, topology=mapper.topology, paired=paired,
+        engine=cfg.engine, wf_backend=cfg.wf_backend)
 
     # resume-safe atomic output: SAM accumulates in a .partial segment
     # and lands on the final path in one os.replace only after a clean
@@ -160,7 +250,9 @@ def run(args) -> int:
                                command_line=" ".join(sys.argv)):
             out.write(line + "\n")
         t_map = time.perf_counter()
-        for i, chunk in enumerate(stream):
+        n_chunks = 0
+        for i, chunk in _ingest(stream):
+            n_chunks = i + 1
             if paired:
                 c1, c2 = chunk
                 if resilient is not None:
@@ -177,10 +269,11 @@ def run(args) -> int:
                                    ref=ref, reads1=c1.reads,
                                    reads2=c2.reads,
                                    contig_starts=contig_starts)
-                for rec in emit_paired_alignments(
-                        pr, c1.names, c1.reads, c1.quals, c2.reads,
-                        c2.quals, refmap, seqs1=c1.seqs, seqs2=c2.seqs):
-                    out.write(rec + "\n")
+                with _span("sam_emit"):
+                    for rec in emit_paired_alignments(
+                            pr, c1.names, c1.reads, c1.quals, c2.reads,
+                            c2.quals, refmap, seqs1=c1.seqs, seqs2=c2.seqs):
+                        out.write(rec + "\n")
                 n_new = 2 * len(c1)
                 n_mapped = int(pr.res1.mapped.sum() + pr.res2.mapped.sum())
                 res = res1  # stats object is shared by both halves
@@ -205,10 +298,11 @@ def run(args) -> int:
                         continue
                 else:
                     res = mapper.map(chunk.reads)
-                for rec in emit_alignments(res, chunk.names, chunk.reads,
-                                           chunk.quals, refmap,
-                                           seqs=chunk.seqs):
-                    out.write(rec + "\n")
+                with _span("sam_emit"):
+                    for rec in emit_alignments(res, chunk.names,
+                                               chunk.reads, chunk.quals,
+                                               refmap, seqs=chunk.seqs):
+                        out.write(rec + "\n")
                 n_new = len(chunk)
                 n_mapped = int(res.mapped.sum())
                 if res.strand is not None:  # from the result, not stats:
@@ -226,12 +320,16 @@ def run(args) -> int:
                     "dropped_affine"))
                 accumulate_partition_stats(totals, res.stats)
             out.flush()  # each chunk's records land in the .partial segment
+            _metrics_snapshot(getattr(args, "metrics_out", None), seq=i)
             rate = totals["reads"] / max(time.perf_counter() - t_map, 1e-9)
-            print(f"chunk {i}: {n_new} reads, "
-                  f"mapped {n_mapped / max(n_new, 1):.3f} "
-                  f"(cumulative {totals['reads']} reads, {rate:.0f} reads/s)"
-                  f"{extra}",
-                  file=sys.stderr)
+            logjson.say(
+                f"chunk {i}: {n_new} reads, "
+                f"mapped {n_mapped / max(n_new, 1):.3f} "
+                f"(cumulative {totals['reads']} reads, {rate:.0f} reads/s)"
+                f"{extra}",
+                event="chunk", chunk=i, reads=n_new, mapped=n_mapped,
+                cumulative_reads=totals["reads"],
+                reads_per_s=round(rate, 1))
         complete = True
     except BaseException:
         complete = False
@@ -250,11 +348,13 @@ def run(args) -> int:
     skipped = (f", skipped {stream.n_skipped} short" if stream.n_skipped
                else "") + (f", truncated {stream.n_truncated} long"
                            if stream.n_truncated else "")
-    print(f"done: {totals['reads']} reads in {dt:.1f}s "
-          f"({totals['reads']/max(dt, 1e-9):.0f} reads/s incl. index build), "
-          f"mapped {totals['mapped']} "
-          f"({totals['reverse_best']} reverse-strand){skipped}",
-          file=sys.stderr)
+    logjson.say(
+        f"done: {totals['reads']} reads in {dt:.1f}s "
+        f"({totals['reads']/max(dt, 1e-9):.0f} reads/s incl. index build), "
+        f"mapped {totals['mapped']} "
+        f"({totals['reverse_best']} reverse-strand){skipped}",
+        event="done", reads=totals["reads"], mapped=totals["mapped"],
+        wall_s=round(dt, 3))
     if stream.n_rejected:
         reasons = dict(getattr(stream, "reject_reasons", {}))
         subs = {id(s): s for s in (getattr(stream, "_s1", None),
@@ -279,11 +379,22 @@ def run(args) -> int:
               f"{totals['rescued']} rescued, insert median "
               f"{tracker.median} window [{lo}, {hi}]", file=sys.stderr)
     if saw_stats:
+        if getattr(args, "obs_fresh_registry", False):
+            # re-derive the engine counters from the metrics registry so
+            # the closing lines and the exported snapshots can never
+            # disagree (the registry counts every engine run)
+            derived = totals_from_registry(mapper.topology)
+            if derived is not None:
+                for k in ("survivors", "affine_instances",
+                          "padded_affine_instances", "dropped_send",
+                          "dropped_affine"):
+                    totals[k] = derived[k]
         from repro.launch.serve import _print_mapper_stats
         _print_mapper_stats(mapper, totals, file=sys.stderr)
     else:  # padded reference engine: no instance accounting to report
         print(f"plan cache: {mapper.plan_cache_hits} hits / "
               f"{mapper.plan_cache_misses} misses", file=sys.stderr)
+    _metrics_snapshot(getattr(args, "metrics_out", None), seq=n_chunks)
     return 0
 
 
@@ -355,6 +466,18 @@ def main():
                     help="streaming fetch watchdog seconds: a stalled "
                          "chunk fetch fails (and is retried/quarantined) "
                          "instead of hanging the run")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export the run as Chrome trace-event JSON "
+                         "(loadable in Perfetto / chrome://tracing); "
+                         "implies per-stage profiling, so the span "
+                         "durations equal stage_times_s")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write JSONL metrics snapshots (one per chunk "
+                         "plus a final one; schema: "
+                         "schemas/metrics_snapshot.schema.json)")
+    ap.add_argument("--log-json", action="store_true",
+                    help="structured one-object-per-line JSON progress "
+                         "on stderr instead of human-readable lines")
     ap.add_argument("--k", type=int, default=12)
     ap.add_argument("--w", type=int, default=30)
     ap.add_argument("--eth", type=int, default=6)

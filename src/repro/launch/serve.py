@@ -24,9 +24,73 @@ Both modes drive the unified ``repro.core.mapper.Mapper`` session API:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import os
 import sys
 import time
+
+
+@contextlib.contextmanager
+def _obs(args, component: str):
+    """Arm the observability surfaces a launcher asked for and always
+    tear them down: ``--log-json`` structured logging, ``--metrics-out``
+    (final JSONL snapshot), ``--trace-out`` (Chrome trace export, even
+    on failure), ``--metrics-port`` (Prometheus exposition thread) and
+    ``--profiler-port`` (jax profiler server for on-demand device
+    timelines)."""
+    from repro.launch.map_fastq import _metrics_snapshot
+    from repro.obs import logjson
+    from repro.obs import registry as _metrics
+    from repro.obs import server as obs_server
+    from repro.obs import tracing as _tracing
+
+    trace_out = getattr(args, "trace_out", None)
+    metrics_out = getattr(args, "metrics_out", None)
+    metrics_port = getattr(args, "metrics_port", None)
+    profiler_port = getattr(args, "profiler_port", None)
+    log_on = getattr(args, "log_json", False) and not logjson.enabled()
+    need_metrics = metrics_out is not None or metrics_port is not None
+    metrics_on = need_metrics and _metrics.ACTIVE is None
+    tracing_on = trace_out is not None and _tracing.ACTIVE is None
+    if log_on:
+        logjson.enable(component)
+    if metrics_on:
+        _metrics.enable_metrics()
+    if tracing_on:
+        _tracing.enable_tracing()
+    srv = None
+    if metrics_port is not None and _metrics.ACTIVE is not None:
+        srv = obs_server.start_metrics_server(_metrics.ACTIVE,
+                                              port=metrics_port)
+        logjson.say(f"serve: metrics exposition on "
+                    f"http://{srv.host}:{srv.port}/metrics",
+                    event="metrics_server", port=srv.port)
+    if profiler_port is not None:
+        prof = obs_server.start_profiler_server(profiler_port)
+        if prof is not None:
+            logjson.say(f"serve: jax profiler server on port "
+                        f"{profiler_port}", event="profiler_server",
+                        port=profiler_port)
+        else:
+            logjson.say("serve: jax profiler server unavailable on this "
+                        "jax build; continuing without it",
+                        event="profiler_server", port=None)
+    try:
+        yield
+    finally:
+        if srv is not None:
+            srv.stop()
+        if metrics_out is not None and _metrics.ACTIVE is not None:
+            open(metrics_out, "w").close()
+            _metrics_snapshot(metrics_out, seq=0)
+        if trace_out is not None and _tracing.ACTIVE is not None:
+            _tracing.ACTIVE.export(trace_out)
+        if tracing_on:
+            _tracing.disable_tracing()
+        if metrics_on:
+            _metrics.disable_metrics()
+        if log_on:
+            logjson.disable()
 
 
 def _print_mapper_stats(mapper, totals: dict, file=None) -> None:
@@ -84,6 +148,7 @@ def run_service(args) -> int:
     from repro.core.pipeline import MapperConfig
     from repro.core.serving import BatcherConfig
     from repro.data.genome import make_reference, sample_reads
+    from repro.obs import logjson
 
     ref = make_reference(args.genome, seed=0, repeat_frac=0.02)
     idx = build_index(ref)
@@ -93,10 +158,12 @@ def run_service(args) -> int:
     svc = mapper.serve(BatcherConfig(bucket_min=args.bucket_min,
                                      bucket_max=args.bucket_max))
     rng = np.random.default_rng(7)
-    print(f"service: genome {len(ref)} bases, buckets "
-          f"[{args.bucket_min}..{args.bucket_max}], "
-          f"topology={mapper.topology}, stream={cfg.stream}, "
-          f"wf_backend={cfg.wf_backend}")
+    logjson.say(f"service: genome {len(ref)} bases, buckets "
+                f"[{args.bucket_min}..{args.bucket_max}], "
+                f"topology={mapper.topology}, stream={cfg.stream}, "
+                f"wf_backend={cfg.wf_backend}",
+                event="start", file=sys.stdout,
+                genome=len(ref), topology=mapper.topology)
     total = correct = 0
     t0 = time.perf_counter()
     truth = {}
@@ -112,8 +179,12 @@ def run_service(args) -> int:
     dt = time.perf_counter() - t0
     st = svc.batcher.stats
     waste = st["padded_reads"] / max(st["padded_reads"] + st["reads"], 1)
-    print(f"{total} reads / {st['requests']} requests in {dt:.1f}s "
-          f"({total/dt:.0f} reads/s), accuracy {correct/max(total,1):.4f}")
+    logjson.say(f"{total} reads / {st['requests']} requests in {dt:.1f}s "
+                f"({total/dt:.0f} reads/s), accuracy "
+                f"{correct/max(total,1):.4f}",
+                event="done", file=sys.stdout, reads=total,
+                requests=st["requests"], wall_s=round(dt, 3),
+                accuracy=round(correct / max(total, 1), 4))
     print(f"bucket hist {st['bucket_hist']}, lane padding waste {waste:.3f}")
     _print_mapper_stats(mapper, svc.totals)
     return 0
@@ -178,11 +249,32 @@ def main():
     ap.add_argument("--no-stream", action="store_true",
                     help="service mode only: synchronous debug path "
                          "(per-stage timings)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export the run as Chrome trace-event JSON "
+                         "(Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a final JSONL metrics snapshot (schema: "
+                         "schemas/metrics_snapshot.schema.json)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    metavar="PORT",
+                    help="expose the live metrics registry over HTTP "
+                         "(Prometheus text on /metrics, JSON on "
+                         "/metrics.json; 0 = ephemeral port)")
+    ap.add_argument("--profiler-port", type=int, default=None,
+                    metavar="PORT",
+                    help="start the jax profiler server so TensorBoard / "
+                         "jax.profiler.trace clients can capture device "
+                         "timelines from the live process")
+    ap.add_argument("--log-json", action="store_true",
+                    help="structured one-object-per-line JSON progress "
+                         "on stderr")
     args, _ = ap.parse_known_args()
     if args.shards and "XLA_FLAGS" not in os.environ:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.shards}")
-    return run_service(args) if args.service else run_distributed(args)
+    fn = run_service if args.service else run_distributed
+    with _obs(args, "serve"):
+        return fn(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,355 @@
+"""``repro.obs``: metrics registry + span tracing units, the
+timed()-level agreement between spans / counters / ``stage_times_s``,
+the accumulation properties behind the launchers' closing stats, and
+the registry-derived closing-stats byte-match on both topologies."""
+import io
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import streaming
+from repro.core.mapper import (_METRIC_RUN_FIELDS, Mapper, MapperStats,
+                               accumulate_partition_stats, accumulate_stats,
+                               totals_from_registry)
+from repro.core.pipeline import MapperConfig
+from repro.obs import registry as obs_registry
+from repro.obs import tracing as obs_tracing
+from repro.obs.registry import MAX_LABEL_SETS, MetricsRegistry
+from repro.obs.tracing import Tracer
+from repro.obs.validate import validate_chrome_trace, validate_json
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Obs state is process-global; never leak an armed registry/tracer
+    (or a stale thread-local span context) into another test."""
+    yield
+    obs_tracing.disable_tracing()
+    obs_registry.disable_metrics()
+    obs_tracing.clear_ctx()
+
+
+@pytest.fixture(scope="module")
+def world():
+    from repro.core.index import build_index
+    from repro.data.genome import make_reference, sample_reads
+    ref = make_reference(8_000, seed=11, repeat_frac=0.03)
+    idx = build_index(ref)
+    rs = sample_reads(ref, 48, seed=13)
+    return idx, rs.reads
+
+
+# ---------------------------------------------------------------- registry
+
+def test_counter_gauge_basics():
+    reg = MetricsRegistry()
+    reg.counter("c_total").inc()
+    reg.counter("c_total").inc(4)
+    assert reg.counter("c_total").value == 5
+    reg.gauge("g", shard="0").set(7)
+    reg.gauge("g", shard="0").dec(2)
+    assert reg.gauge("g", shard="0").value == 5
+    snap = reg.snapshot()
+    assert snap["counters"]["c_total"] == 5
+    assert snap["gauges"]['g{shard="0"}'] == 5
+
+
+def test_registry_rejects_kind_mixing():
+    reg = MetricsRegistry()
+    reg.counter("m")
+    with pytest.raises(ValueError):
+        reg.gauge("m")
+
+
+def test_label_cardinality_is_bounded():
+    reg = MetricsRegistry()
+    for i in range(MAX_LABEL_SETS * 3):
+        reg.counter("hot_total", tenant=f"t{i}").inc()
+    snap = reg.snapshot()["counters"]
+    series = [k for k in snap if k.startswith("hot_total")]
+    assert len(series) <= MAX_LABEL_SETS + 1
+    assert 'hot_total{other="true"}' in snap  # overflow series absorbs
+
+
+def test_histogram_quantiles_and_bounded_buckets():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_seconds")
+    for v in (0.001, 0.002, 0.004, 0.1, 2.0):
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == 5
+    assert snap["sum"] == pytest.approx(2.107)
+    assert sum(snap["buckets"].values()) == 5
+    p50, p95, p99 = h.quantile(0.5), h.quantile(0.95), h.quantile(0.99)
+    assert 0.002 <= p50 <= 0.01          # bucket upper edges
+    assert p50 <= p95 <= p99
+    h.observe(1e9)                       # beyond the last edge
+    assert "+Inf" in h.snapshot()["buckets"]
+    # memory is fixed: the bucket layout never grows with observations
+    assert len(h.counts) == len(h.edges) + 1
+
+
+def test_prometheus_exposition_format():
+    reg = MetricsRegistry()
+    reg.counter("req_total", code="200").inc(3)
+    reg.histogram("lat_seconds").observe(0.5)
+    text = reg.to_prometheus()
+    assert '# TYPE req_total counter' in text
+    assert 'req_total{code="200"} 3' in text
+    assert '# TYPE lat_seconds histogram' in text
+    assert 'lat_seconds_count 1' in text
+    assert 'lat_seconds_sum 0.5' in text
+    assert 'le="+Inf"' in text
+
+
+# ----------------------------------------------------------------- tracing
+
+def test_tracer_spans_ctx_and_chrome_export():
+    tr = Tracer()
+    obs_tracing.set_ctx(chunk=3)
+    with tr.span("work", shard=1):
+        pass
+    obs_tracing.clear_ctx()
+    assert len(tr) == 1
+    trace = tr.chrome()
+    assert validate_chrome_trace(trace) == []
+    xs = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    assert xs[0]["name"] == "work"
+    assert xs[0]["args"] == {"chunk": 3, "shard": 1}
+    assert all(k in xs[0] for k in ("pid", "tid", "ts", "dur"))
+
+
+def test_tracer_bounds_memory():
+    tr = Tracer(max_events=4)
+    for _ in range(10):
+        tr.add("e", 0.0, 1.0)
+    assert len(tr) == 4 and tr.dropped == 6
+    assert tr.chrome()["dropped_events"] == 6
+
+
+def test_trace_validator_catches_malformed():
+    assert validate_chrome_trace({"traceEvents": []}) != []  # empty
+    bad = {"traceEvents": [{"ph": "X", "name": "a", "pid": 1, "tid": 0,
+                            "ts": 0.0}]}          # missing dur
+    assert any("dur" in e for e in validate_chrome_trace(bad))
+    unbalanced = {"traceEvents": [
+        {"ph": "B", "name": "a", "pid": 1, "tid": 0, "ts": 0.0}]}
+    assert validate_chrome_trace(unbalanced) != []
+
+
+def test_mini_schema_validator():
+    schema = {"type": "object", "required": ["n"],
+              "properties": {"n": {"type": "integer", "minimum": 0}}}
+    assert validate_json({"n": 3}, schema) == []
+    assert validate_json({"n": -1}, schema) != []
+    assert validate_json({}, schema) != []
+
+
+# ------------------------------------------------- timed()-level agreement
+
+def test_timed_feeds_times_span_and_counter_from_same_clock_reads():
+    reg = obs_registry.enable_metrics(MetricsRegistry())
+    tr = obs_tracing.enable_tracing(tracer_=Tracer())
+    times = {}
+    t0 = time.perf_counter()
+    t1 = streaming.timed(times, "stage_x", t0)
+    assert t1 >= t0
+    assert tr.stage_totals()["stage_x"] == times["stage_x"]
+    assert reg.counter("repro_stage_seconds_total",
+                       stage="stage_x").value == times["stage_x"]
+    # times=None (profiling off) emits nothing: the disabled path stays
+    # a pure clock read
+    n = len(tr)
+    streaming.timed(None, "stage_y", t0)
+    assert len(tr) == n
+    assert "stage_y" not in tr.stage_totals()
+
+
+def test_trace_durations_equal_stage_times(world):
+    """The acceptance property: a traced run's summed span durations are
+    the ``stage_times_s`` dict — same clock reads, so equality is exact,
+    not approximate."""
+    idx, reads = world
+    tr = obs_tracing.enable_tracing(tracer_=Tracer())
+    cfg = MapperConfig.from_index(idx, chunk_reads=16, profile=True)
+    res = Mapper(idx, cfg).map(reads[:32])
+    st = res.stats["stage_times_s"]
+    totals = tr.stage_totals()
+    assert set(st) <= set(totals)
+    for k, v in st.items():
+        assert totals[k] == pytest.approx(v, rel=1e-9), k
+    # full precision survives in the stats dict (no 4-decimal rounding
+    # at collection)
+    assert any(v != round(v, 4) for v in st.values() if v)
+
+
+def test_mesh_profile_records_stage_times(world):
+    from repro.core.distributed import shard_index
+    from repro.core.mapper import _flat_mesh
+    idx, reads = world
+    cfg = MapperConfig.from_index(idx, profile=True)
+    res = Mapper(shard_index(idx, 1), cfg, topology="mesh",
+                 mesh=_flat_mesh(1)).map(reads[:16])
+    assert set(res.stats["stage_times_s"]) == {"dispatch", "d2h"}
+
+
+# ------------------------------------------- accumulation properties
+
+def _mk_stats(vals):
+    return MapperStats(topology="single", engine="compacted",
+                       reads=vals[0], candidates=vals[1],
+                       survivors=vals[2], affine_instances=vals[3],
+                       padded_affine_instances=vals[4],
+                       dropped_send=vals[5], dropped_affine=vals[6],
+                       reverse_best=vals[7])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.lists(st.integers(min_value=0, max_value=10**6),
+                         min_size=8, max_size=8),
+                min_size=1, max_size=6))
+def test_accumulate_stats_split_equals_one_shot(chunks):
+    """Accumulating per-chunk stats equals accumulating the one-shot sum
+    — the property that makes chunked launcher totals trustworthy."""
+    split = {f: 0 for f in _METRIC_RUN_FIELDS}
+    for vals in chunks:
+        accumulate_stats(split, _mk_stats(vals), fields=_METRIC_RUN_FIELDS)
+    merged = _mk_stats([sum(v[i] for v in chunks) for i in range(8)])
+    one_shot = {f: 0 for f in _METRIC_RUN_FIELDS}
+    accumulate_stats(one_shot, merged, fields=_METRIC_RUN_FIELDS)
+    assert split == one_shot
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.lists(st.integers(min_value=0, max_value=10**6),
+                         min_size=5, max_size=5),
+                min_size=1, max_size=6))
+def test_accumulate_partition_stats_split_equals_one_shot(runs):
+    """Per-partition counters and count vectors sum across runs; static
+    descriptors take the latest run's value."""
+    def mk(v):
+        s = _mk_stats([0] * 8)
+        s.extra["partitions"] = {
+            "partition_loads": v[0], "h2d_bytes": v[1],
+            "minis_routed_per_partition": [v[2], v[3]],
+            "arena_rows": v[4],          # static: latest wins
+        }
+        return s
+    split = {}
+    for v in runs:
+        accumulate_partition_stats(split, mk(v))
+    part = split["partitions"]
+    assert part["partition_loads"] == sum(v[0] for v in runs)
+    assert part["h2d_bytes"] == sum(v[1] for v in runs)
+    assert part["minis_routed_per_partition"] == [
+        sum(v[2] for v in runs), sum(v[3] for v in runs)]
+    assert part["arena_rows"] == runs[-1][4]
+
+
+# -------------------------------- registry-derived closing stats
+
+def _closing_lines(mapper, totals) -> str:
+    from repro.launch.serve import _print_mapper_stats
+    buf = io.StringIO()
+    _print_mapper_stats(mapper, totals, file=buf)
+    return buf.getvalue()
+
+
+def _run_chunked(mapper, reads, step):
+    totals = {f: 0 for f in _METRIC_RUN_FIELDS}
+    for lo in range(0, len(reads), step):
+        res = mapper.map(reads[lo:lo + step])
+        accumulate_stats(totals, res.stats, fields=_METRIC_RUN_FIELDS)
+    return totals
+
+
+@pytest.mark.parametrize("topology", ["single", "mesh"])
+def test_registry_closing_stats_byte_match(world, topology):
+    """Totals re-derived from the metrics registry render the exact same
+    closing-stats bytes as the legacy accumulate_stats path, on both
+    topologies — the numbers can never disagree."""
+    idx, reads = world
+    if topology == "mesh":
+        from repro.core.distributed import shard_index
+        from repro.core.mapper import _flat_mesh
+        mapper = Mapper(shard_index(idx, 1), MapperConfig.from_index(idx),
+                        topology="mesh", mesh=_flat_mesh(1))
+    else:
+        mapper = Mapper(idx, MapperConfig.from_index(idx, chunk_reads=16))
+    reg = obs_registry.enable_metrics(MetricsRegistry())
+    totals = _run_chunked(mapper, reads, 24)
+    derived = totals_from_registry(topology, reg)
+    assert derived == totals
+    assert (_closing_lines(mapper, dict(totals))
+            == _closing_lines(mapper, dict(derived)))
+
+
+def test_totals_from_registry_none_when_disabled():
+    assert totals_from_registry("single") is None
+
+
+# ------------------------------------------------- service-level metrics
+
+def test_service_latency_metrics_and_tenant_bound(world):
+    from repro.core.serving import _MAX_TENANTS, BatcherConfig
+    idx, reads = world
+    reg = obs_registry.enable_metrics(MetricsRegistry())
+    svc = Mapper(idx, MapperConfig.from_index(idx)).serve(
+        BatcherConfig(bucket_min=64, bucket_max=256))
+    for i in range(_MAX_TENANTS + 8):
+        svc.submit(reads[i % len(reads)][None], tenant=f"tenant{i}")
+    assert len(svc._tenant_pending) <= _MAX_TENANTS + 1
+    assert svc.tenant_queue_depth["_other"] == 8
+    out = svc.flush()
+    assert len(out) == _MAX_TENANTS + 8
+    assert all(d == 0 for d in svc._tenant_pending.values())
+    assert not svc._submit_ts and not svc._tenants  # drained with the rids
+    snap = reg.snapshot()
+    assert snap["histograms"]["repro_flush_seconds"]["count"] == 1
+    assert (snap["histograms"]["repro_request_queue_wait_seconds"]["count"]
+            == _MAX_TENANTS + 8)
+    assert snap["histograms"]["repro_bucket_execute_seconds"]["count"] >= 1
+    tenant_series = [k for k in snap["counters"]
+                     if k.startswith("repro_requests_total")]
+    assert 0 < len(tenant_series) <= MAX_LABEL_SETS + 1
+
+
+def test_batcher_bucket_hist_is_bounded(world):
+    """The audit satellite: ``bucket_hist`` keys are pow-2 sizes within
+    [bucket_min, bucket_max], so long-lived serving cannot grow it."""
+    import math
+
+    from repro.core.serving import BatcherConfig, ReadBatcher
+    cfg = BatcherConfig(bucket_min=64, bucket_max=1024)
+    b = ReadBatcher(150, cfg)
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        b.submit(np.zeros((int(rng.integers(1, 900)), 150), np.uint8))
+        b.drain()
+    max_keys = int(math.log2(cfg.bucket_max // cfg.bucket_min)) + 1
+    hist = b.stats["bucket_hist"]
+    assert len(hist) <= max_keys
+    assert all(cfg.bucket_min <= k <= cfg.bucket_max and (k & (k - 1)) == 0
+               for k in hist)
+
+
+def test_metrics_server_round_trip():
+    import json
+    import urllib.request
+
+    from repro.obs.server import start_metrics_server
+    reg = MetricsRegistry()
+    reg.counter("up_total").inc()
+    srv = start_metrics_server(reg, port=0)
+    try:
+        base = f"http://{srv.host}:{srv.port}"
+        text = urllib.request.urlopen(f"{base}/metrics").read().decode()
+        assert "up_total 1" in text
+        snap = json.loads(
+            urllib.request.urlopen(f"{base}/metrics.json").read())
+        assert snap["counters"]["up_total"] == 1
+    finally:
+        srv.stop()
