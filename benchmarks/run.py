@@ -77,11 +77,19 @@ def emit_pipeline_json(path: str, reads: int, chunk_reads: int | None,
         else:
             print(f"index_build (out-of-core sharded build -> mmap "
                   f"reload -> routed mapping): "
-                  f"{ib['build_bases_per_s']:.0f} bases/s build, "
+                  f"{ib['build_bases_per_s']:.0f} bases/s build "
+                  f"({ib.get('spill_bytes', 0)} spill B), "
                   f"{ib['reload_ms']:.1f}ms reload, "
                   f"{ib['routed_reads_per_s']:.1f} routed vs "
                   f"{ib['flat_reads_per_s']:.1f} flat reads/s "
                   f"({ib['routed_overhead_frac']:.1%} overhead)")
+            pf = ib.get("routed_prefetch_reads_per_s")
+            if pf is not None:
+                print(f"index_build prefetch: {pf:.1f} prefetch-on vs "
+                      f"{ib['routed_reads_per_s']:.1f} prefetch-off "
+                      f"routed reads/s "
+                      f"({ib.get('prefetch_overhead_frac', 0):.1%} vs "
+                      f"flat)")
     ro = bench.get("resilience_overhead")
     if ro:
         if "error" in ro:
@@ -228,6 +236,17 @@ def check_regression(fresh: dict, baseline_path: str, tolerance: float,
         rc |= _gate_metric("index_build.build_bases_per_s", fresh_val,
                            bi["build_bases_per_s"], tolerance,
                            missing_reason=fi.get("error"))
+    # routed-mapping throughput, prefetch off and on — each skipped
+    # until a baseline records it, so the introducing run stays green
+    for key in ("routed_reads_per_s", "routed_prefetch_reads_per_s"):
+        if bi.get(key) is None:
+            print(f"perf-trend: baseline {baseline_path} lacks "
+                  f"index_build.{key}; skipping check")
+            continue
+        fi = fresh.get("index_build") or {}
+        fresh_val = None if "error" in fi else fi.get(key)
+        rc |= _gate_metric(f"index_build.{key}", fresh_val, bi[key],
+                           tolerance, missing_reason=fi.get("error"))
     for engine in STAGE_ENGINES:
         rc |= _gate_stages(fresh, base, engine, stage_tolerance)
     return rc

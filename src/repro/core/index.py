@@ -8,10 +8,14 @@ paper's deliberate trade: all later stages touch only local data.
 
 Layout (CSR over unique minimizer k-mers, sorted for O(log U) lookup):
   uniq_kmers : (U,)   uint32  sorted unique minimizer k-mer codes
-  offsets    : (U+1,) int32   CSR offsets into positions/segments
-  positions  : (P,)   int32   k-mer start position of each occurrence
+  offsets    : (U+1,) int32/int64  CSR offsets into positions/segments
+  positions  : (P,)   int32/int64  k-mer start position of each occurrence
   segments   : (P, seg_len) uint8  pre-extracted reference windows
                (sentinel base 4 beyond the reference ends — never matches)
+
+Positions past 2^31-1 (index format v2, GRCh38-scale) are int64 on the
+host; :func:`device_position_dtype` picks what the device arena can
+actually hold under jax's 32-bit default.
 
 A "crossbar" in the TPU mapping is an index shard: minimizers are assigned
 to shards by ``hash(kmer) % num_shards`` (see ``repro.core.distributed``).
@@ -26,6 +30,33 @@ from .minimizers import minimizers
 import jax.numpy as jnp
 
 SENTINEL = 4  # "N"-like base, never equal to a read base
+
+
+def device_position_dtype(ref_len: int) -> np.dtype:
+    """Device-side dtype for positions of a reference ending at global
+    position ``ref_len - 1``.
+
+    jax defaults to 32-bit (``jnp.asarray`` silently narrows int64 when
+    x64 is off), so the choice is explicit: int32 while every position
+    fits; int64 when the runtime honors it (``JAX_ENABLE_X64``);
+    otherwise uint32 up to 2^32-1 — which covers GRCh38's 3.1 Gb
+    spacer-concatenated reference.  Past 2^32-1 without x64 is an
+    error, never a silent wrap.
+    """
+    import jax
+    max_pos = int(ref_len) - 1
+    # strict <: the dtype max itself is the device winner-reduce
+    # sentinel, so the largest representable value must stay unused
+    if max_pos < np.iinfo(np.int32).max:
+        return np.dtype(np.int32)
+    if jax.config.read("jax_enable_x64"):
+        return np.dtype(np.int64)
+    if max_pos < np.iinfo(np.uint32).max:
+        return np.dtype(np.uint32)
+    raise ValueError(
+        f"reference ends at position {max_pos}, past uint32; device "
+        f"arithmetic needs 64-bit ints — set JAX_ENABLE_X64=1 (or "
+        f"jax.config.update('jax_enable_x64', True)) before mapping")
 
 
 def validate_geometry(*, read_len: int, k: int, w: int, eth: int) -> None:

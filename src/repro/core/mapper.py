@@ -68,7 +68,7 @@ from . import streaming
 from .distributed import (AXIS, ShardedIndex, _cached_mapper, shard_index,
                           stage_b_affine_capacity)
 from .encoding import revcomp
-from .index import GenomeIndex
+from .index import GenomeIndex, device_position_dtype
 from .pipeline import (LazyTraceback, MapperConfig, MappingResult,
                        _ChunkPipeline, _merge_stats, map_reads_jax)
 
@@ -157,7 +157,8 @@ class MapperStats:
 
 _PART_SUM_KEYS = ("chunks_routed", "partition_loads", "partition_evictions",
                   "partition_compactions",
-                  "h2d_bytes", "minis_routed_per_partition",
+                  "h2d_bytes", "prefetch_loads", "prefetch_hits",
+                  "minis_routed_per_partition",
                   "minis_found_per_partition", "survivors_per_partition")
 
 
@@ -305,6 +306,20 @@ def _flat_mesh(n_shards: int | None):
     return make_mesh_compat((n,), (AXIS,))
 
 
+def _host_positions(pos):
+    """Result-boundary position dtype: unsigned device positions (the
+    uint32 arena of references past 2^31 without x64) become int64 with
+    the all-ones BIG sentinel rewritten to the public -1.  Keyed on the
+    sentinel value itself, not ``mapped`` — the two can disagree on
+    degenerate candidates and -1 must mean exactly "no position won"."""
+    if pos is None or pos.dtype.kind != "u":
+        return pos
+    big = np.iinfo(pos.dtype).max
+    out = pos.astype(np.int64)
+    out[pos == big] = -1
+    return out
+
+
 def _reduce_strands(res: MappingResult, n: int) -> MappingResult:
     """Fold a stacked fwd-then-rc result of 2n reads to the per-read best.
 
@@ -378,6 +393,12 @@ class Mapper:
         lazily per chunk and LRU-evicted under this bound
         (``repro.index.residency``).  None keeps every partition
         resident (the budget is the full index).
+    prefetch : bool, optional
+        Shard-routed single topology only: stage the next chunk's host
+        seeding and partition uploads on a background worker while the
+        current chunk computes (``repro.index.residency``).  Results are
+        bit-identical to synchronous loading; only streamed runs
+        (``cfg.stream=True``) actually overlap.
 
     Both topologies also accept a ``repro.index.ShardedGenomeIndex``:
     on ``"single"`` chunks are shard-routed through the residency arena;
@@ -389,7 +410,8 @@ class Mapper:
                  topology: str = "single", mesh=None,
                  n_shards: int | None = None, send_cap: int | None = None,
                  injector=None, watchdog_s: float | None = None,
-                 memory_budget_bytes: int | None = None):
+                 memory_budget_bytes: int | None = None,
+                 prefetch: bool = False):
         if topology not in TOPOLOGIES:
             raise ValueError(f"unknown topology {topology!r}; "
                              f"expected one of {TOPOLOGIES}")
@@ -421,6 +443,13 @@ class Mapper:
                 "with a repro.index.ShardedGenomeIndex — the mesh topology "
                 "places one whole partition per device, and a flat "
                 "GenomeIndex is always fully resident")
+        self.prefetch = bool(prefetch)
+        if self.prefetch and not (topology == "single"
+                                  and self.part_index is not None):
+            raise ValueError(
+                "prefetch=True only applies to topology=\"single\" with a "
+                "repro.index.ShardedGenomeIndex — only the shard-routed "
+                "arena path has per-chunk partition uploads to overlap")
 
         if topology == "single":
             if isinstance(index, ShardedIndex):
@@ -450,9 +479,24 @@ class Mapper:
                     self.cfg)
             else:
                 self.index = index
+                # dtype-explicit uploads: jnp.asarray silently narrows
+                # int64 to int32 when x64 is off, which would wrap
+                # format-v2 positions past 2^31.  device_position_dtype
+                # picks what the device can hold (uint32 covers GRCh38);
+                # occ_idx rows are int32 everywhere, so > 2^31 occurrence
+                # rows in one flat device index is structurally out.
+                pos = np.asarray(index.positions)
+                max_pos = int(pos.max()) if len(pos) else 0
+                pdt = device_position_dtype(max_pos + 1)
+                offs = np.asarray(index.offsets)
+                if len(pos) > np.iinfo(np.int32).max:
+                    raise ValueError(
+                        f"flat index has {len(pos)} occurrence rows, past "
+                        f"int32 occ_idx addressing; use a "
+                        f"ShardedGenomeIndex (partition-local rows)")
                 self._dev = (jnp.asarray(index.uniq_kmers),
-                             jnp.asarray(index.offsets),
-                             jnp.asarray(index.positions),
+                             jnp.asarray(offs.astype(np.int32)),
+                             jnp.asarray(pos.astype(pdt)),
                              jnp.asarray(index.segments))
         else:
             self.mesh = mesh if mesh is not None else _flat_mesh(n_shards)
@@ -568,7 +612,8 @@ class Mapper:
             entry = map_reads_jax
         elif self.router is not None:
             from ..index.residency import _RoutedChunkPipeline
-            entry = _RoutedChunkPipeline(self.router, self.cfg)
+            entry = _RoutedChunkPipeline(self.router, self.cfg,
+                                         prefetch=self.prefetch)
         else:
             entry = _ChunkPipeline(self._dev, self.cfg)
         self._plan_cache[plan.key] = entry
@@ -678,7 +723,7 @@ class Mapper:
         if plan.engine == "padded":
             out = entry(*self._dev, jnp.asarray(reads), self.cfg)
             return MappingResult(
-                position=np.asarray(out["position"]),
+                position=_host_positions(np.asarray(out["position"])),
                 distance=np.asarray(out["distance"]),
                 distance2=np.asarray(out["distance2"]),
                 mapped=np.asarray(out["mapped"]),
@@ -693,6 +738,7 @@ class Mapper:
         cfg = self.cfg
         items = [(reads[c0 : c0 + plan.chunk], plan.chunk)
                  for c0 in range(0, n, plan.chunk)]
+        pipe.begin_run(items)
         if cfg.stream:
             times = {} if cfg.profile else None
             fetched = streaming.stream_map(items, pipe.phase1, pipe.phase2,
@@ -741,7 +787,7 @@ class Mapper:
             plan_cache_hits=self.plan_cache_hits,
             plan_cache_misses=self.plan_cache_misses, extra=raw)
         _record_run_metrics(stats)
-        return MappingResult(position=cat("position"),
+        return MappingResult(position=_host_positions(cat("position")),
                              distance=cat("distance"),
                              distance2=cat("distance2"),
                              mapped=mapped, strand=cat("strand"),

@@ -184,7 +184,10 @@ class MappingResult:
     on-device traceback and fills both in (reads that never ask for CIGARs
     never pay for them).
     """
-    position: np.ndarray   # (R,) int32 best mapping position (-1 if unmapped)
+    position: np.ndarray   # (R,) int best mapping position, -1 if unmapped
+    #                      (int32 device-side up to 2^31-1 bases; int64 on
+    #                      the host past that — see core.index.
+    #                      device_position_dtype)
     distance: np.ndarray   # (R,) int32 affine WF distance
     mapped: np.ndarray     # (R,) bool
     distance2: np.ndarray | None = None  # (R,) int32 runner-up affine WF
@@ -253,17 +256,19 @@ def map_reads_jax(uniq_kmers, offsets, positions, segments, reads,
     # (deterministic across the single-shard and distributed mappers)
     cand_occ = jnp.take_along_axis(occ_idx,
                                    best_pl[..., None], axis=2)[:, :, 0]
-    cand_pos = positions[cand_occ] - mini_pos                    # (R, M)
+    cand_pos, cand_ok = _cand_positions(positions, cand_occ, mini_pos)
+    big = _pos_big(positions)
     best_aff = jnp.min(aff_end, axis=-1)
     mapped = best_aff < cfg.sat_affine
     is_best = aff_end == best_aff[:, None]
-    pos_key = jnp.where(is_best & (cand_pos >= 0), cand_pos, 2 ** 30)
+    pos_key = jnp.where(is_best & cand_ok, cand_pos, big)
     position = jnp.min(pos_key, axis=-1)
     best_m = jnp.argmin(jnp.where(pos_key == position[:, None],
                                   jnp.arange(cfg.max_minis)[None, :],
                                   cfg.max_minis), axis=-1)
-    position = jnp.where(mapped & (position < 2 ** 30), position, -1)
-    distance2 = _runner_up_distance(aff_end, cand_pos, position,
+    position = jnp.where(mapped & (position < big), position,
+                         _pos_unmapped(positions))
+    distance2 = _runner_up_distance(aff_end, cand_pos, cand_ok, position,
                                     cfg.eth, cfg.sat_affine)
     distance2 = _co_optimal_runner_up(lin_end, occ_idx, mini_pos, positions,
                                       position, best_m, best_aff,
@@ -283,15 +288,53 @@ def map_reads_jax(uniq_kmers, offsets, positions, segments, reads,
                 n_candidates=jnp.sum(occ_valid, axis=(1, 2)))
 
 
-def _runner_up_distance(aff_end, cand_pos, position, eth: int, sat: int):
+def _pos_big(positions):
+    """Sentinel strictly above every real mapping position, in the
+    positions dtype.  Replaces the old hardcoded ``2**30``, which real
+    positions *reach* once the reference passes 2^30 bases — a mapped
+    read there would have been reported unmapped."""
+    return jnp.asarray(jnp.iinfo(positions.dtype).max, positions.dtype)
+
+
+def _pos_unmapped(positions):
+    """Device-side unmapped sentinel: -1 for signed position dtypes
+    (the historical contract), the dtype max for unsigned ones (uint32
+    arenas past 2^31 bases) — the host boundary rewrites it to -1."""
+    if jnp.issubdtype(positions.dtype, jnp.unsignedinteger):
+        return _pos_big(positions)
+    return jnp.asarray(-1, positions.dtype)
+
+
+def _cand_positions(positions, occ, mini_pos):
+    """Candidate genome positions ``positions[occ] - mini_pos`` plus a
+    validity mask, dtype-safe for signed and unsigned position arrays:
+    an unsigned subtraction wraps instead of going negative, so
+    validity is tested *before* the subtract (``p >= mini_pos``)."""
+    p = positions[occ]
+    mp = mini_pos.astype(positions.dtype)
+    cp = p - mp
+    if jnp.issubdtype(positions.dtype, jnp.unsignedinteger):
+        ok = p >= mp
+    else:
+        ok = cp >= 0
+    return cp, ok
+
+
+def _absdiff(a, b):
+    """|a - b| without a signed intermediate (unsigned-dtype-safe)."""
+    return jnp.where(a > b, a - b, b - a)
+
+
+def _runner_up_distance(aff_end, cand_pos, cand_ok, position, eth: int,
+                        sat: int):
     """Best affine distance among candidates at a *different* locus than
     the winner (more than the band half-width away — candidates within
     ``eth`` of the winning position are the same alignment seeded from
     another minimizer, not a competitor).  ``sat`` when no competing
     locus exists; both engines share this so their ``distance2`` is
     bit-identical like the rest of the result."""
-    far = jnp.abs(cand_pos - position[:, None]) > eth
-    key = jnp.where((aff_end < sat) & far & (cand_pos >= 0), aff_end, sat)
+    far = _absdiff(cand_pos, position[:, None]) > eth
+    key = jnp.where((aff_end < sat) & far & cand_ok, aff_end, sat)
     return jnp.min(key, axis=-1).astype(jnp.int32)
 
 
@@ -310,8 +353,9 @@ def _co_optimal_runner_up(lin_end, occ_idx, mini_pos, positions, position,
     excess is 0)."""
     eth, sat = cfg.eth, cfg.sat_affine
     sat_lin = jnp.int32(eth + 1)
-    pos_all = positions[occ_idx] - mini_pos[..., None]         # (R, M, P)
-    far = jnp.abs(pos_all - position[:, None, None]) > eth
+    pos_all, _ = _cand_positions(positions, occ_idx,
+                                 mini_pos[..., None])          # (R, M, P)
+    far = _absdiff(pos_all, position[:, None, None]) > eth
     # min(thr, eth) keeps the linear sat value (= invalid/absent slots)
     # out even when the filter threshold is set above the band
     cand = far & (lin_end <= min(cfg.filter_threshold, eth))
@@ -388,16 +432,18 @@ def _affine_stage_impl(segments, positions, reads, occ_idx, mini_pos, best_pl,
 
     cand_occ = jnp.take_along_axis(occ_idx,
                                    best_pl[..., None], axis=2)[:, :, 0]
-    cand_pos = positions[cand_occ] - mini_pos                    # (R, M)
+    cand_pos, cand_ok = _cand_positions(positions, cand_occ, mini_pos)
+    big = _pos_big(positions)
     best_aff = jnp.min(aff_end, axis=-1)
     mapped = best_aff < sat
     is_best = aff_end == best_aff[:, None]
-    pos_key = jnp.where(is_best & (cand_pos >= 0), cand_pos, 2 ** 30)
+    pos_key = jnp.where(is_best & cand_ok, cand_pos, big)
     position = jnp.min(pos_key, axis=-1)
     best_m = jnp.argmin(jnp.where(pos_key == position[:, None],
                                   jnp.arange(M)[None, :], M), axis=-1)
-    position = jnp.where(mapped & (position < 2 ** 30), position, -1)
-    distance2 = _runner_up_distance(aff_end, cand_pos, position,
+    position = jnp.where(mapped & (position < big), position,
+                         _pos_unmapped(positions))
+    distance2 = _runner_up_distance(aff_end, cand_pos, cand_ok, position,
                                     cfg.eth, sat)
     distance2 = _co_optimal_runner_up(lin_end_full, occ_idx, mini_pos,
                                       positions, position, best_m,
@@ -647,6 +693,11 @@ class _ChunkPipeline:
         self.dev = dev
         self.cfg = cfg
         self.lin_jit, self.aff_jit = _stage_jits(cfg.stream)
+
+    def begin_run(self, items) -> None:
+        """Hook called once with the full chunk list before streaming
+        begins.  The flat pipeline has nothing to stage; the routed
+        pipeline overrides this to start arena prefetch."""
 
     def phase1(self, item, times=None):
         sub, chunk = item

@@ -115,12 +115,15 @@ def seed_reads_routed(index, reads: np.ndarray, params: SeedParams, ensure):
         pk_kmers = np.asarray(pk.kmers)
         i = np.minimum(np.searchsorted(pk_kmers, kk), pk.n_kmers - 1)
         found = pk_kmers[i] == kk
+        # CSR offsets may be int64 (format v2); keep the row arithmetic
+        # int64 and narrow only the final arena rows, which are bounded
+        # by the arena capacity (< 2^31 rows by construction)
         offs = np.asarray(pk.offsets)
-        start = offs[i].astype(np.int32)
-        count = (offs[i + 1] - offs[i]).astype(np.int32)
-        rows = (np.int32(bases[p]) + start[:, None] + lanes[None, :])
+        start = offs[i].astype(np.int64)
+        count = offs[i + 1].astype(np.int64) - start
+        rows = (np.int64(bases[p]) + start[:, None] + lanes[None, :])
         ov = (lanes[None, :] < count[:, None]) & found[:, None]
-        occ[sel] = np.where(ov, rows, 0)
+        occ[sel] = np.where(ov, rows, 0).astype(np.int32)
         occ_valid[sel] = ov
         mini_valid[sel] = found
         found_per_part[p] = int(found.sum())

@@ -15,8 +15,15 @@ inside the tile — tiles partition the position axis, so the union over
 tiles is exactly the flat occurrence set with no duplicates.  Each
 occurrence is routed to partition ``hash32(kmer) % P`` (the crossbar
 rule) and appended to that partition's spill file as a packed
-``uint64 (kmer << 32) | pos`` key; the 2-bit-packed reference is
-written incrementally alongside.
+``uint64 (kmer << pos_bits) | pos`` key, where ``pos_bits =
+64 - (2*k + 1)`` — k-mer codes spanning the sentinel base 4 carry one
+bit past 2-bit packing (k <= 16, so at least 31 position bits; k=12
+leaves 39 bits ≈ 5*10^11 bases — far past GRCh38).  Spills are
+strictly append-only behind a
+small bounded per-partition write buffer (``_SpillWriter``), so a tile
+flush costs at most one sequential write per touched partition and
+total spill I/O is linear in spilled bytes.  The 2-bit-packed
+reference is written incrementally alongside.
 
 **Phase 2 — finalize.**  Per partition: read the spill, ``np.unique``
 the packed keys (one shot = dedup + (kmer, pos) sort, the same order
@@ -45,7 +52,7 @@ from ..obs import tracing as _tracing
 from . import format as fmt
 from .npscan import np_hash32, np_minimizers
 
-_INT32_MAX = 2**31 - 1
+_INT32_MAX = fmt.INT32_MAX
 
 
 def _validate_partitions(num_partitions: int) -> None:
@@ -95,6 +102,45 @@ class _PackedRefWriter:
         self._fs.close()
 
 
+class _SpillWriter:
+    """Append-only partition spill files behind bounded write buffers.
+
+    Payloads accumulate per partition in memory and drain as one
+    sequential append once ``flush_bytes`` is buffered (or at close) —
+    the files are only ever appended to, so spill I/O cost is linear in
+    spilled bytes, not in tiles × partitions.
+    """
+
+    def __init__(self, paths: list, flush_bytes: int = 1 << 18):
+        self._files = [open(p, "wb") for p in paths]
+        self._bufs: list = [[] for _ in paths]
+        self._buffered = [0] * len(paths)
+        self.flush_bytes = int(flush_bytes)
+        self.spill_bytes = 0
+        self.spill_writes = 0
+
+    def append(self, p: int, payload: bytes) -> None:
+        self._bufs[p].append(payload)
+        self._buffered[p] += len(payload)
+        if self._buffered[p] >= self.flush_bytes:
+            self._drain(p)
+
+    def _drain(self, p: int) -> None:
+        if not self._buffered[p]:
+            return
+        blob = b"".join(self._bufs[p])
+        self._files[p].write(blob)
+        self.spill_bytes += len(blob)
+        self.spill_writes += 1
+        self._bufs[p] = []
+        self._buffered[p] = 0
+
+    def close(self) -> None:
+        for p in range(len(self._files)):
+            self._drain(p)
+            self._files[p].close()
+
+
 def _finalize_npy(payload_path: str, out_path: str, dtype,
                   shape: tuple) -> None:
     """Wrap a raw little-endian payload file as a valid ``.npy``."""
@@ -114,12 +160,16 @@ def _finalize_npy(payload_path: str, out_path: str, dtype,
 class _TileScanner:
     """Rolling-buffer tile walk over the virtual concatenated reference."""
 
-    def __init__(self, *, k: int, w: int, tile_bp: int, emit):
+    def __init__(self, *, k: int, w: int, tile_bp: int, emit,
+                 origin: int = 0):
         self.k, self.w, self.tile = k, w, tile_bp
         self.emit = emit                      # emit(packed_u64_occurrences)
+        # sentinel-spanning k-mers (base code 4) need 2k+1 bits, not 2k
+        self.pos_bits = np.uint64(64 - (2 * k + 1))
+        self.origin = origin                  # global pos of physical base 0
         self.buf = np.zeros(0, np.uint8)
-        self.buf_start = 0                    # global pos of buf[0]
-        self.t0 = 0                           # next tile start
+        self.buf_start = origin               # global pos of buf[0]
+        self.t0 = origin                      # next tile start
         self.tiles = 0
 
     def _buf_end(self) -> int:
@@ -127,20 +177,20 @@ class _TileScanner:
 
     def _scan(self, t1: int) -> None:
         k, w = self.k, self.w
-        lo = max(0, self.t0 - (w - 1))
+        lo = max(self.origin, self.t0 - (w - 1))
         hi = min(self._buf_end(), t1 + w + k - 2)
         window = self.buf[lo - self.buf_start: hi - self.buf_start]
         if len(window) >= w + k - 1:
             _, kmer, pos = np_minimizers(window, k, w)
             pos_g = pos.astype(np.int64) + lo
             keep = (pos_g >= self.t0) & (pos_g < t1)
-            packed = ((kmer[keep].astype(np.uint64) << np.uint64(32))
+            packed = ((kmer[keep].astype(np.uint64) << self.pos_bits)
                       | pos_g[keep].astype(np.uint64))
             self.emit(np.unique(packed))
         self.tiles += 1
         self.t0 = t1
         # drop bases the next tile's left halo no longer needs
-        keep_from = max(0, self.t0 - (w - 1))
+        keep_from = max(self.origin, self.t0 - (w - 1))
         if keep_from > self.buf_start:
             self.buf = self.buf[keep_from - self.buf_start:].copy()
             self.buf_start = keep_from
@@ -163,6 +213,7 @@ def build_sharded_index(fasta, out_dir: str, *, num_partitions: int = 4,
                         k: int = 12, w: int = 30, eth: int = 6,
                         max_pls_per_minimizer: int = 256,
                         spacer: int | None = None, overwrite: bool = False,
+                        origin: int = 0, format_version: int = 2,
                         progress=None):
     """Build a persistent sharded index directory from a FASTA, streamed.
 
@@ -170,9 +221,26 @@ def build_sharded_index(fasta, out_dir: str, *, num_partitions: int = 4,
     ``spacer`` defaults to ``read_len + 2*eth``, the same inter-contig
     gap ``launch.map_fastq`` uses, so on-disk and in-memory mappings
     agree byte for byte.
+
+    ``origin`` (format v2 only) places the reference at a virtual global
+    base offset: every recorded position and contig offset is
+    ``origin + actual``, and ``ref_len`` in the manifest is the global
+    end.  This is the seam for splitting one genome across several
+    builds — and how tests prove positions past 2^31 without a 3 Gb
+    fixture.  ``format_version=1`` writes a strict v1 index (int32
+    payloads, the 2^31 refusal, no origin) for compatibility checks.
     """
     validate_geometry(read_len=read_len, k=k, w=w, eth=eth)
     _validate_partitions(num_partitions)
+    if format_version not in (1, 2):
+        raise ValueError(f"format_version={format_version!r}: this builder "
+                         f"writes format v1 or v2")
+    if origin < 0:
+        raise ValueError(f"origin={origin} must be >= 0")
+    if origin and format_version == 1:
+        raise ValueError(
+            f"origin={origin}: format v1 has no origin field; build with "
+            f"format_version=2")
     if tile_bp < w + k - 1:
         raise ValueError(
             f"tile_bp={tile_bp}: a tile must cover at least one minimizer "
@@ -182,6 +250,11 @@ def build_sharded_index(fasta, out_dir: str, *, num_partitions: int = 4,
     if spacer < 0:
         raise ValueError(f"spacer={spacer} must be >= 0")
     P = int(num_partitions)
+    # spill keys pack (kmer, position) into one u64; k-mer codes take
+    # 2k+1 bits (sentinel base 4 carries past 2-bit packing), so k <= 16
+    # (geometry) guarantees at least 31 position bits
+    pos_bits = 64 - (2 * k + 1)
+    max_pos = (1 << pos_bits) - 1
     say = progress if progress is not None else (lambda _msg: None)
 
     os.makedirs(out_dir, exist_ok=True)
@@ -194,26 +267,28 @@ def build_sharded_index(fasta, out_dir: str, *, num_partitions: int = 4,
     t_start = time.perf_counter()
     spill_paths = [os.path.join(out_dir, f".spill{p:04d}.u64")
                    for p in range(P)]
-    spills = [open(sp, "wb") for sp in spill_paths]
+    spills = _SpillWriter(spill_paths)
     n_spilled = np.zeros(P, dtype=np.int64)
+    shift = np.uint64(pos_bits)
 
     def emit(packed_occ: np.ndarray) -> None:
         if not len(packed_occ):
             return
-        part = (np_hash32((packed_occ >> np.uint64(32)).astype(np.uint32))
+        part = (np_hash32((packed_occ >> shift).astype(np.uint32))
                 % np.uint32(P)).astype(np.int64)
         order = np.argsort(part, kind="stable")
         sorted_occ, sorted_part = packed_occ[order], part[order]
         counts = np.bincount(sorted_part, minlength=P)
         bounds = np.concatenate([[0], np.cumsum(counts)])
         for p in np.nonzero(counts)[0]:
-            spills[p].write(sorted_occ[bounds[p]: bounds[p + 1]].tobytes())
+            spills.append(p, sorted_occ[bounds[p]: bounds[p + 1]].tobytes())
         n_spilled[:] += counts   # in-place: n_spilled is closed over
 
     ref_codes_payload = os.path.join(out_dir, ".reference.2bit.payload")
     ref_sent_payload = os.path.join(out_dir, ".reference.sent.payload")
     writer = _PackedRefWriter(ref_codes_payload, ref_sent_payload)
-    scanner = _TileScanner(k=k, w=w, tile_bp=tile_bp, emit=emit)
+    scanner = _TileScanner(k=k, w=w, tile_bp=tile_bp, emit=emit,
+                           origin=origin)
 
     def feed(codes: np.ndarray) -> None:
         writer.write(codes)
@@ -232,7 +307,7 @@ def build_sharded_index(fasta, out_dir: str, *, num_partitions: int = 4,
             raise ValueError(f"FASTA contig {cur_name!r} has only non-ACGT "
                              f"(sentinel) bases")
         contigs.append(Contig(name=cur_name, length=cur_len,
-                              offset=writer.length - cur_len))
+                              offset=origin + writer.length - cur_len))
         say(f"contig {cur_name}: {cur_len} bp "
             f"(genome so far {writer.length} bp, {scanner.tiles} tiles)")
         cur_name, cur_len, cur_has_acgt = None, 0, False
@@ -250,24 +325,32 @@ def build_sharded_index(fasta, out_dir: str, *, num_partitions: int = 4,
             close_contig()
     if not contigs:
         raise ValueError("empty FASTA: no records (or none usable)")
-    ref_len = writer.length
-    if ref_len > _INT32_MAX:
+    ref_len = origin + writer.length     # global end position
+    if format_version == 1 and ref_len > _INT32_MAX:
         raise ValueError(
             f"reference is {ref_len} bases after spacer concatenation; "
             f"index format v1 stores int32 positions (max {_INT32_MAX}). "
-            f"Split the reference or wait for the int64 format revision.")
+            f"Build with format_version=2 (the default) for int64 "
+            f"positions.")
+    if ref_len - 1 > max_pos:
+        raise ValueError(
+            f"reference ends at global position {ref_len - 1} but the "
+            f"spill keys hold {pos_bits} position bits at k={k} (max "
+            f"{max_pos}); lower origin or use a smaller k — smaller "
+            f"k-mers leave more position bits")
     scanner.finish(ref_len)
     writer.close()
-    for f in spills:
-        f.close()
+    spills.close()
     _finalize_npy(ref_codes_payload,
                   os.path.join(out_dir, fmt.REFERENCE_FILES["packed"]),
-                  np.uint8, (fmt.packed_cols(ref_len),))
+                  np.uint8, (fmt.packed_cols(writer.length),))
     _finalize_npy(ref_sent_payload,
                   os.path.join(out_dir, fmt.REFERENCE_FILES["sentinel"]),
-                  np.uint8, (fmt.sentinel_cols(ref_len),))
+                  np.uint8, (fmt.sentinel_cols(writer.length),))
     say(f"scan done: {ref_len} bp, {scanner.tiles} tiles, "
-        f"{int(n_spilled.sum())} spilled occurrences")
+        f"{int(n_spilled.sum())} spilled occurrences "
+        f"({spills.spill_bytes} spill bytes in {spills.spill_writes} "
+        f"writes)")
     tr = _tracing.ACTIVE
     if tr is not None:
         tr.add("index_scan", t_scan, time.perf_counter(),
@@ -277,12 +360,15 @@ def build_sharded_index(fasta, out_dir: str, *, num_partitions: int = 4,
         reg.counter("repro_index_tiles_total").inc(int(scanner.tiles))
         reg.counter("repro_index_spilled_occurrences_total").inc(
             int(n_spilled.sum()))
+        reg.counter("repro_index_spill_bytes_total").inc(
+            int(spills.spill_bytes))
 
     # -- phase 2: finalize partitions from spills --------------------------
     man_ref = {role: fmt.file_digest(os.path.join(out_dir, fname))
                for role, fname in fmt.REFERENCE_FILES.items()}
     packed_ref = fmt.load_reference(
-        out_dir, {"ref_len": ref_len}, mmap=True)
+        out_dir, {"ref_len": ref_len, "origin": origin}, mmap=True)
+    pos_dtype = fmt.position_dtype(ref_len - 1)
     pad = read_len + eth - k
     seg_len = 2 * (read_len + eth) - k
     seg_batch = max(16, tile_bp // max(seg_len, 1))
@@ -295,8 +381,8 @@ def build_sharded_index(fasta, out_dir: str, *, num_partitions: int = 4,
         os.remove(spill_paths[p])
         u = np.unique(data)       # dedup (defensive) + (kmer, pos) sort
         del data
-        kmers = (u >> np.uint64(32)).astype(np.uint32)
-        pos = (u & np.uint64(0xFFFFFFFF)).astype(np.int64)
+        kmers = (u >> shift).astype(np.uint32)
+        pos = (u & np.uint64(max_pos)).astype(np.int64)
         del u
         # cap hyper-repetitive minimizers: keep the first
         # max_pls_per_minimizer occurrences by position (flat-build rule)
@@ -309,8 +395,7 @@ def build_sharded_index(fasta, out_dir: str, *, num_partitions: int = 4,
         dropped_pls += int((~keep).sum())
         kmers, pos = kmers[keep], pos[keep]
         uniq, counts = np.unique(kmers, return_counts=True)
-        offsets = np.zeros(len(uniq) + 1, dtype=np.int32)
-        offsets[1:] = np.cumsum(counts)
+        offsets = fmt.csr_offsets(counts)
         n_occ = len(pos)
         total_occ += n_occ
 
@@ -319,7 +404,7 @@ def build_sharded_index(fasta, out_dir: str, *, num_partitions: int = 4,
                 uniq.astype(np.uint32))
         np.save(os.path.join(out_dir, names["offsets"]), offsets)
         np.save(os.path.join(out_dir, names["positions"]),
-                pos.astype(np.int32))
+                pos.astype(pos_dtype))
         seg_shape = (n_occ, fmt.packed_cols(seg_len))
         sent_shape = (n_occ, fmt.sentinel_cols(seg_len))
         seg_path = os.path.join(out_dir, names["seg2bit"])
@@ -362,7 +447,8 @@ def build_sharded_index(fasta, out_dir: str, *, num_partitions: int = 4,
 
     wall_s = time.perf_counter() - t_start
     manifest = {
-        "format": fmt.FORMAT_VERSION,
+        "format": (fmt.FORMAT_VERSION_V1 if format_version == 1
+                   else fmt.FORMAT_VERSION_V2),
         "read_len": read_len, "k": k, "w": w, "eth": eth,
         "spacer": spacer,
         "max_pls_per_minimizer": max_pls_per_minimizer,
@@ -378,12 +464,18 @@ def build_sharded_index(fasta, out_dir: str, *, num_partitions: int = 4,
             "tiles": int(scanner.tiles),
             "n_occurrences": int(total_occ),
             "spilled_occurrences": int(n_spilled.sum()),
+            "spill_bytes": int(spills.spill_bytes),
+            "spill_writes": int(spills.spill_writes),
             "dropped_pls": int(dropped_pls),
             "wall_s": wall_s,
         },
     }
+    if format_version == 2:
+        manifest["origin"] = int(origin)
+        manifest["position_dtype"] = str(pos_dtype)
     fmt.write_manifest(out_dir, manifest)
     say(f"wrote {out_dir}: {P} partitions, {total_occ} occurrences, "
-        f"{wall_s:.2f}s ({ref_len / max(wall_s, 1e-9):.0f} bases/s)")
+        f"{spills.spill_bytes} spill bytes, "
+        f"{wall_s:.2f}s ({writer.length / max(wall_s, 1e-9):.0f} bases/s)")
     from .sharded import open_index
     return open_index(out_dir)

@@ -21,10 +21,16 @@ and the pages the run actually reads.  The manifest records crc32 + byte
 size per file; ``open_index`` checks sizes (cheap), ``verify_index``
 checks digests (full read).
 
-Positions are int32: format v1 tops out at 2^31-1 bases of
-spacer-concatenated reference (fits GRCh38 primary contigs, not the
-full 3.1 Gb analysis set — a documented limitation, lifted by a v2
-with int64 positions when needed).
+Format v2 (``repro-sharded-index/2``) stores positions and CSR offsets
+in the narrowest safe dtype: int32 while every position fits 2^31-1,
+int64 beyond that — so GRCh38-scale (3.1 Gb) references build and load.
+The ``.npy`` files are self-describing, the manifest records the chosen
+``position_dtype``, and v1 indexes (always int32) still load through
+the same readers.  v2 manifests additionally record ``origin``, a
+virtual base offset applied to the whole reference (positions are
+``origin + actual``) — the seam for sharding one genome across several
+index builds, and how CI proves >= 2^31 positions without a 3 Gb
+fixture.
 """
 from __future__ import annotations
 
@@ -37,8 +43,38 @@ import numpy as np
 
 from ..core.index import SENTINEL
 
-FORMAT_VERSION = "repro-sharded-index/1"
+FORMAT_VERSION_V1 = "repro-sharded-index/1"
+FORMAT_VERSION_V2 = "repro-sharded-index/2"
+FORMAT_VERSION = FORMAT_VERSION_V2          # what new builds write
+ACCEPTED_VERSIONS = (FORMAT_VERSION_V1, FORMAT_VERSION_V2)
 MANIFEST_NAME = "manifest.json"
+
+INT32_MAX = 2**31 - 1
+
+
+def position_dtype(max_position: int) -> np.dtype:
+    """Narrowest on-disk dtype holding positions up to ``max_position``.
+
+    int32 while the largest position fits (v1-compatible payloads),
+    int64 beyond — the v2 dtype-selection rule, applied uniformly to
+    positions and CSR offsets so small builds stay compact.
+    """
+    return np.dtype(np.int32 if max_position <= INT32_MAX else np.int64)
+
+
+def csr_offsets(counts: np.ndarray) -> np.ndarray:
+    """CSR offsets from per-key counts, overflow-safe.
+
+    The cumulative sum runs in int64 and is narrowed to int32 only when
+    the total fits — an int32 cumsum wraps silently past 2^31
+    occurrences-times-bytes, which is exactly the class of bug format
+    v2 audits out.
+    """
+    offsets = np.zeros(len(counts) + 1, dtype=np.int64)
+    np.cumsum(counts, dtype=np.int64, out=offsets[1:])
+    if offsets[-1] <= INT32_MAX:
+        return offsets.astype(np.int32)
+    return offsets
 
 
 class IndexFormatError(ValueError):
@@ -110,18 +146,25 @@ class PackedReference:
     virtual infinite padding ``build_index`` applies before slicing
     segments, so segment extraction from disk matches the in-memory
     path byte for byte.
+
+    ``origin`` (format v2) shifts the whole reference to a virtual base
+    offset: physical byte 0 holds global position ``origin``, and
+    ``length`` stays the *global* end (``origin + physical bases``), so
+    gathers below ``origin`` or at/after ``length`` read as SENTINEL.
     """
 
     def __init__(self, packed: np.ndarray, sent_bits: np.ndarray,
-                 length: int):
+                 length: int, origin: int = 0):
         self.packed = packed
         self.sent_bits = sent_bits
+        self.origin = int(origin)
         self.length = int(length)
 
     def gather(self, idx: np.ndarray) -> np.ndarray:
         idx = np.asarray(idx)
-        valid = (idx >= 0) & (idx < self.length)
-        ci = np.clip(idx, 0, max(self.length - 1, 0))
+        valid = (idx >= self.origin) & (idx < self.length)
+        ci = np.clip(idx - self.origin, 0,
+                     max(self.length - self.origin - 1, 0))
         b = np.asarray(self.packed[ci >> 2])
         b = (b >> ((ci & 3) * 2).astype(np.uint8)) & 3
         s = np.asarray(self.sent_bits[ci >> 3])
@@ -129,8 +172,11 @@ class PackedReference:
         ok = valid & (s == 0)
         return np.where(ok, b, np.uint8(SENTINEL)).astype(np.uint8)
 
-    def codes(self, start: int = 0, stop: int | None = None) -> np.ndarray:
-        """Contiguous unpacked slice [start, stop) of the reference."""
+    def codes(self, start: int | None = None,
+              stop: int | None = None) -> np.ndarray:
+        """Contiguous unpacked slice [start, stop) in global positions
+        (``start`` defaults to ``origin``)."""
+        start = self.origin if start is None else start
         stop = self.length if stop is None else min(stop, self.length)
         if stop <= start:
             return np.zeros(0, dtype=np.uint8)
@@ -191,15 +237,26 @@ def load_manifest(index_dir: str) -> dict:
             raise IndexFormatError(
                 f"{path} is not valid JSON: {e}") from e
     got = man.get("format")
-    if got != FORMAT_VERSION:
+    if got not in ACCEPTED_VERSIONS:
         raise IndexFormatError(
-            f"{path}: format {got!r} is not {FORMAT_VERSION!r}; "
+            f"{path}: format {got!r} is not one of {ACCEPTED_VERSIONS!r}; "
             f"rebuild the index with this version of repro")
     for key in ("read_len", "k", "w", "eth", "spacer", "num_partitions",
                 "ref_len", "seg_len", "contigs", "partitions", "reference",
                 "max_pls_per_minimizer"):
         if key not in man:
             raise IndexFormatError(f"{path}: manifest missing {key!r}")
+    # v1 manifests predate these keys; their values are fixed by v1
+    man.setdefault("origin", 0)
+    man.setdefault("position_dtype", "int32")
+    if man["position_dtype"] not in ("int32", "int64"):
+        raise IndexFormatError(
+            f"{path}: position_dtype {man['position_dtype']!r} is not "
+            f"'int32' or 'int64'")
+    if got == FORMAT_VERSION_V1 and man["origin"] != 0:
+        raise IndexFormatError(
+            f"{path}: format v1 indexes cannot carry a nonzero origin "
+            f"({man['origin']})")
     if len(man["partitions"]) != man["num_partitions"]:
         raise IndexFormatError(
             f"{path}: manifest lists {len(man['partitions'])} partitions "
@@ -257,8 +314,8 @@ def check_integrity(index_dir: str, man: dict, *, full: bool) -> None:
 class PartitionFiles:
     """Loaded (or memmapped) arrays of one partition."""
     kmers: np.ndarray      # (n_kmers,) uint32, sorted
-    offsets: np.ndarray    # (n_kmers+1,) int32 CSR
-    positions: np.ndarray  # (n_occ,) int32 global minimizer positions
+    offsets: np.ndarray    # (n_kmers+1,) int32/int64 CSR
+    positions: np.ndarray  # (n_occ,) int32/int64 global minimizer positions
     seg2bit: np.ndarray    # (n_occ, ceil(seg_len/4)) uint8
     segsent: np.ndarray    # (n_occ, ceil(seg_len/8)) uint8
 
@@ -278,4 +335,5 @@ def load_reference(index_dir: str, man: dict, *,
                    mmap: bool) -> PackedReference:
     packed = _load(os.path.join(index_dir, REFERENCE_FILES["packed"]), mmap)
     sent = _load(os.path.join(index_dir, REFERENCE_FILES["sentinel"]), mmap)
-    return PackedReference(packed, sent, man["ref_len"])
+    return PackedReference(packed, sent, man["ref_len"],
+                           origin=man.get("origin", 0))

@@ -24,16 +24,29 @@ in and out of it at chunk granularity:
 Everything downstream — linear/affine WF, filter, traceback — is the
 unmodified flat pipeline: ``_RoutedChunkPipeline`` only replaces where
 ``occ_idx`` rows come from and which device arrays they point into.
+
+With ``prefetch=True`` (``Mapper(..., prefetch=True)``) a single
+background worker stages the *next* chunk's host seeding and partition
+uploads while the current chunk computes — the same next-chunk-early
+discipline ``core.streaming`` applies to H2D/compute/D2H, moved down
+into the arena.  All residency state is guarded by one re-entrant lock,
+and routing + snapshot are atomic under it, so a prefetch can never
+relocate rows between a chunk's ``ensure`` and the snapshot it pairs
+its occurrence rows with; results are bit-identical to synchronous
+loading because every chunk still pairs rows with its own snapshot.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
 
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import streaming
 from ..obs import registry as _metrics
+from ..core.index import device_position_dtype
 from ..core.pipeline import MapperConfig, _ChunkPipeline
 from ..core.seeding import seed_reads_routed
 
@@ -46,8 +59,12 @@ class DeviceResidency:
     def __init__(self, index, memory_budget_bytes: int | None = None):
         self.index = index
         seg_len = index.seg_len
-        # one occurrence row = seg_len segment bytes + 4 position bytes
-        self.row_bytes = seg_len + 4
+        # positions dtype the device can actually hold for this reference
+        # (int32 under 2^31 bases, uint32 to 2^32-1, int64 under x64)
+        self.pos_dtype = device_position_dtype(
+            getattr(index, "ref_len", 0))
+        # one occurrence row = seg_len segment bytes + position bytes
+        self.row_bytes = seg_len + self.pos_dtype.itemsize
         rows = [p.n_occurrences for p in index.parts]
         total = sum(rows)
         biggest = max(rows, default=0)
@@ -66,13 +83,20 @@ class DeviceResidency:
         self.cap_rows = cap_rows
         self.budget_bytes = memory_budget_bytes
         self.segments_dev = jnp.zeros((cap_rows, seg_len), dtype=jnp.uint8)
-        self.positions_dev = jnp.zeros((cap_rows,), dtype=jnp.int32)
+        self.positions_dev = jnp.zeros((cap_rows,), dtype=self.pos_dtype)
         self._alloc: dict[int, tuple[int, int]] = {}   # p -> (lo, rows)
         self._lru: OrderedDict[int, None] = OrderedDict()
+        # one re-entrant lock over all residency state: the prefetch
+        # worker and the compute path may ensure() concurrently, and a
+        # partition must load exactly once with exactly one allocation
+        self._lock = threading.RLock()
+        self._prefetched: set[int] = set()
         self.loads = 0
         self.evictions = 0
         self.compactions = 0
         self.h2d_bytes = 0
+        self.prefetch_loads = 0
+        self.prefetch_hits = 0
 
     # ------------------------------------------------------------- queries
     @property
@@ -91,30 +115,60 @@ class DeviceResidency:
         return self.positions_dev, self.segments_dev
 
     # ----------------------------------------------------------- residency
-    def ensure(self, parts: list) -> dict:
-        """Make ``parts`` resident; returns ``{p: arena_base_row}``."""
-        pinned = set(parts)
-        hits = misses = 0
-        for p in parts:
-            if p in self._alloc:
-                self._lru.move_to_end(p)
-                hits += 1
-        for p in parts:
-            if p not in self._alloc:
-                misses += 1
-                self._load(p, pinned)
-        reg = _metrics.ACTIVE
-        if reg is not None:
-            if hits:
-                reg.counter("repro_partition_hits_total").inc(hits)
-            if misses:
-                reg.counter("repro_partition_misses_total").inc(misses)
-            reg.gauge("repro_partition_resident_rows").set(
-                self.resident_rows)
-        # Bases must come from the allocation table only after every
-        # load: a late ``_load`` may ``_compact`` and relocate
-        # partitions that were already resident when ensure() started.
-        return {p: self._alloc[p][0] for p in parts}
+    def ensure(self, parts: list, *, prefetch: bool = False) -> dict:
+        """Make ``parts`` resident; returns ``{p: arena_base_row}``.
+
+        ``prefetch=True`` marks this call as coming from the background
+        prefetch worker: its loads count as prefetch loads, and the
+        partitions it stages are credited as prefetch hits when a later
+        ensure finds them still resident.  Thread-safe: the whole
+        operation holds the residency lock, so two ensures racing on the
+        same partition load it exactly once with one allocation.
+        """
+        with self._lock:
+            pinned = set(parts)
+            hits = misses = pf_hits = 0
+            for p in parts:
+                if p in self._alloc:
+                    self._lru.move_to_end(p)
+                    hits += 1
+                    if p in self._prefetched:
+                        pf_hits += 1
+                        self._prefetched.discard(p)
+            for p in parts:
+                if p not in self._alloc:
+                    misses += 1
+                    self._load(p, pinned, prefetch=prefetch)
+            if prefetch:
+                self._prefetched.update(parts)
+            self.prefetch_hits += pf_hits
+            reg = _metrics.ACTIVE
+            if reg is not None:
+                if hits:
+                    reg.counter("repro_partition_hits_total").inc(hits)
+                if misses:
+                    reg.counter("repro_partition_misses_total").inc(misses)
+                if pf_hits:
+                    reg.counter(
+                        "repro_partition_prefetch_hits_total").inc(pf_hits)
+                reg.gauge("repro_partition_resident_rows").set(
+                    self.resident_rows)
+            # Bases must come from the allocation table only after every
+            # load: a late ``_load`` may ``_compact`` and relocate
+            # partitions that were already resident when ensure() started.
+            return {p: self._alloc[p][0] for p in parts}
+
+    def prefetch(self, parts: list) -> dict | None:
+        """Best-effort background staging of ``parts``.
+
+        Same as ``ensure(parts, prefetch=True)`` except a budget
+        overflow returns None instead of raising — the authoritative
+        ensure on the compute path reports the error with the chunk
+        that actually needs the partitions."""
+        try:
+            return self.ensure(parts, prefetch=True)
+        except ValueError:
+            return None
 
     def _free_extents(self):
         used = sorted(self._alloc.values())
@@ -133,18 +187,26 @@ class DeviceResidency:
                 return lo
         return None
 
-    def _evict_one(self, pinned: set) -> None:
+    def _evict_one(self, pinned: set, incoming_rows: int = 0) -> None:
         victim = next((q for q in self._lru if q not in pinned), None)
         if victim is None:
+            # Every unpinned resident has already been evicted: the rows
+            # still held all belong to partitions this chunk needs, so
+            # the report must count held + incoming, not pretend the
+            # whole arena were free.
+            held = self.resident_rows
             need = sum(self.index.parts[p].n_occurrences for p in pinned)
             raise ValueError(
                 f"one chunk touches partitions needing {need} occurrence "
-                f"rows but the arena holds {self.cap_rows}; raise "
-                f"memory_budget_bytes (>= {need * self.row_bytes} bytes) "
-                f"or shrink chunk_reads so fewer partitions are touched "
-                f"at once")
+                f"rows but the arena holds {self.cap_rows}: every "
+                f"unpinned resident is already evicted and {held} rows "
+                f"stay pinned by this chunk while {incoming_rows} more "
+                f"are loading; raise memory_budget_bytes (>= "
+                f"{need * self.row_bytes} bytes) or shrink chunk_reads "
+                f"so fewer partitions are touched at once")
         del self._alloc[victim]
         del self._lru[victim]
+        self._prefetched.discard(victim)
         self.evictions += 1
         reg = _metrics.ACTIVE
         if reg is not None:
@@ -170,7 +232,7 @@ class DeviceResidency:
                 self._alloc[p] = (cursor, rows)
             cursor += rows
 
-    def _load(self, p: int, pinned: set) -> int:
+    def _load(self, p: int, pinned: set, *, prefetch: bool = False) -> int:
         part = self.index.parts[p]
         rows = part.n_occurrences
         while True:
@@ -180,20 +242,24 @@ class DeviceResidency:
             if (self.cap_rows - self.resident_rows) >= rows:
                 self._compact()     # space exists but is fragmented
                 continue
-            self._evict_one(pinned)
+            self._evict_one(pinned, incoming_rows=rows)
         segs = part.read_segments()
         self.segments_dev = self.segments_dev.at[lo:lo + rows].set(
             jnp.asarray(segs))
         self.positions_dev = self.positions_dev.at[lo:lo + rows].set(
-            jnp.asarray(np.asarray(part.positions, dtype=np.int32)))
+            jnp.asarray(np.asarray(part.positions).astype(self.pos_dtype)))
         self._alloc[p] = (lo, rows)
         self._lru[p] = None
         self._lru.move_to_end(p)
         self.loads += 1
+        if prefetch:
+            self.prefetch_loads += 1
         self.h2d_bytes += rows * self.row_bytes
         reg = _metrics.ACTIVE
         if reg is not None:
             reg.counter("repro_partition_loads_total").inc()
+            if prefetch:
+                reg.counter("repro_partition_prefetch_loads_total").inc()
             reg.counter("repro_partition_h2d_bytes_total").inc(
                 rows * self.row_bytes)
         return lo
@@ -205,6 +271,8 @@ class DeviceResidency:
             "partition_evictions": self.evictions,
             "partition_compactions": self.compactions,
             "h2d_bytes": self.h2d_bytes,
+            "prefetch_loads": self.prefetch_loads,
+            "prefetch_hits": self.prefetch_hits,
             "resident_partitions": self.resident,
             "resident_rows": self.resident_rows,
             "arena_rows": self.cap_rows,
@@ -213,6 +281,7 @@ class DeviceResidency:
         if reset:
             self.loads = self.evictions = self.compactions = 0
             self.h2d_bytes = 0
+            self.prefetch_loads = self.prefetch_hits = 0
         return out
 
 
@@ -229,15 +298,26 @@ class ShardRouter:
         self._found = np.zeros(P, dtype=np.int64)
         self._chunks = 0
 
-    def seed(self, reads: np.ndarray):
+    def seed(self, reads: np.ndarray, *, prefetch: bool = False):
         """Route + seed one (padded, possibly strand-stacked) chunk.
-        Returns ``(numpy seeds, arena snapshot)``."""
-        seeds, routed, found = seed_reads_routed(
-            self.index, reads, self.cfg.seed_params, self.residency.ensure)
-        self._routed += routed
-        self._found += found
-        self._chunks += 1
-        return seeds, self.residency.snapshot()
+        Returns ``(numpy seeds, arena snapshot)``.
+
+        The whole route→ensure→snapshot sequence holds the residency
+        lock: a concurrent prefetch must never relocate arena rows
+        between this chunk's ``ensure`` and the snapshot its ``occ_idx``
+        rows are paired with.  The lock is re-entrant, so the nested
+        ``ensure`` is fine; contention is only ever with the single
+        prefetch worker."""
+        res = self.residency
+        with res._lock:
+            seeds, routed, found = seed_reads_routed(
+                self.index, reads, self.cfg.seed_params,
+                lambda parts: res.ensure(parts, prefetch=prefetch))
+            snap = res.snapshot()
+            self._routed += routed
+            self._found += found
+            self._chunks += 1
+        return seeds, snap
 
     def drain_stats(self) -> dict:
         """Per-partition accounting since the last drain (one run)."""
@@ -261,13 +341,43 @@ class _RoutedChunkPipeline(_ChunkPipeline):
     and uploads the finished static-shape seed tensors; phase2/fetch are
     inherited unchanged — ``chunk_index`` hands them the arena snapshot
     this chunk's ``occ_idx`` rows were routed against.
+
+    With ``prefetch=True`` a single background worker runs the host
+    prep (pad + revcomp + route + seed + partition uploads) for chunk
+    i+1 while chunk i's device work is in flight: ``begin_run`` stages
+    the first chunk, and each ``phase1`` submits the next item before
+    consuming its own future.  Chunks still pair occurrence rows with
+    the snapshot their own ``seed`` returned, so results are
+    bit-identical to synchronous loading.
     """
 
-    def __init__(self, router: ShardRouter, cfg: MapperConfig):
+    def __init__(self, router: ShardRouter, cfg: MapperConfig,
+                 prefetch: bool = False):
         super().__init__(None, cfg)
         self.router = router
+        self.prefetch = prefetch
+        self._ex = None
+        self._pf_items: list = []
+        self._pf_futs: list = []
+        self._pf_i = 0
 
-    def phase1(self, item, times=None):
+    def begin_run(self, items) -> None:
+        """Stage the first chunk's host prep on the prefetch worker."""
+        if not (self.prefetch and self.cfg.stream and items):
+            return
+        if self._ex is None:
+            self._ex = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="arena-prefetch")
+        self._pf_items = list(items)
+        self._pf_futs = [None] * len(self._pf_items)
+        self._pf_i = 0
+        self._pf_futs[0] = self._ex.submit(
+            self._prep, self._pf_items[0], prefetch=True)
+
+    def _prep(self, item, *, prefetch: bool, times=None):
+        """Host-side chunk prep: pad, strand-stack, route + seed (which
+        uploads any missing partitions).  Runs on the prefetch worker or
+        inline on the main thread — the residency lock serializes them."""
         sub, chunk = item
         n_real = len(sub)
         t0 = time.perf_counter()
@@ -278,8 +388,30 @@ class _RoutedChunkPipeline(_ChunkPipeline):
             from ..core.encoding import revcomp
             sub = np.concatenate([sub, np.asarray(revcomp(sub))])
         t0 = streaming.timed(times, "host_prep", t0)
-        seeds_np, (positions_dev, segments_dev) = self.router.seed(sub)
-        t0 = streaming.timed(times, "seed", t0)
+        seeds_np, snap = self.router.seed(sub, prefetch=prefetch)
+        streaming.timed(times, "seed", t0)
+        return sub, seeds_np, snap, n_real
+
+    def phase1(self, item, times=None):
+        staged = (times is None and self._pf_futs
+                  and self._pf_i < len(self._pf_items)
+                  and self._pf_items[self._pf_i] is item)
+        if staged:
+            i = self._pf_i
+            self._pf_i += 1
+            # submit the *next* item before blocking on this one: the
+            # single worker runs them in order, so i is already done or
+            # running and i+1 queues behind it
+            if i + 1 < len(self._pf_items):
+                self._pf_futs[i + 1] = self._ex.submit(
+                    self._prep, self._pf_items[i + 1], prefetch=True)
+            sub, seeds_np, snap, n_real = self._pf_futs[i].result()
+            self._pf_futs[i] = None
+        else:
+            sub, seeds_np, snap, n_real = self._prep(
+                item, prefetch=False, times=times)
+        positions_dev, segments_dev = snap
+        t0 = time.perf_counter()
         reads = jnp.asarray(sub)
         seeds = {
             "mini_pos": jnp.asarray(seeds_np["mini_pos"]),

@@ -38,8 +38,8 @@ from .npscan import np_hash32
 class Partition:
     """One partition's CSR + segments (arrays may be memmaps)."""
     kmers: np.ndarray       # (n_kmers,) uint32, sorted
-    offsets: np.ndarray     # (n_kmers+1,) int32
-    positions: np.ndarray   # (n_occ,) int32
+    offsets: np.ndarray     # (n_kmers+1,) int32/int64 CSR
+    positions: np.ndarray   # (n_occ,) int32/int64
     seg_len: int
     segments_raw: np.ndarray | None = None    # (n_occ, seg_len) uint8
     seg2bit: np.ndarray | None = None         # packed on-disk form
@@ -136,11 +136,12 @@ class ShardedGenomeIndex:
         union-over-partitions property tests compare this against the
         flat ``GenomeIndex`` CSR)."""
         part = self.parts[int(self.route(np.array([kmer]))[0])]
+        empty = np.zeros(0, dtype=np.asarray(part.positions).dtype)
         if part.n_kmers == 0:
-            return np.zeros(0, dtype=np.int32)
+            return empty
         i = int(np.searchsorted(part.kmers, np.uint32(kmer)))
         if i >= part.n_kmers or part.kmers[i] != np.uint32(kmer):
-            return np.zeros(0, dtype=np.int32)
+            return empty
         return np.asarray(part.positions[part.offsets[i]:
                                          part.offsets[i + 1]])
 
@@ -159,6 +160,13 @@ class ShardedGenomeIndex:
                 "this ShardedGenomeIndex carries no packed reference "
                 "(in-memory shard_flat_index without ref=); open an "
                 "on-disk index or pass ref= when sharding")
+        if self.packed_ref.origin:
+            raise ValueError(
+                f"this index sits at virtual origin "
+                f"{self.packed_ref.origin}: materializing the flat "
+                f"reference (paired mate rescue) is not supported on "
+                f"origin-shifted indexes — map unpaired, or build the "
+                f"index with origin=0")
         return self.packed_ref.codes()
 
     # -------------------------------------------------------- conversions
@@ -191,11 +199,13 @@ class ShardedGenomeIndex:
                      else np.zeros(0, np.int32))
         segments = (np.concatenate(seg_parts) if seg_parts
                     else np.zeros((0, self.seg_len), np.uint8))
-        offsets = np.zeros(len(all_k) + 1, dtype=np.int32)
-        offsets[1:] = np.cumsum(counts[order])
+        # int64-accumulated CSR, narrowed only when safe: an int32 cumsum
+        # here wraps silently past 2^31 total occurrences
+        offsets = fmt.csr_offsets(counts[order])
+        pos_dtype = fmt.position_dtype(max(self.ref_len - 1, 0))
         return GenomeIndex(uniq_kmers=all_k[order].astype(np.uint32),
                            offsets=offsets,
-                           positions=positions.astype(np.int32),
+                           positions=positions.astype(pos_dtype),
                            segments=segments.astype(np.uint8),
                            read_len=self.read_len, k=self.k, w=self.w,
                            eth=self.eth)
@@ -203,9 +213,15 @@ class ShardedGenomeIndex:
     def to_mesh_shards(self) -> ShardedIndex:
         """Stack partitions into the mesh's padded per-shard layout —
         partition *i* goes to shard *i*, nothing is re-hashed."""
+        if self.ref_len - 1 > fmt.INT32_MAX:
+            raise ValueError(
+                f"mesh shards hold int32 positions but this index ends at "
+                f"global position {self.ref_len - 1} (> {fmt.INT32_MAX}); "
+                f"map references past 2^31 bases on topology='single', "
+                f"which routes through the int64-clean device arena")
         return ShardedIndex.from_partitions(
-            [(np.asarray(p.kmers), np.asarray(p.offsets),
-              np.asarray(p.positions), p.read_segments())
+            [(np.asarray(p.kmers), np.asarray(p.offsets).astype(np.int32),
+              np.asarray(p.positions).astype(np.int32), p.read_segments())
              for p in self.parts],
             read_len=self.read_len, k=self.k, w=self.w, eth=self.eth,
             seg_len=self.seg_len)
@@ -220,8 +236,9 @@ class ShardedGenomeIndex:
             per_part.append(d)
         hash_table = sum(d["hash_table_bytes"] for d in per_part)
         seg = sum(d["segments_bytes"] for d in per_part)
-        ref = (fmt.packed_cols(self.ref_len)
-               + fmt.sentinel_cols(self.ref_len))
+        origin = self.packed_ref.origin if self.packed_ref else 0
+        phys = self.ref_len - origin  # ref_len is the global end (v2)
+        ref = fmt.packed_cols(phys) + fmt.sentinel_cols(phys)
         return {
             "hash_table_bytes": int(hash_table),
             "materialized_segments_bytes": int(seg),
@@ -253,14 +270,15 @@ def shard_flat_index(index: GenomeIndex, num_partitions: int, *,
         sel = np.where(h == p)[0]
         kmers = index.uniq_kmers[sel]
         pc = counts[sel]
-        offsets = np.zeros(len(sel) + 1, dtype=np.int32)
-        offsets[1:] = np.cumsum(pc)
+        # int64 cumsum, narrowed when safe (satellite of the v2 audit:
+        # the old int32 cumsum wrapped before the int64 repeat below)
+        offsets = fmt.csr_offsets(pc)
         idx = (np.repeat(index.offsets[sel].astype(np.int64), pc)
                + (np.arange(int(pc.sum()), dtype=np.int64)
                   - np.repeat(offsets[:-1].astype(np.int64), pc)))
         parts.append(Partition(
             kmers=kmers.astype(np.uint32), offsets=offsets,
-            positions=index.positions[idx].astype(np.int32),
+            positions=np.asarray(index.positions)[idx],
             seg_len=index.seg_len,
             segments_raw=index.segments[idx]))
     if contigs is None:
@@ -323,6 +341,11 @@ def open_index(index_dir: str, *, mmap: bool = True,
                 f"with the manifest (kmers {len(pf.kmers)}/{pm['n_kmers']}, "
                 f"positions {len(pf.positions)}/{pm['n_occurrences']}); "
                 f"rebuild the index")
+        if str(pf.positions.dtype) != man["position_dtype"]:
+            raise fmt.IndexIntegrityError(
+                f"{index_dir}: partition {pm['id']} positions are "
+                f"{pf.positions.dtype} but the manifest says "
+                f"{man['position_dtype']}; rebuild the index")
         parts.append(Partition(kmers=pf.kmers, offsets=pf.offsets,
                                positions=pf.positions, seg_len=seg_len,
                                seg2bit=pf.seg2bit, segsent=pf.segsent))

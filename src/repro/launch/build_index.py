@@ -46,21 +46,24 @@ def run(args) -> int:
             args.reference, args.output, num_partitions=args.partitions,
             tile_bp=args.tile_bp, read_len=args.read_len, k=args.k,
             w=args.w, eth=args.eth, max_pls_per_minimizer=args.max_pls,
-            overwrite=args.force, progress=say)
+            overwrite=args.force, origin=args.origin, progress=say)
         if args.verify:
             verify_index(args.output)
             say("full integrity check passed")
         stor = idx.storage_bytes()
+        bstats = (idx.manifest or {}).get("build", {})
         dt = time.perf_counter() - t0
         logjson.say(
             f"build_index: {args.output}: {idx.num_partitions} "
             f"partitions, {len(idx.contigs)} contig(s), {idx.ref_len} "
             f"bases, {idx.n_occurrences} occurrences, "
             f"{stor['total_bytes']} B on disk ({stor['blowup']:.1f}x "
-            f"segment blowup) in {dt:.1f}s",
+            f"segment blowup), {bstats.get('spill_bytes', 0)} spill B "
+            f"in {dt:.1f}s",
             event="done", partitions=idx.num_partitions,
             ref_len=idx.ref_len, occurrences=idx.n_occurrences,
-            bytes_on_disk=stor["total_bytes"], wall_s=round(dt, 3))
+            bytes_on_disk=stor["total_bytes"],
+            spill_bytes=bstats.get("spill_bytes", 0), wall_s=round(dt, 3))
         return 0
     finally:
         if metrics_out is not None and _metrics.ACTIVE is not None:
@@ -97,6 +100,11 @@ def main():
     ap.add_argument("--eth", type=int, default=6)
     ap.add_argument("--max-pls", type=int, default=256,
                     help="occurrence cap per hyper-repetitive minimizer")
+    ap.add_argument("--origin", type=int, default=0,
+                    help="global position of the reference's first base "
+                         "(format v2): occurrence positions are recorded "
+                         "at origin + offset, so multi-host builds can "
+                         "split one coordinate space")
     ap.add_argument("--force", action="store_true",
                     help="rebuild over an existing index directory")
     ap.add_argument("--verify", action="store_true",

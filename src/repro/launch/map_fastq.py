@@ -212,9 +212,14 @@ def _run(args) -> int:
         profile=getattr(args, "trace_out", None) is not None)
     budget = (int(args.index_budget_mb * (1 << 20))
               if args.index_budget_mb is not None else None)
+    if args.prefetch and (sharded is None or args.topology != "single"):
+        raise SystemExit(
+            "map_fastq: --prefetch needs --index-dir with --topology "
+            "single — only the shard-routed arena path has per-chunk "
+            "partition uploads to overlap")
     mapper = Mapper(idx, cfg, topology=args.topology, n_shards=args.shards,
                     injector=injector, watchdog_s=args.watchdog,
-                    memory_budget_bytes=budget)
+                    memory_budget_bytes=budget, prefetch=args.prefetch)
     # fault containment (retry/bisect/degrade) is armed alongside the
     # injector or a permissive run; a plain strict run keeps today's
     # fail-fast behaviour with zero wrapping
@@ -421,6 +426,11 @@ def main():
                     help="--index-dir + single topology: device budget "
                          "for the partition arena; partitions load "
                          "lazily and LRU-evict under this bound")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="--index-dir + single topology: stage the next "
+                         "chunk's partition uploads on a background "
+                         "worker while the current chunk computes "
+                         "(bit-identical results)")
     ap.add_argument("--r1", default=None,
                     help="paired-end R1 FASTQ (.gz ok); requires --r2")
     ap.add_argument("--r2", default=None,

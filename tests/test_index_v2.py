@@ -1,0 +1,393 @@
+"""Index format v2: int64-clean builds, v1 compat, prefetch residency.
+
+The contracts under test:
+
+* dtype selection — CSR offsets and occurrence positions are computed
+  in int64 and narrowed to int32 exactly when they fit, on disk and at
+  every reload;
+* v1 <-> v2 round trip — a v1 build and a v2 build of the same FASTA
+  reload from disk and map to byte-identical SAM (property-based over
+  references, on both topologies);
+* GRCh38-scale positions — an origin-shifted build whose occurrence
+  positions straddle 2^31 builds, reloads, and maps to validated SAM
+  with correct global coordinates, without a 3 Gb fixture;
+* prefetch — background partition staging is bit-identical to
+  synchronous loading (streamed, sync, budget-evicting), and a prefetch
+  racing ``ensure()`` on the same partition loads it exactly once with
+  exactly one allocation.
+"""
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+import threading
+import types
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.index import build_index, device_position_dtype
+from repro.core.mapper import Mapper
+from repro.core.pipeline import MapperConfig
+from repro.data.genome import make_reference, sample_reads, write_fasta
+from repro.index import build_sharded_index, open_index, shard_flat_index
+from repro.index import format as fmt
+from repro.index.residency import DeviceResidency
+from repro.index.sharded import Partition
+from repro.io.sam import emit_alignments, sam_header, validate_sam
+
+READ_LEN, K, W, ETH = 60, 10, 12, 4
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+_RESULT_FIELDS = ("position", "distance", "distance2", "mapped", "strand",
+                  "ops", "op_count", "linear_dist", "n_candidates")
+
+
+# ------------------------------------------------------------ dtype rules
+
+def test_csr_offsets_narrow_when_safe():
+    small = fmt.csr_offsets(np.array([3, 0, 5], dtype=np.int64))
+    assert small.dtype == np.int32
+    assert small.tolist() == [0, 3, 3, 8]
+    # totals past int32 stay int64 — the overflow satellite: cumsum in
+    # int64 first, never a wrapped int32 intermediate
+    big = fmt.csr_offsets(np.array([2**30, 2**30, 2**30], dtype=np.int64))
+    assert big.dtype == np.int64
+    assert big[-1] == 3 * 2**30
+    edge = fmt.csr_offsets(np.array([fmt.INT32_MAX], dtype=np.int64))
+    assert edge.dtype == np.int32
+
+
+def test_position_dtype_rule():
+    assert fmt.position_dtype(0) == np.int32
+    assert fmt.position_dtype(fmt.INT32_MAX) == np.int32
+    assert fmt.position_dtype(fmt.INT32_MAX + 1) == np.int64
+
+
+def test_device_position_dtype_rule():
+    assert device_position_dtype(1000) == np.int32
+    # int32 max itself is the winner-reduce sentinel: a reference whose
+    # last position equals it must step up a dtype
+    assert device_position_dtype(2**31) != np.int32
+    import jax
+    if not jax.config.read("jax_enable_x64"):
+        assert device_position_dtype(2**31 + 10) == np.uint32
+        with pytest.raises(ValueError, match="JAX_ENABLE_X64"):
+            device_position_dtype(2**32 + 10)
+
+
+# ------------------------------------------------- v1 <-> v2 round trip
+
+def _map_to_sam(idx, contigs, refmap, rs) -> str:
+    cfg = MapperConfig.from_index(idx, chunk_reads=16, both_strands=True)
+    res = Mapper(idx, cfg).map(rs.reads)
+    names = [f"r{i}" for i in range(len(rs.reads))]
+    lines = sam_header(contigs) + list(
+        emit_alignments(res, names, rs.reads, rs.quals, refmap))
+    return "\n".join(lines) + "\n"
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_v1_v2_roundtrip_sam_identical(seed):
+    # tempfile, not a pytest fixture: the hypothesis runner calls the
+    # test body once per drawn example with no fixture injection
+    root = tempfile.mkdtemp(prefix="v1v2_")
+    try:
+        d = Path(root)
+        rng = np.random.default_rng(seed)
+        ref = make_reference(int(rng.integers(3000, 6000)), seed=seed,
+                             repeat_frac=0.05)
+        write_fasta(d / "ref.fa", [("chr1", ref)])
+        i2 = build_sharded_index(d / "ref.fa", d / "v2", num_partitions=4,
+                                 tile_bp=777, read_len=READ_LEN, k=K, w=W,
+                                 eth=ETH)
+        i1 = build_sharded_index(d / "ref.fa", d / "v1", num_partitions=4,
+                                 tile_bp=777, read_len=READ_LEN, k=K, w=W,
+                                 eth=ETH, format_version=1)
+        m2 = json.load(open(d / "v2" / "manifest.json"))
+        m1 = json.load(open(d / "v1" / "manifest.json"))
+        assert m2["format"] == fmt.FORMAT_VERSION_V2
+        assert m1["format"] == fmt.FORMAT_VERSION_V1
+        assert "position_dtype" in m2 and "origin" in m2
+        assert "position_dtype" not in m1 and "origin" not in m1
+        # small builds choose compact dtypes automatically in both formats
+        for idx in (i1, i2):
+            for p in idx.parts:
+                assert np.asarray(p.positions).dtype == np.int32
+                assert np.asarray(p.offsets).dtype == np.int32
+        # mmap reload -> byte-identical SAM
+        r1, r2 = open_index(d / "v1"), open_index(d / "v2")
+        rs = sample_reads(ref, 24, read_len=READ_LEN, seed=seed % 1000,
+                          both_strands=True)
+        sam1 = _map_to_sam(r1, r1.contigs, r1.reference_map(), rs)
+        sam2 = _map_to_sam(r2, r2.contigs, r2.reference_map(), rs)
+        assert sam1 == sam2
+        validate_sam(sam1, expect_reads=len(rs.reads))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+MESH_V1V2_SCRIPT = r"""
+import sys
+import numpy as np
+from repro.core.mapper import Mapper
+from repro.core.pipeline import MapperConfig
+from repro.data.genome import sample_reads
+from repro.index import open_index
+from repro.io.fasta import load_reference
+
+v1_dir, v2_dir, fa = sys.argv[1], sys.argv[2], sys.argv[3]
+i1, i2 = open_index(v1_dir), open_index(v2_dir)
+ref, _ = load_reference(fa, spacer=60 + 2 * 4)
+rs = sample_reads(ref, 24, read_len=60, seed=3)
+out = []
+for idx in (i1, i2):
+    cfg = MapperConfig.from_index(idx)
+    res = Mapper(idx, cfg, topology="mesh").map(rs.reads)
+    out.append((res.position, res.distance, res.mapped))
+for a, b in zip(out[0], out[1]):
+    assert np.array_equal(a, b)
+print("MESH-V1V2-OK")
+"""
+
+
+def test_v1_v2_mesh_identical(tmp_path):
+    ref = make_reference(8000, seed=11, repeat_frac=0.02)
+    write_fasta(tmp_path / "ref.fa", [("chr1", ref)])
+    for ver, name in ((1, "v1"), (2, "v2")):
+        build_sharded_index(tmp_path / "ref.fa", tmp_path / name,
+                            num_partitions=4, tile_bp=2048,
+                            read_len=READ_LEN, k=K, w=W, eth=ETH,
+                            format_version=ver)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    proc = subprocess.run(
+        [sys.executable, "-c", MESH_V1V2_SCRIPT, str(tmp_path / "v1"),
+         str(tmp_path / "v2"), str(tmp_path / "ref.fa")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert "MESH-V1V2-OK" in proc.stdout
+
+
+# ------------------------------------- positions straddling 2^31 (tentpole)
+
+ORIGIN = 2**31 - 1500   # occurrence positions straddle the int32 boundary
+
+
+@pytest.fixture(scope="module")
+def big_origin_index(tmp_path_factory):
+    d = tmp_path_factory.mktemp("origin_idx")
+    ref = make_reference(6000, seed=13, repeat_frac=0.02)
+    write_fasta(d / "ref.fa", [("chrBig", ref)])
+    build_sharded_index(d / "ref.fa", d / "idx", num_partitions=4,
+                        tile_bp=1024, read_len=READ_LEN, k=K, w=W, eth=ETH,
+                        origin=ORIGIN)
+    return d, ref, open_index(d / "idx")
+
+
+def test_origin_build_forces_int64(big_origin_index):
+    d, ref, idx = big_origin_index
+    man = json.load(open(d / "idx" / "manifest.json"))
+    assert man["position_dtype"] == "int64"
+    assert man["origin"] == ORIGIN
+    assert man["ref_len"] == ORIGIN + len(ref)
+    allpos = np.concatenate([np.asarray(p.positions) for p in idx.parts])
+    assert allpos.dtype == np.int64
+    assert allpos.min() < 2**31 <= allpos.max()
+    # positions are origin + local: the same build at origin 0 must give
+    # the exact same occurrence set, shifted
+    build_sharded_index(d / "ref.fa", d / "idx0", num_partitions=4,
+                        tile_bp=1024, read_len=READ_LEN, k=K, w=W, eth=ETH)
+    idx0 = open_index(d / "idx0")
+    for pa, pb in zip(idx.parts, idx0.parts):
+        assert np.array_equal(np.asarray(pa.kmers), np.asarray(pb.kmers))
+        assert np.array_equal(
+            np.asarray(pa.positions),
+            np.asarray(pb.positions).astype(np.int64) + ORIGIN)
+        assert np.array_equal(pa.read_segments(), pb.read_segments())
+
+
+def test_origin_index_maps_to_validated_sam(big_origin_index):
+    d, ref, idx = big_origin_index
+    rs = sample_reads(ref, 32, read_len=READ_LEN, seed=5,
+                      both_strands=True)
+    cfg = MapperConfig.from_index(idx, chunk_reads=16, both_strands=True)
+    res = Mapper(idx, cfg).map(rs.reads)
+    assert res.position.dtype == np.int64
+    mapped = res.mapped
+    assert mapped.mean() > 0.9
+    assert (res.position[mapped] > 2**30).any()  # genuinely big coords
+    want = ORIGIN + rs.true_pos.astype(np.int64)
+    assert (np.abs(res.position[mapped] - want[mapped]) <= ETH).all()
+    assert (res.position[~mapped] == -1).all()
+    names = [f"r{i}" for i in range(len(rs.reads))]
+    sam = "\n".join(sam_header(idx.contigs) + list(emit_alignments(
+        res, names, rs.reads, rs.quals, idx.reference_map()))) + "\n"
+    validate_sam(sam, expect_reads=len(rs.reads))
+
+
+def test_origin_index_mesh_guard(big_origin_index):
+    _, _, idx = big_origin_index
+    with pytest.raises(ValueError, match="mesh shards hold int32"):
+        idx.to_mesh_shards()
+
+
+def test_v1_rejects_origin_and_load_rejects_v1_origin(tmp_path):
+    ref = make_reference(2000, seed=3)
+    write_fasta(tmp_path / "ref.fa", [("c", ref)])
+    with pytest.raises(ValueError, match="format_version"):
+        build_sharded_index(tmp_path / "ref.fa", tmp_path / "bad",
+                            num_partitions=2, read_len=READ_LEN, k=K,
+                            w=W, eth=ETH, origin=100, format_version=1)
+    build_sharded_index(tmp_path / "ref.fa", tmp_path / "v1",
+                        num_partitions=2, read_len=READ_LEN, k=K, w=W,
+                        eth=ETH, format_version=1)
+    man_path = tmp_path / "v1" / "manifest.json"
+    man = json.load(open(man_path))
+    man["origin"] = 100
+    man_path.write_text(json.dumps(man))
+    with pytest.raises(fmt.IndexFormatError, match="nonzero origin"):
+        open_index(tmp_path / "v1")
+
+
+# ------------------------------------------------------------- prefetch
+
+@pytest.fixture(scope="module")
+def routed_world():
+    ref = make_reference(20_000, seed=21, repeat_frac=0.02)
+    flat = build_index(ref, read_len=READ_LEN, k=K, w=W, eth=ETH)
+    sidx = shard_flat_index(flat, 4)
+    rs = sample_reads(ref, 48, read_len=READ_LEN, seed=5,
+                      both_strands=True)
+    return flat, sidx, rs
+
+
+def _assert_same_results(a, b):
+    for f in _RESULT_FIELDS:
+        va, vb = getattr(a, f), getattr(b, f)
+        assert (va is None) == (vb is None), f
+        if va is not None:
+            assert np.array_equal(va, vb), f
+
+
+def test_prefetch_bit_identical(routed_world):
+    flat, sidx, rs = routed_world
+    cfg = MapperConfig.from_index(flat, chunk_reads=16, both_strands=True)
+    base = Mapper(sidx, cfg).map(rs.reads)
+    pre = Mapper(sidx, cfg, prefetch=True)
+    res = pre.map(rs.reads)
+    _assert_same_results(base, res)
+    part = res.stats["partitions"]
+    assert part["prefetch_loads"] + part["prefetch_hits"] > 0
+    # sync engine path: begin_run is a no-op, results still identical
+    cfg_sync = MapperConfig.from_index(flat, chunk_reads=16,
+                                       both_strands=True, stream=False)
+    _assert_same_results(base,
+                         Mapper(sidx, cfg_sync, prefetch=True).map(rs.reads))
+
+
+def test_prefetch_under_budget_bit_identical(routed_world):
+    # every chunk touches all four partitions, so the tightest budget a
+    # run can complete under is the full pinned set — the budgeted-arena
+    # prefetch path (alloc/gap search under the lock) with zero slack
+    flat, sidx, rs = routed_world
+    cfg = MapperConfig.from_index(flat, chunk_reads=16, both_strands=True)
+    base = Mapper(sidx, cfg).map(rs.reads)
+    total = sum(p.n_occurrences for p in sidx.parts) * (sidx.seg_len + 4)
+    res = Mapper(sidx, cfg, memory_budget_bytes=total,
+                 prefetch=True).map(rs.reads)
+    _assert_same_results(base, res)
+
+
+def test_prefetch_requires_routed_single(routed_world):
+    flat, sidx, _ = routed_world
+    with pytest.raises(ValueError, match="prefetch=True only"):
+        Mapper(flat, MapperConfig.from_index(flat), prefetch=True)
+
+
+def _synthetic_parts(sizes, seg_len):
+    rng = np.random.default_rng(7)
+    return [Partition(
+        kmers=np.arange(n, dtype=np.uint32),
+        offsets=np.arange(n + 1, dtype=np.int32),
+        positions=(1000 * (i + 1) + np.arange(n)).astype(np.int32),
+        seg_len=seg_len,
+        segments_raw=rng.integers(0, 4, (n, seg_len), dtype=np.uint8))
+        for i, n in enumerate(sizes)]
+
+
+def test_prefetch_racing_ensure_loads_exactly_once():
+    seg_len = 8
+    parts = _synthetic_parts([10, 10, 10, 10], seg_len)
+    idx = types.SimpleNamespace(parts=parts, seg_len=seg_len)
+    res = DeviceResidency(idx)
+    barrier = threading.Barrier(8)
+
+    def hammer(i):
+        barrier.wait()
+        p = i % 4
+        if i % 2:
+            return res.prefetch([p])
+        return res.ensure([p])
+
+    with ThreadPoolExecutor(max_workers=8) as ex:
+        outs = list(ex.map(hammer, range(8)))
+    # exactly one load + one allocation per partition, no double-alloc
+    assert res.loads == 4
+    allocs = sorted(res._alloc.values())
+    assert len(res._alloc) == 4
+    for (lo_a, n_a), (lo_b, _) in zip(allocs, allocs[1:]):
+        assert lo_a + n_a <= lo_b  # extents never overlap
+    # every caller saw the same authoritative base per partition
+    for out in outs:
+        for p, base in out.items():
+            assert res._alloc[p][0] == base
+            nr = parts[p].n_occurrences
+            assert np.array_equal(
+                np.asarray(res.positions_dev[base:base + nr]),
+                np.asarray(parts[p].positions))
+
+
+def test_evict_error_accounts_for_freed_unpinned_rows():
+    seg_len = 8
+    parts = _synthetic_parts([60, 30], seg_len)
+    idx = types.SimpleNamespace(parts=parts, seg_len=seg_len)
+    res = DeviceResidency(idx, 70 * (seg_len + 4))
+    with pytest.raises(ValueError) as ei:
+        res.ensure([0, 1])
+    msg = str(ei.value)
+    assert "memory_budget_bytes" in msg
+    assert "unpinned resident is already evicted" in msg
+    assert "90 occurrence" in msg          # total pinned need
+    assert "60 rows" in msg                # rows still held by the chunk
+
+
+def test_prefetch_stats_reset_and_metrics(routed_world):
+    flat, sidx, rs = routed_world
+    from repro.obs import registry as _metrics
+    cfg = MapperConfig.from_index(flat, chunk_reads=16)
+    reg = _metrics.enable_metrics()
+    try:
+        m = Mapper(sidx, cfg, prefetch=True)
+        res = m.map(rs.reads)
+        part = res.stats["partitions"]
+        loads = part["prefetch_loads"]
+        assert loads > 0
+        assert reg.counter(
+            "repro_partition_prefetch_loads_total").value == loads
+        # drain_stats reset the counters for the next run
+        assert m.router.residency.prefetch_loads == 0
+        res2 = m.map(rs.reads)
+        part2 = res2.stats["partitions"]
+        assert part2["partition_loads"] == 0      # all resident
+        assert part2["prefetch_hits"] > 0         # staged parts were hit
+    finally:
+        _metrics.disable_metrics()
